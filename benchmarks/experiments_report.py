@@ -1,0 +1,103 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the result
+cache. Run after a dry-run sweep:
+
+    PYTHONPATH=src python -m benchmarks.experiments_report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_t(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def load(mesh_tag):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh_tag}.json")):
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return recs
+
+
+def dryrun_table(mesh_tag):
+    rows = ["| arch | shape | status | compile | args/dev | temp/dev | "
+            "fits 16G | collectives (AR/AG/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh_tag):
+        if r["status"] != "OK":
+            reason = r.get("reason", r.get("error", ""))[:46]
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                        f"({reason}) | | | | | |")
+            continue
+        pd = r["per_device"]
+        cc = pd["collective_counts"]
+        cstr = "/".join(str(int(cc[k])) for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | OK | {r['compile_s']:.0f}s "
+            f"| {fmt_bytes(pd['argument_bytes'])} "
+            f"| {fmt_bytes(pd['temp_bytes'])} "
+            f"| {'Y' if r['hbm_fits_16g'] else 'N'} | {cstr} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh_tag):
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "bound/step | MODEL_FLOPS/HLO | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh_tag):
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | | "
+                        f"{r['reason'][:60]} |")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf, mdl = r["roofline"], r["model"]
+        note = ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(rf['compute_s'])} "
+            f"| {fmt_t(rf['memory_s'])} | {fmt_t(rf['collective_s'])} "
+            f"| **{rf['dominant']}** | {fmt_t(rf['step_time_bound_s'])} "
+            f"| {mdl['useful_fraction']:.3f} | {note} |")
+    return "\n".join(rows)
+
+
+def main():
+    for tag, label in (("pod_16x16", "single pod 16x16 (256 chips)"),
+                       ("multipod_2x16x16", "multi-pod 2x16x16 (512 chips)")):
+        recs = load(tag)
+        n_ok = sum(r["status"] == "OK" for r in recs)
+        n_skip = sum(r["status"] == "SKIP" for r in recs)
+        print(f"\n### Dry-run — {label}: {n_ok} OK, {n_skip} SKIP, "
+              f"{len(recs) - n_ok - n_skip} other\n")
+        print(dryrun_table(tag))
+    print("\n### Roofline — single pod (roofline table is single-pod only)\n")
+    print(roofline_table("pod_16x16"))
+
+
+if __name__ == "__main__":
+    main()

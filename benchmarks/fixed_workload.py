@@ -1,0 +1,35 @@
+"""Paper Table IV: fixed reference workload, all backends.
+
+Reports wall time, events/s, ns/event (the paper's amortized-cost metric,
+Fig 5 right) and speedups vs every baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (FIXED_A, FIXED_M, STEPS, emit, events_per_s,
+                               time_call)
+from repro.core import engine
+from repro.core.config import MarketConfig
+
+BACKENDS = ["numpy", "jax-per-step", "jax-scan", "pallas-naive",
+            "pallas-kinetic"]
+
+
+def run() -> list:
+    cfg = MarketConfig(num_markets=FIXED_M, num_agents=FIXED_A,
+                       num_steps=STEPS)
+    rows, times = [], {}
+    for b in BACKENDS:
+        t, _ = time_call(engine.simulate, cfg, backend=b, trials=3, warmup=1)
+        times[b] = t
+        rows.append((f"tableIV/{b}", t * 1e6,
+                     f"events_per_s={events_per_s(cfg, t):.4g};"
+                     f"ns_per_event={t * 1e9 / cfg.events():.4f}"))
+    k = times["pallas-kinetic"]
+    rows.append(("tableIV/speedups", k * 1e6,
+                 ";".join(f"vs_{b}={times[b] / k:.2f}x"
+                          for b in BACKENDS if b != "pallas-kinetic")))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

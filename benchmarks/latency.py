@@ -1,0 +1,54 @@
+"""Paper Fig 6: per-step latency distribution (11 trials, median + min-max).
+
+Per-step latency is the end-to-end time of ONE simulation step, including
+any dispatch overhead — the regime where the persistent engine's single
+launch wins (paper: 22.1us vs 339-1704us).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FIXED_A, emit
+from repro.core import engine
+from repro.core.config import MarketConfig
+
+TRIALS = 11
+
+
+def _step_latency(backend: str, cfg: MarketConfig) -> tuple:
+    """Median/min/max per-step latency via single-step simulations (the
+    jit/interpret warmup is excluded by a warmup call)."""
+    import dataclasses
+
+    one = dataclasses.replace(cfg, num_steps=1)
+    engine.simulate(one, backend=backend)  # warmup/compile
+    times = []
+    for _ in range(TRIALS):
+        t0 = time.perf_counter()
+        engine.simulate(one, backend=backend)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), float(np.min(times)), float(np.max(times))
+
+
+def run() -> list:
+    cfg = MarketConfig(num_markets=256 if not _full() else 4096,
+                       num_agents=FIXED_A)
+    rows = []
+    for b in ("numpy", "jax-per-step", "jax-scan", "pallas-naive",
+              "pallas-kinetic"):
+        med, lo, hi = _step_latency(b, cfg)
+        rows.append((f"fig6/step_latency/{b}", med * 1e6,
+                     f"min_us={lo * 1e6:.1f};max_us={hi * 1e6:.1f}"))
+    return rows
+
+
+def _full():
+    from benchmarks.common import FULL
+
+    return FULL
+
+
+if __name__ == "__main__":
+    emit(run())

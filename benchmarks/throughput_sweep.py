@@ -1,0 +1,48 @@
+"""Paper Table III / Fig 3: throughput across market and agent sweeps.
+
+Throughput = M*A*S / wall_time (agent-events/s), per backend, with
+KineticSim speedups vs each baseline — the paper's exact report structure
+at CPU-tractable scale (see common.FULL).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (AGENT_SWEEP, FIXED_A, FIXED_M, MARKET_SWEEP,
+                               STEPS, emit, events_per_s, time_call)
+from repro.core import engine
+from repro.core.config import MarketConfig
+
+BACKENDS = ["numpy", "jax-per-step", "jax-scan", "pallas-naive",
+            "pallas-kinetic"]
+
+
+def _sweep(tag, configs) -> list:
+    rows = []
+    for cfg in configs:
+        per_backend = {}
+        for b in BACKENDS:
+            t, _ = time_call(engine.simulate, cfg, backend=b, trials=3,
+                             warmup=1)
+            per_backend[b] = t
+            rows.append((
+                f"tableIII/{tag}/M{cfg.num_markets}_A{cfg.num_agents}/{b}",
+                t * 1e6,
+                f"events_per_s={events_per_s(cfg, t):.4g}"))
+        k = per_backend["pallas-kinetic"]
+        rows.append((
+            f"tableIII/{tag}/M{cfg.num_markets}_A{cfg.num_agents}/speedups",
+            k * 1e6,
+            ";".join(f"vs_{b}={per_backend[b] / k:.2f}x"
+                     for b in BACKENDS if b != "pallas-kinetic")))
+    return rows
+
+
+def run() -> list:
+    market_cfgs = [MarketConfig(num_markets=m, num_agents=FIXED_A,
+                                num_steps=STEPS) for m in MARKET_SWEEP]
+    agent_cfgs = [MarketConfig(num_markets=FIXED_M, num_agents=a,
+                               num_steps=STEPS) for a in AGENT_SWEEP]
+    return (_sweep("markets", market_cfgs) + _sweep("agents", agent_cfgs))
+
+
+if __name__ == "__main__":
+    emit(run())

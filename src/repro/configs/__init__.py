@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``get_config(name,
+smoke=True)`` returns a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHITECTURES: List[str] = [
+    "zamba2-2.7b",
+    "deepseek-67b",
+    "qwen2.5-3b",
+    "gemma2-27b",
+    "granite-3-8b",
+    "whisper-large-v3",
+    "kimi-k2-1t-a32b",
+    "llama4-scout-17b-a16e",
+    "falcon-mamba-7b",
+    "qwen2-vl-72b",
+    "kineticsim",  # the paper's own workload expressed as a config
+]
+
+
+def _module(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = _module(name)
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def all_configs(smoke: bool = False) -> Dict[str, object]:
+    return {n: get_config(n, smoke) for n in ARCHITECTURES if n != "kineticsim"}

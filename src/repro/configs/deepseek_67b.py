@@ -1,0 +1,18 @@
+"""deepseek-67b [dense]: llama-arch, GQA kv=8 [arXiv:2401.02954; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="deepseek-67b", family="dense",
+        num_layers=95, d_model=8192, num_heads=64, num_kv_heads=8,
+        head_dim=128, d_ff=22016, vocab_size=102400,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="deepseek-smoke", family="dense",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=160, vocab_size=256, remat="none",
+    )

@@ -1,0 +1,23 @@
+"""falcon-mamba-7b [ssm]: attention-free mamba1, d_inner=8192, state=16
+[arXiv:2410.05355]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="falcon-mamba-7b", family="ssm",
+        num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=65024,
+        ssm_state=16, ssm_expand=2, mamba_version=1,
+        supports_long_context=True,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="falcon-mamba-smoke", family="ssm",
+        num_layers=3, d_model=64, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=256,
+        ssm_state=8, ssm_expand=2, mamba_version=1,
+        supports_long_context=True, remat="none",
+    )

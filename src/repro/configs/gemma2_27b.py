@@ -1,0 +1,25 @@
+"""gemma2-27b [dense]: local(4096)/global alternating attention, logit
+softcaps 50/30, GeGLU [arXiv:2408.00118; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma2-27b", family="dense",
+        num_layers=46, d_model=4608, num_heads=32, num_kv_heads=16,
+        head_dim=128, d_ff=36864, vocab_size=256000,
+        activation="geglu", attn_softcap=50.0, final_softcap=30.0,
+        sliding_window=4096, window_pattern=2, post_norm=True,
+        embed_scale=True, tie_embeddings=True,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="gemma2-smoke", family="dense",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=192, vocab_size=256,
+        activation="geglu", attn_softcap=50.0, final_softcap=30.0,
+        sliding_window=32, window_pattern=2, post_norm=True,
+        embed_scale=True, tie_embeddings=True, remat="none",
+    )

@@ -1,0 +1,18 @@
+"""granite-3-8b [dense]: GQA kv=8 [hf:ibm-granite/granite-3.0; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="granite-3-8b", family="dense",
+        num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+        head_dim=128, d_ff=12800, vocab_size=49155,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="granite-smoke", family="dense",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256, remat="none",
+    )

@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE, 384 experts top-8, per-expert
+d_ff=2048 [arXiv:2501.kimi2]. Dry-run uses bf16 params + Adafactor
+(DESIGN.md §6 memory realism)."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+        head_dim=128, d_ff=2048, vocab_size=163840,
+        num_experts=384, top_k=8, parallelism="tp",
+        param_dtype="bfloat16",
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="kimi-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=256,
+        num_experts=8, top_k=2, moe_group_size=64, remat="none",
+    )

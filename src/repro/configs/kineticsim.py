@@ -1,0 +1,13 @@
+"""The paper's own workload as a selectable config (market ensembles)."""
+from repro.core.config import MarketConfig
+
+
+def config():
+    # Paper fixed reference workload (Table IV)
+    return MarketConfig(num_markets=8192, num_agents=256, num_levels=128,
+                        num_steps=500)
+
+
+def smoke_config():
+    return MarketConfig(num_markets=16, num_agents=32, num_levels=64,
+                        num_steps=10)

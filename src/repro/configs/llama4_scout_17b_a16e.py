@@ -1,0 +1,21 @@
+"""llama4-scout-17b-a16e [moe]: 16 experts top-1, early fusion (text-only
+backbone here) [hf:meta-llama/Llama-4-Scout-17B-16E]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="llama4-scout-17b-a16e", family="moe",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab_size=202048,
+        num_experts=16, top_k=1, parallelism="tp",
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="llama4-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=256,
+        num_experts=4, top_k=1, moe_group_size=64, remat="none",
+    )

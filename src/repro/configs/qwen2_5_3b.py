@@ -1,0 +1,20 @@
+"""qwen2.5-3b [dense]: GQA kv=2, QKV bias [hf:Qwen/Qwen2.5; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="qwen2.5-3b", family="dense",
+        num_layers=36, d_model=2048, num_heads=16, num_kv_heads=2,
+        head_dim=128, d_ff=11008, vocab_size=151936,
+        qkv_bias=True, tie_embeddings=True, rope_theta=1e6,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="qwen2.5-smoke", family="dense",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256,
+        qkv_bias=True, tie_embeddings=True, remat="none",
+    )

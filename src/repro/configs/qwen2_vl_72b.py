@@ -1,0 +1,22 @@
+"""qwen2-vl-72b [vlm]: M-RoPE, dynamic resolution; patch frontend STUB
+(input_specs feeds precomputed patch embeddings) [arXiv:2409.12191; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="qwen2-vl-72b", family="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        head_dim=128, d_ff=29568, vocab_size=152064,
+        qkv_bias=True, mrope=True, num_vision_tokens=256,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=256,
+        qkv_bias=True, mrope=True, num_vision_tokens=8, remat="none",
+    )

@@ -1,0 +1,38 @@
+"""Assigned input shapes (same four for every LM-family architecture)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Reduced shapes for CPU smoke tests (same phases, tiny sizes).
+SMOKE_SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 64, 2, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 64, 2, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 64, 2, "decode"),
+    "long_500k": ShapeSpec("long_500k", 128, 1, "decode"),
+}
+
+
+def long_context_skip_reason(cfg) -> str | None:
+    """Why long_500k is skipped for this arch (None = runs); see DESIGN.md §5."""
+    if cfg.supports_long_context:
+        return None
+    if cfg.family == "encdec":
+        return "enc-dec: decoder positions capped by published architecture"
+    return "full-attention decode at 500k has no sub-quadratic path"

@@ -1,0 +1,25 @@
+"""whisper-large-v3 [audio enc-dec]: conv frontend STUB (input_specs feeds
+precomputed frame embeddings) [arXiv:2212.04356]. 32 encoder + 32 decoder
+layers at the published width; MHA (kv=20); LayerNorm + GELU; sinusoidal
+positions (simplification noted in DESIGN.md)."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="whisper-large-v3", family="encdec",
+        num_layers=32, encoder_layers=32, d_model=1280, num_heads=20,
+        num_kv_heads=20, head_dim=64, d_ff=5120, vocab_size=51866,
+        norm="layernorm", activation="gelu", use_rope=False,
+        qkv_bias=True, source_len=1500,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="whisper-smoke", family="encdec",
+        num_layers=2, encoder_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        norm="layernorm", activation="gelu", use_rope=False,
+        qkv_bias=True, source_len=32, remat="none",
+    )

@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid]: Mamba2 backbone + weight-tied shared attention
+blocks every 6 layers [arXiv:2411.15242; hf]."""
+from repro.models.model_config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="zamba2-2.7b", family="hybrid",
+        num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+        head_dim=80, d_ff=10240, vocab_size=32000,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, mamba_version=2,
+        attn_every=6, supports_long_context=True,
+    )
+
+
+def smoke_config():
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256,
+        ssm_state=16, ssm_expand=2, ssm_head_dim=16, mamba_version=2,
+        attn_every=2, supports_long_context=True, remat="none",
+    )

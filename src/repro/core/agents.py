@@ -1,0 +1,107 @@
+"""Agent strategy classes (paper §III-C), array-module polymorphic.
+
+Every backend — NumPy reference, JAX step/scan engines, and both Pallas
+kernels — executes *this exact function* for agent decisions (the paper's
+"shared device-side decide()"), which is what makes the bitwise-identity
+experiments meaningful.
+
+All float math is float32 with explicit casts so NumPy (which would otherwise
+promote to float64) and JAX produce identical bit patterns.
+"""
+from __future__ import annotations
+
+from repro.core import rng
+from repro.core.config import (
+    CH_MKT,
+    CH_PRICE,
+    CH_QTY,
+    CH_SIDE,
+    MAKER,
+    MOMENTUM,
+    MarketConfig,
+)
+
+
+def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
+           uniform_fn=None):
+    """Vectorized agent decisions for one step.
+
+    Args:
+      mid:        float32[M, 1] current mid price per market.
+      prev_mid:   float32[M, 1] previous step's mid price.
+      step:       int32 scalar (traced ok) step index.
+      market_ids: int32[M, 1] global market indices (for the RNG coordinate).
+      agent_ids:  int32[1, A] (or [A]) agent indices within a market.
+      uniform_fn: optional ``f(gid, step, channel) -> float32[M, A]`` RNG
+        override (used by the statistical-equivalence reference backends);
+        defaults to the production kinetic_hash32 stream.
+
+    Returns:
+      side_buy: bool[M, A], price: int32[M, A], qty: float32[M, A]
+    """
+    A = cfg.num_agents
+    L = cfg.num_levels
+    f32 = xp.float32
+
+    agent_ids = xp.reshape(xp.asarray(agent_ids, dtype=xp.int32), (1, -1))
+    market_ids = xp.reshape(xp.asarray(market_ids, dtype=xp.int32), (-1, 1))
+    gid = (market_ids * xp.int32(A) + agent_ids).astype(xp.uint32)  # [M, A]
+    step_u = xp.asarray(step).astype(xp.uint32)
+
+    if uniform_fn is None:
+        def u(channel):
+            return rng.uniform32(cfg.seed, gid, step_u, channel, xp)
+    else:
+        def u(channel):
+            return uniform_fn(gid, step_u, channel)
+
+    u_side = u(CH_SIDE)
+    u_price = u(CH_PRICE)
+    u_mkt = u(CH_MKT)
+    u_qty = u(CH_QTY)
+
+    atype = cfg.agent_types(xp)[None, :]  # int32[1, A]
+    mid = xp.asarray(mid, dtype=xp.float32)
+    prev_mid = xp.asarray(prev_mid, dtype=xp.float32)
+
+    # --- NOISE: random side, price = round(mid + U[-Δ, Δ]) ---
+    noise_side_buy = u_side < f32(0.5)
+    eta = (u_price * f32(2.0) - f32(1.0)) * f32(cfg.noise_delta)
+    noise_price = mid + eta
+
+    # --- MOMENTUM: side = sgn(mid_t - mid_{t-1}); price = round(mid ± 1) ---
+    ret = xp.sign(mid - prev_mid)  # float32[M, 1]
+    ret = ret + xp.zeros_like(u_side)  # broadcast [M, A]
+    mom_side_buy = xp.where(ret != f32(0.0), ret > f32(0.0), u_side < f32(0.5))
+    mom_price = mid + xp.where(mom_side_buy, f32(1.0), f32(-1.0))
+
+    # --- MAKER: alternate on parity of (a + s); fixed half-spread offset ---
+    step_i = xp.asarray(step).astype(xp.int32)
+    maker_side_buy = ((agent_ids + step_i) % xp.int32(2)) == xp.int32(0)
+    maker_side_buy = maker_side_buy | xp.zeros_like(noise_side_buy)
+    half = f32(cfg.maker_half_spread)
+    maker_price = xp.where(maker_side_buy, mid - half, mid + half)
+
+    is_mom = atype == MOMENTUM
+    is_maker = atype == MAKER
+    side_buy = xp.where(is_maker, maker_side_buy,
+                        xp.where(is_mom, mom_side_buy, noise_side_buy))
+    price_f = xp.where(is_maker, maker_price,
+                       xp.where(is_mom, mom_price, noise_price))
+
+    # Marketable orders (never for makers): force to the grid boundary.
+    marketable = (u_mkt < f32(cfg.p_marketable)) & ~is_maker
+    price_f = xp.where(
+        marketable,
+        xp.where(side_buy, f32(L - 1), f32(0.0)),
+        price_f,
+    )
+
+    # Round-half-even (identical in NumPy & JAX), prune to the grid (paper
+    # §III-A: out-of-window orders are clipped / made marketable).
+    price = xp.clip(xp.round(price_f), f32(0.0), f32(L - 1)).astype(xp.int32)
+
+    # Integer quantity q = 1 + floor(u * q_max) in {1..q_max}, kept in f32
+    # (exact-integer arithmetic => associative adds => bitwise reproducible).
+    qty = f32(1.0) + xp.floor(u_qty * f32(cfg.q_max))
+    return side_buy, price, qty

@@ -1,0 +1,96 @@
+"""Configuration for the KineticSim market engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# Agent strategy classes (paper §III-C)
+NOISE = 0
+MOMENTUM = 1
+MAKER = 2
+
+# RNG channels
+CH_SIDE = 0
+CH_PRICE = 1
+CH_MKT = 2
+CH_QTY = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketConfig:
+    """Parameters of the uniform-price call-auction ensemble (paper §III).
+
+    Defaults follow the paper's benchmarked configuration: L=128 price ticks,
+    S=500 steps, population mix 15% makers / 15% momentum / 70% noise.
+    """
+
+    num_markets: int = 64          # M — independent markets
+    num_agents: int = 256          # A — agents per market
+    num_levels: int = 128          # L — price grid ticks (power of two)
+    num_steps: int = 500           # S — simulation steps
+    seed: int = 0
+
+    # Agent behaviour (paper §III-C)
+    q_max: int = 8                 # max order quantity
+    p_marketable: float = 0.1      # P_mkt — probability of a marketable order
+    noise_delta: float = 8.0       # Δ_noise — uniform price offset half-width
+    maker_half_spread: float = 2.0 # Δ_maker_half_spread
+
+    # Population mix (paper §IV-J: α_maker fixed at 0.15, α_mom swept)
+    alpha_maker: float = 0.15
+    alpha_momentum: float = 0.15
+
+    # Opening book seeding (paper Alg.1 line 3); quotes straddle L/2.
+    initial_quote_qty: float = 10.0
+    initial_spread: int = 2        # opening bid at L/2 - spread/2 ... ask at +
+
+    def __post_init__(self):
+        L = self.num_levels
+        if L < 4 or (L & (L - 1)) != 0:
+            raise ValueError(f"num_levels must be a power of two >= 4, got {L}")
+        if L > 1024:
+            raise ValueError("num_levels > 1024 requires tiling (paper §V)")
+        if not (0.0 <= self.alpha_maker + self.alpha_momentum <= 1.0):
+            raise ValueError("agent fractions must sum to <= 1")
+
+    # ---- derived population counts (deterministic by agent index) ----
+    @property
+    def num_makers(self) -> int:
+        return int(round(self.num_agents * self.alpha_maker))
+
+    @property
+    def num_momentum(self) -> int:
+        return int(round(self.num_agents * self.alpha_momentum))
+
+    @property
+    def mid0(self) -> float:
+        return float(self.num_levels // 2)
+
+    def agent_types(self, xp) -> "xp.ndarray":
+        """int32[A] strategy class per agent index: makers, momentum, noise."""
+        a = xp.arange(self.num_agents, dtype=xp.int32)
+        nm, nmo = self.num_makers, self.num_momentum
+        return xp.where(
+            a < nm,
+            xp.int32(MAKER),
+            xp.where(a < nm + nmo, xp.int32(MOMENTUM), xp.int32(NOISE)),
+        )
+
+    def initial_books(self, xp) -> Tuple["xp.ndarray", "xp.ndarray"]:
+        """(bid, ask) float32[M, L] opening books."""
+        M, L = self.num_markets, self.num_levels
+        bid = xp.zeros((M, L), dtype=xp.float32)
+        ask = xp.zeros((M, L), dtype=xp.float32)
+        half = self.initial_spread // 2 + self.initial_spread % 2
+        pb = L // 2 - half
+        pa = L // 2 + half
+        q = xp.float32(self.initial_quote_qty)
+        onehot_b = (xp.arange(L, dtype=xp.int32) == pb).astype(xp.float32) * q
+        onehot_a = (xp.arange(L, dtype=xp.int32) == pa).astype(xp.float32) * q
+        bid = bid + onehot_b[None, :]
+        ask = ask + onehot_a[None, :]
+        return bid, ask
+
+    def events(self) -> int:
+        """Total agent events M*A*S (paper's throughput denominator)."""
+        return self.num_markets * self.num_agents * self.num_steps

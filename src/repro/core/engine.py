@@ -1,0 +1,59 @@
+"""Public engine API: ``simulate(cfg, backend=...)`` with a backend registry.
+
+Backends (paper §IV's five engines):
+  * ``numpy``             — CPU (NumPy) reference, kinetic RNG (bitwise-comparable)
+  * ``numpy-splitmix64``  — CPU reference with the paper's SplitMix64 stream
+  * ``numpy-pcg64``       — CPU reference with NumPy's PCG64 (paper's literal CPU RNG)
+  * ``jax-per-step``      — launch-per-step framework regime
+  * ``jax-scan``          — fused lax.scan framework baseline
+  * ``pallas-naive``      — per-step Pallas kernel, HBM-resident book (naive CUDA analogue)
+  * ``pallas-kinetic``    — THE paper's engine: persistent, VMEM-resident clearing
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.config import MarketConfig
+from repro.core.result import SimResult
+
+_REGISTRY: Dict[str, Callable[..., SimResult]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def backends():
+    _ensure_builtin()
+    return sorted(_REGISTRY)
+
+
+def _ensure_builtin():
+    if "numpy" in _REGISTRY:
+        return
+    from repro.core import jax_backend, numpy_backend
+
+    _REGISTRY["numpy"] = lambda cfg, **kw: numpy_backend.simulate(
+        cfg, rng_mode="kinetic", **kw)
+    _REGISTRY["numpy-splitmix64"] = lambda cfg, **kw: numpy_backend.simulate(
+        cfg, rng_mode="splitmix64", **kw)
+    _REGISTRY["numpy-pcg64"] = lambda cfg, **kw: numpy_backend.simulate(
+        cfg, rng_mode="pcg64", **kw)
+    _REGISTRY["jax-scan"] = lambda cfg, **kw: jax_backend.simulate(
+        cfg, mode="scan", **kw)
+    _REGISTRY["jax-per-step"] = lambda cfg, **kw: jax_backend.simulate(
+        cfg, mode="per-step", **kw)
+    try:
+        from repro.kernels import ops as _kernel_ops  # registers pallas backends
+    except ImportError:
+        pass
+
+
+def simulate(cfg: MarketConfig, backend: str = "jax-scan", **kwargs) -> SimResult:
+    _ensure_builtin()
+    if backend not in _REGISTRY:
+        raise KeyError(f"unknown backend {backend!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[backend](cfg, **kwargs)

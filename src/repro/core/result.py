@@ -1,0 +1,67 @@
+"""Simulation result container + aggregate statistics (paper Table II/Fig 7)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class SimResult(NamedTuple):
+    bid: "array"          # float32[M, L] final resting bids
+    ask: "array"          # float32[M, L] final resting asks
+    last_price: "array"   # float32[M, 1]
+    prev_mid: "array"     # float32[M, 1]
+    price_path: "array"   # float32[M, S] clearing-price path
+    volume_path: "array"  # float32[M, S] per-step transacted volume
+
+    def to_numpy(self) -> "SimResult":
+        return SimResult(*(np.asarray(x) for x in self))
+
+    # ---- aggregate market statistics (Table II) ----
+    def mean_clearing_price(self) -> float:
+        r = self.to_numpy()
+        w = r.volume_path > 0
+        tot = w.sum()
+        if tot == 0:
+            return float("nan")
+        return float((r.price_path * w).sum() / tot)
+
+    def volume_per_market(self) -> float:
+        r = self.to_numpy()
+        return float(r.volume_path.sum(axis=1).mean())
+
+    def trade_count(self) -> float:
+        r = self.to_numpy()
+        return float((r.volume_path > 0).sum(axis=1).mean())
+
+    # ---- stylized-fact statistics (Fig 7) ----
+    def returns(self) -> np.ndarray:
+        p = np.asarray(self.price_path)
+        return np.diff(p, axis=1)
+
+    def volatility(self) -> float:
+        return float(self.returns().std())
+
+    def excess_kurtosis(self) -> float:
+        r = self.returns().ravel()
+        r = r - r.mean()
+        v = (r ** 2).mean()
+        if v == 0:
+            return 0.0
+        return float((r ** 4).mean() / v ** 2 - 3.0)
+
+    def autocorrelation(self, lags: int = 20, absolute: bool = False) -> np.ndarray:
+        """Mean-over-markets ACF of returns (or |returns|) up to ``lags``."""
+        r = self.returns()
+        if absolute:
+            r = np.abs(r)
+        r = r - r.mean(axis=1, keepdims=True)
+        denom = (r * r).sum(axis=1)
+        out = np.zeros(lags + 1)
+        out[0] = 1.0
+        for k in range(1, lags + 1):
+            num = (r[:, k:] * r[:, :-k]).sum(axis=1)
+            with np.errstate(invalid="ignore", divide="ignore"):
+                vals = num / denom
+            out[k] = float(np.nanmean(vals))
+        return out

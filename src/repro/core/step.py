@@ -1,0 +1,98 @@
+"""One simulation step (paper Alg. 1 lines 5-22), shared by all backends.
+
+``simulate_step`` is the complete per-step semantics: microstructure state
+estimation -> agent decisions -> order aggregation -> cooperative clearing ->
+residual book update. Backends differ only in *how* they bin orders (scatter
+vs one-hot matmul) and how they drive the S-step loop (host loop, lax.scan,
+or a persistent Pallas grid) — never in semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.core import agents, auction
+from repro.core.config import MarketConfig
+
+
+class MarketState(NamedTuple):
+    bid: "array"        # float32[M, L] resting bid quantities
+    ask: "array"        # float32[M, L] resting ask quantities
+    last_price: "array" # float32[M, 1]
+    prev_mid: "array"   # float32[M, 1]
+
+
+class StepOutput(NamedTuple):
+    price: "array"   # float32[M, 1] clearing price (or last price if no cross)
+    volume: "array"  # float32[M, 1] transacted volume
+    mid: "array"     # float32[M, 1] mid price used for decisions
+
+
+def initial_state(cfg: MarketConfig, xp, market_offset: int = 0) -> MarketState:
+    bid, ask = cfg.initial_books(xp)
+    m0 = xp.float32(cfg.mid0)
+    ones = xp.ones((cfg.num_markets, 1), dtype=xp.float32)
+    return MarketState(bid=bid, ask=ask, last_price=ones * m0, prev_mid=ones * m0)
+
+
+def bin_orders_onehot(side_buy, price, qty, L, xp):
+    """Order aggregation as a one-hot contraction (TPU/MXU idiom).
+
+    BUY[m, l] = sum_a qty[m, a] * [price[m, a] == l & side_buy[m, a]]
+
+    This is the TPU-native replacement for the paper's shared-memory
+    atomicAdd histogram; exact-integer f32 adds keep it bitwise-identical to
+    scatter-based binning.
+    """
+    levels = xp.arange(L, dtype=xp.int32)
+    onehot = (price[..., None] == levels).astype(xp.float32)  # [M, A, L]
+    qb = qty * side_buy.astype(xp.float32)
+    qs = qty * (~side_buy).astype(xp.float32)
+    buy = xp.einsum("ma,mal->ml", qb, onehot)
+    sell = xp.einsum("ma,mal->ml", qs, onehot)
+    return buy, sell
+
+
+def simulate_step(
+    cfg: MarketConfig,
+    state: MarketState,
+    step_idx,
+    market_ids,
+    xp,
+    bin_orders: Callable = None,
+    scan: str = "cumsum",
+):
+    """Advance all markets one step. Returns (MarketState, StepOutput)."""
+    if bin_orders is None:
+        bin_orders = lambda s, p, q: bin_orders_onehot(s, p, q, cfg.num_levels, xp)
+    f32 = xp.float32
+
+    # Phase 2: microstructure state estimation (paper Alg.1 lines 5-7)
+    _, _, mid = auction.best_quotes(state.bid, state.ask, state.last_price, xp)
+
+    # Phase 3: agent decisions + order aggregation (lines 8-13)
+    agent_ids = xp.arange(cfg.num_agents, dtype=xp.int32)
+    side_buy, price, qty = agents.decide(
+        cfg, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp
+    )
+    buy, sell = bin_orders(side_buy, price, qty)
+
+    # Incoming orders join the resting book; clearing runs over the total.
+    total_buy = state.bid + buy
+    total_ask = state.ask + sell
+
+    # Phase 4: cooperative parallel clearing (lines 14-21)
+    cleared = auction.clear(total_buy, total_ask, xp, scan=scan)
+
+    # Phase 5: residual book update + state persistence (line 22)
+    executed = cleared["volume"] > f32(0.0)
+    new_last = xp.where(
+        executed, cleared["p_star"].astype(xp.float32), state.last_price
+    )
+    new_state = MarketState(
+        bid=cleared["new_bid"],
+        ask=cleared["new_ask"],
+        last_price=new_last,
+        prev_mid=mid,
+    )
+    out = StepOutput(price=new_last, volume=cleared["volume"], mid=mid)
+    return new_state, out

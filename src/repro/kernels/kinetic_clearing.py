@@ -1,0 +1,140 @@
+"""KineticSim persistent clearing kernel — the paper's contribution on TPU.
+
+GPU original (paper §III): one CUDA block per market, LOB in ``__shared__``
+memory for all S steps, atomicAdd order binning, Hillis–Steele scans,
+tournament argmax.
+
+TPU adaptation (DESIGN.md §2): one Pallas grid cell per *tile* of MB markets.
+The entire S-step loop runs inside the kernel body; the books live in VMEM
+(registers/VMEM values carried through ``lax.fori_loop``) and touch HBM only
+at kernel entry/exit — HBM traffic is Θ(M·L), independent of S, exactly the
+paper's claim. Order binning is a one-hot MXU contraction (the TPU-native
+replacement for shared-memory atomics); clearing runs the same xp-polymorphic
+``auction.clear`` / ``agents.decide`` code as every other backend, so results
+are bitwise identical.
+
+Block/tile layout: markets on sublanes (MB multiple of 8), price ticks on
+lanes (L multiple of 128 native; smaller L still correct, just padded by the
+compiler). VMEM working set ≈ (7·MB·L + MB·A·L_onehot-chunk + 2·MB·S) f32 —
+see EXPERIMENTS.md §Perf for the measured budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional on CPU/interpret
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.core.config import MarketConfig
+from repro.core.step import MarketState, simulate_step
+
+
+def _kernel_body(
+    bid_ref, ask_ref, last_ref, pmid_ref,
+    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+    price_path_ref, volume_path_ref,
+    *, cfg: MarketConfig, mb: int, scan: str,
+):
+    """Persistent scheduler (paper Alg. 1) for one tile of ``mb`` markets."""
+    i = pl.program_id(0)
+    S = cfg.num_steps
+
+    # Phase 1: load opening books into VMEM-resident values (Alg.1 lines 2-3).
+    bid = bid_ref[...]
+    ask = ask_ref[...]
+    last = last_ref[...]
+    pmid = pmid_ref[...]
+
+    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+
+    def body(s, carry):
+        bid, ask, last, pmid, pp, vp = carry
+        state = MarketState(bid=bid, ask=ask, last_price=last, prev_mid=pmid)
+        # Phases 2-5 (Alg.1 lines 5-22): shared semantics, one-hot binning.
+        new_state, out = simulate_step(
+            cfg, state, s, market_ids, jnp, bin_orders=None, scan=scan
+        )
+        pp = jax.lax.dynamic_update_slice(pp, out.price, (0, s))
+        vp = jax.lax.dynamic_update_slice(vp, out.volume, (0, s))
+        return (new_state.bid, new_state.ask, new_state.last_price,
+                new_state.prev_mid, pp, vp)
+
+    pp0 = jnp.zeros((mb, S), jnp.float32)
+    vp0 = jnp.zeros((mb, S), jnp.float32)
+    bid, ask, last, pmid, pp, vp = jax.lax.fori_loop(
+        0, S, body, (bid, ask, last, pmid, pp0, vp0)
+    )
+
+    # Final writeback (Alg.1 line 24) — the only per-market HBM stores.
+    out_bid_ref[...] = bid
+    out_ask_ref[...] = ask
+    out_last_ref[...] = last
+    out_pmid_ref[...] = pmid
+    price_path_ref[...] = pp
+    volume_path_ref[...] = vp
+
+
+def pick_tile(num_markets: int, target: int = 8) -> int:
+    """Largest divisor of M that is <= target (sublane-aligned when possible)."""
+    mb = min(target, num_markets)
+    while num_markets % mb:
+        mb -= 1
+    return mb
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "mb", "scan", "interpret")
+)
+def kinetic_clearing(
+    bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
+    *, cfg: MarketConfig, mb: int = 8, scan: str = "cumsum",
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Run the full S-step ensemble simulation in one persistent kernel.
+
+    Args:
+      bid/ask: float32[M, L] opening books; last/pmid: float32[M, 1].
+    Returns:
+      (bid, ask, last, pmid, price_path[M, S], volume_path[M, S]).
+    """
+    M, L = bid.shape
+    S = cfg.num_steps
+    if M % mb:
+        raise ValueError(f"M={M} not divisible by tile mb={mb}")
+    grid = (M // mb,)
+
+    book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
+    path_spec = pl.BlockSpec((mb, S), lambda i: (i, 0))
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        )
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, S), jnp.float32),
+        jax.ShapeDtypeStruct((M, S), jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_body, cfg=cfg, mb=mb, scan=scan),
+        grid=grid,
+        in_specs=[book_spec, book_spec, scalar_spec, scalar_spec],
+        out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
+                   path_spec, path_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+        **kwargs,
+    )(bid, ask, last, pmid)

@@ -1,0 +1,101 @@
+"""Naive per-step kernel — the paper's "Naive Custom CUDA" ablation on TPU.
+
+Identical device-side semantics (same ``agents.decide``, same
+``auction.clear``, same RNG), but the two central optimizations removed:
+
+  * **No persistence**: one ``pallas_call`` per simulation step, driven by a
+    host-level ``lax.scan``. The book round-trips HBM every step — the
+    Θ(S·M·L) global-traffic regime of paper §III-F, plus Θ(S) kernel
+    dispatches instead of one.
+
+On TPU the GPU notion of a "one-thread serial scan" has no analogue (the VPU
+is always SIMD over lanes), so this ablation isolates the *persistence* axis;
+the scan-depth axis is exercised separately via the ``scan=`` mode flag
+('hillis-steele' log-depth vs 'cumsum'). The performance gap between this and
+:mod:`kinetic_clearing` is a clean attribution to state residency (§IV-I).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.config import MarketConfig
+from repro.core.step import MarketState, simulate_step
+from repro.kernels.kinetic_clearing import pick_tile
+
+
+def _step_kernel_body(
+    step_ref,
+    bid_ref, ask_ref, last_ref, pmid_ref,
+    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+    price_ref, volume_ref,
+    *, cfg: MarketConfig, mb: int, scan: str,
+):
+    i = pl.program_id(0)
+    s = step_ref[0, 0]
+    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+    state = MarketState(
+        bid=bid_ref[...], ask=ask_ref[...],
+        last_price=last_ref[...], prev_mid=pmid_ref[...],
+    )
+    new_state, out = simulate_step(cfg, state, s, market_ids, jnp, scan=scan)
+    out_bid_ref[...] = new_state.bid
+    out_ask_ref[...] = new_state.ask
+    out_last_ref[...] = new_state.last_price
+    out_pmid_ref[...] = new_state.prev_mid
+    price_ref[...] = out.price
+    volume_ref[...] = out.volume
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mb", "scan", "interpret"))
+def naive_clearing(
+    bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
+    *, cfg: MarketConfig, mb: int = 8, scan: str = "cumsum",
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """S launches of a single-step kernel; state resides in HBM between steps."""
+    M, L = bid.shape
+    S = cfg.num_steps
+    if M % mb:
+        raise ValueError(f"M={M} not divisible by tile mb={mb}")
+    grid = (M // mb,)
+
+    book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
+    step_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+    )
+    step_call = pl.pallas_call(
+        functools.partial(_step_kernel_body, cfg=cfg, mb=mb, scan=scan),
+        grid=grid,
+        in_specs=[step_spec, book_spec, book_spec, scalar_spec, scalar_spec],
+        out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
+                   scalar_spec, scalar_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+
+    def host_step(carry, s):
+        bid, ask, last, pmid = carry
+        step_arr = jnp.full((1, 1), s, dtype=jnp.int32)
+        bid, ask, last, pmid, price, volume = step_call(
+            step_arr, bid, ask, last, pmid
+        )
+        return (bid, ask, last, pmid), (price[:, 0], volume[:, 0])
+
+    steps = jnp.arange(S, dtype=jnp.int32)
+    (bid, ask, last, pmid), (pp, vp) = jax.lax.scan(
+        host_step, (bid, ask, last, pmid), steps
+    )
+    return bid, ask, last, pmid, pp.T, vp.T

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas engines + backend registration.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as pure JAX ops — bit-exact semantics); on TPU the same
+entry points lower via Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import engine
+from repro.core.config import MarketConfig
+from repro.core.result import SimResult
+from repro.core.step import initial_state
+from repro.kernels.kinetic_clearing import kinetic_clearing, pick_tile
+from repro.kernels.naive_clearing import naive_clearing
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _simulate_with(kernel_fn, cfg: MarketConfig, mb=None, scan="cumsum",
+                   interpret=None) -> SimResult:
+    import jax.numpy as jnp
+
+    state = initial_state(cfg, jnp)
+    mb = pick_tile(cfg.num_markets) if mb is None else mb
+    bid, ask, last, pmid, pp, vp = kernel_fn(
+        state.bid, state.ask, state.last_price, state.prev_mid,
+        cfg=cfg, mb=mb, scan=scan, interpret=_auto_interpret(interpret),
+    )
+    return SimResult(bid=bid, ask=ask, last_price=last, prev_mid=pmid,
+                     price_path=pp, volume_path=vp)
+
+
+@engine.register("pallas-kinetic")
+def simulate_kinetic(cfg: MarketConfig, mb=None, scan="cumsum",
+                     interpret=None) -> SimResult:
+    """The paper's engine: persistent, VMEM-resident, one kernel for S steps."""
+    return _simulate_with(kinetic_clearing, cfg, mb=mb, scan=scan,
+                          interpret=interpret)
+
+
+@engine.register("pallas-naive")
+def simulate_naive(cfg: MarketConfig, mb=None, scan="cumsum",
+                   interpret=None) -> SimResult:
+    """Ablation: per-step kernel launches, HBM-resident book."""
+    return _simulate_with(naive_clearing, cfg, mb=mb, scan=scan,
+                          interpret=interpret)

@@ -1,0 +1,120 @@
+"""Persistent-state selective-scan kernel (mamba1 forward) — the paper's
+pattern applied to the LM substrate (DESIGN.md §4.2, EXPERIMENTS §Perf
+falcon-mamba iteration 3).
+
+The XLA-level sequential scan pays ~(B·T·di·N) HBM traffic several times
+over: the (B,di,N) loop carry round-trips HBM every step, backward saves
+per-step states, and each step's update materializes. This kernel keeps the
+recurrent state h resident in a VMEM scratch across the *entire* time loop —
+exactly the market engine's shared-memory residency — collapsing HBM traffic
+to the inputs/outputs:
+
+    Θ(B·T·(di+N))  instead of  Θ(B·T·di·N)      (N-fold reduction)
+
+Grid: (B, T/CT) with the time axis innermost ("arbitrary" = sequential on
+TPU), so the scratch state carries across time chunks — the same
+persistent-across-grid-steps trick as kinetic_clearing. Block layout:
+di on lanes (128-multiples), N on sublanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+            y_ref, hT_ref, h_scratch, *, ct: int, n_t: int):
+    """One (batch b, time-chunk t) grid cell; h persists in VMEM scratch."""
+    t_idx = pl.program_id(1)
+
+    # Load the initial state into the persistent scratch at the first chunk.
+    @pl.when(t_idx == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0]
+
+    A = a_ref[...]              # [di, N]
+    x = x_ref[0]                # [ct, di]
+    dt = dt_ref[0]              # [ct, di]
+    Bc = b_ref[0]               # [ct, N]
+    Cc = c_ref[0]               # [ct, N]
+
+    def t_step(i, h):
+        dtt = dt[i]                                     # [di]
+        decay = jnp.exp(dtt[:, None] * A)               # [di, N]
+        h = decay * h + (dtt * x[i])[:, None] * Bc[i][None, :]
+        y = jnp.sum(h * Cc[i][None, :], axis=-1)        # [di]
+        y_ref[0, i, :] = y
+        return h
+
+    h = jax.lax.fori_loop(0, ct, t_step, h_scratch[...])
+    h_scratch[...] = h
+
+    # Final writeback once per batch row (paper Alg.1 line 24 analogue).
+    @pl.when(t_idx == n_t - 1)
+    def _done():
+        hT_ref[0] = h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ct", "interpret"))
+def ssm_scan(x, dt, Bc, Cc, A, h0, *, ct: int = 256,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Mamba1 selective-scan forward.
+
+    x, dt: f32[B, T, di]; Bc, Cc: f32[B, T, N]; A: f32[di, N];
+    h0: f32[B, di, N]. Returns (y f32[B, T, di], hT f32[B, di, N]).
+    """
+    B, T, di = x.shape
+    N = A.shape[-1]
+    while T % ct:
+        ct //= 2
+    n_t = T // ct
+    grid = (B, n_t)
+
+    seq_spec = lambda w: pl.BlockSpec((1, ct, w), lambda b, t: (b, t, 0))
+    state_spec = pl.BlockSpec((1, di, N), lambda b, t: (b, 0, 0))
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+
+    y, hT = pl.pallas_call(
+        functools.partial(_kernel, ct=ct, n_t=n_t),
+        grid=grid,
+        in_specs=[
+            seq_spec(di), seq_spec(di), seq_spec(N), seq_spec(N),
+            pl.BlockSpec((di, N), lambda b, t: (0, 0)),
+            state_spec,
+        ],
+        out_specs=(seq_spec(di), state_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, T, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((di, N), jnp.float32)] if pltpu is not None
+        else [],
+        interpret=interpret,
+        **kwargs,
+    )(x, dt, Bc, Cc, A, h0)
+    return y, hT
+
+
+def hbm_traffic_bytes(B, T, di, N) -> dict:
+    """Analytical HBM traffic of kernel vs XLA scan (per §Perf accounting)."""
+    kernel = 4 * (B * T * (2 * di + 2 * N)   # x, dt, Bc, Cc reads
+                  + B * T * di               # y writes
+                  + 2 * B * di * N)          # h0 in, hT out
+    xla_scan = 4 * (B * T * di * N * 4       # carry r/w + copies + saves
+                    + B * T * (3 * di + 2 * N))
+    return {"kernel": kernel, "xla_scan": xla_scan,
+            "reduction": xla_scan / kernel}

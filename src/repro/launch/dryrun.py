@@ -1,0 +1,337 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as a module entry point (``python -m repro.launch.dryrun``):
+the XLA device-count override below has to run before jax initializes.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHITECTURES, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, long_context_skip_reason  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch import specs as specs_mod  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    make_prefill_step, make_serve_step, make_train_step, pick_optimizer_name,
+)
+from repro.models.model import Model  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[\d+,\d+\])")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str):
+    """Per-device wire-byte estimate per collective family.
+
+    Shapes in SPMD-partitioned HLO are per-device. Ring-model costs:
+    all-reduce 2(n-1)/n * bytes; all-gather (n-1)/n * result bytes;
+    reduce-scatter (n-1) * result bytes; all-to-all (n-1)/n; permute 1x.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        n = 0
+        if gm:
+            g = gm.group(1)
+            if g.startswith("[") :
+                n = int(g.strip("[]").split(",")[1])
+            else:
+                n = g.count(",") - g.count("},{") * 0 + 1
+                first = g[2:g.index("}")]
+                n = len(first.split(","))
+        n = max(n, 2)
+        if op == "all-reduce":
+            out[op] += 2 * (n - 1) / n * size
+        elif op == "all-gather":
+            out[op] += (n - 1) / n * size
+        elif op == "reduce-scatter":
+            out[op] += (n - 1) * size
+        elif op == "all-to-all":
+            out[op] += (n - 1) / n * size
+        else:
+            out[op] += size
+        counts[op] += 1
+    return out, counts
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "multipod_2x16x16" if multi_pod else "pod_16x16"
+
+
+def build_cell(arch: str, shape_name: str, mesh, fsdp_override=None):
+    """Returns (jitted_fn, abstract_args) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    specs = specs_mod.input_specs(cfg, shape)
+    batch_sh = specs_mod.batch_shardings(mesh, cfg, specs)
+    total_params, _ = cfg.param_counts()
+    fsdp = (total_params > 20e9
+            and (shape.phase == "train" or cfg.family == "moe")
+            if fsdp_override is None else fsdp_override)
+    layout = cfg.parallelism
+
+    aparams = model.abstract_params()
+    if shape.phase != "train":
+        # Serving reads a compute-dtype checkpoint (EXPERIMENTS §Perf
+        # deepseek decode: f32 master weights double inference weight
+        # traffic for no benefit).
+        from repro.models.model import cast_params
+        aparams = jax.eval_shape(lambda p: cast_params(p, cfg), aparams)
+    param_sh = shd.param_shardings(mesh, aparams, fsdp=fsdp, layout=layout)
+    repl = NamedSharding(mesh, P())
+
+    if shape.phase == "train":
+        train_step, opt = make_train_step(cfg)
+        aopt = jax.eval_shape(opt.init, aparams)
+        opt_sh = shd.param_shardings(mesh, aopt, fsdp=fsdp, layout=layout)
+        astep = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def fn(params, opt_state, step, batch):
+            with shd.activate(mesh, layout):
+                return train_step(params, opt_state, step, batch)
+
+        jf = jax.jit(
+            fn,
+            in_shardings=(param_sh, opt_sh, repl, batch_sh),
+            out_shardings=(param_sh, opt_sh, repl, None),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, aopt, astep, specs)
+    elif shape.phase == "prefill":
+        prefill_step = make_prefill_step(cfg)
+
+        def fn(params, batch):
+            with shd.activate(mesh, layout):
+                return prefill_step(params, batch)
+
+        jf = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                     out_shardings=None)
+        args = (aparams, specs)
+    else:  # decode
+        serve_step = make_serve_step(cfg)
+        acache = specs_mod.abstract_cache(cfg, shape.global_batch,
+                                          shape.seq_len)
+        cache_sh = specs_mod.cache_shardings(mesh, cfg, acache)
+
+        def fn(params, cache, batch):
+            with shd.activate(mesh, layout):
+                return serve_step(params, cache, batch)
+
+        jf = jax.jit(
+            fn,
+            in_shardings=(param_sh, cache_sh, batch_sh),
+            out_shardings=(cache_sh, repl, repl),
+            donate_argnums=(1,),
+        )
+        args = (aparams, acache, specs)
+    return cfg, shape, jf, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose=True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = (long_context_skip_reason(cfg) if shape_name == "long_500k"
+            else None)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+        "phase": shape.phase,
+    }
+    if skip:
+        record["status"] = "SKIP"
+        record["reason"] = skip
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cfg, shape, jf, args = build_cell(arch, shape_name, mesh)
+    lowered = jf.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware static analysis (XLA's cost_analysis counts while bodies
+    # once; see launch/hlo_analysis.py)
+    h = hlo_analysis.summarize(hlo)
+    coll = h["collective_breakdown"]
+    coll_counts = h["collective_counts"]
+    wire = h["collective_wire_bytes"]
+
+    flops_dev = float(h["flops"])
+    bytes_dev = float(h["hbm_bytes"])
+    t_comp = flops_dev / HW["peak_flops_bf16"]
+    t_mem = bytes_dev / HW["hbm_bw"]
+    t_coll = wire / (HW["ici_links_per_axis"] * HW["ici_link_bw"])
+
+    total_p, active_p = cfg.param_counts()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * active_p * tokens
+    elif shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * active_p * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * active_p * tokens
+
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    record.update({
+        "status": "OK",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "flops": flops_dev,
+            "bytes_accessed": bytes_dev,
+            "xla_flops_loopbody_once": float(ca.get("flops", 0.0)),
+            "xla_bytes_loopbody_once": float(ca.get("bytes accessed", 0.0)),
+            "collective_wire_bytes": wire,
+            "collective_breakdown": coll,
+            "collective_counts": coll_counts,
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "roofline": {
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "step_time_bound_s": bound,
+        },
+        "model": {
+            "total_params": total_p,
+            "active_params": active_p,
+            "tokens_per_step": tokens,
+            "model_flops": model_flops,
+            "useful_fraction": (model_flops / (flops_dev * n_dev)
+                                if flops_dev else 0.0),
+            "optimizer": (pick_optimizer_name(cfg)
+                          if shape.phase == "train" else None),
+        },
+        "hbm_fits_16g": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         - ma.alias_size_in_bytes) < HW["hbm_per_chip"],
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {record['mesh']}] "
+              f"compile={t_compile:.1f}s flops/dev={flops_dev:.3e} "
+              f"bytes/dev={bytes_dev:.3e} wire/dev={wire:.3e} "
+              f"dominant={dominant} bound={bound*1e3:.2f}ms "
+              f"useful={record['model']['useful_fraction']:.3f}")
+        print("  memory_analysis:", ma)
+    return record
+
+
+def cell_path(arch, shape_name, multi_pod):
+    return RESULTS_DIR / f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell (subprocess per cell, cached)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        archs = [a for a in ARCHITECTURES if a != "kineticsim"]
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = 0
+        for arch in archs:
+            for shape_name in SHAPES:
+                for mp in meshes:
+                    out = cell_path(arch, shape_name, mp)
+                    if out.exists() and not args.force:
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(">>>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures += 1
+                        out.write_text(json.dumps({
+                            "arch": arch, "shape": shape_name,
+                            "mesh": _mesh_tag(mp), "status": "ERROR",
+                            "returncode": r.returncode}))
+        print(f"dry-run sweep done, {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    try:
+        record = run_cell(args.arch, args.shape, args.multi_pod)
+    except Exception:
+        traceback.print_exc()
+        record = {"arch": args.arch, "shape": args.shape,
+                  "mesh": _mesh_tag(args.multi_pod), "status": "ERROR",
+                  "error": traceback.format_exc()[-2000:]}
+        cell_path(args.arch, args.shape, args.multi_pod).write_text(
+            json.dumps(record, indent=2))
+        sys.exit(1)
+    cell_path(args.arch, args.shape, args.multi_pod).write_text(
+        json.dumps(record, indent=2))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,497 @@
+"""Static roofline analyzer over compiled (SPMD-partitioned) HLO text.
+
+XLA's built-in ``cost_analysis()`` counts ``while`` bodies exactly once,
+which silently under-reports every scanned construct (layer stacks, flash
+KV loops, CE chunk loops) by its trip count. This analyzer re-derives the
+three roofline inputs from the HLO itself with proper loop accounting:
+
+  * **flops**: exact 2·M·N·K for every ``dot`` (contracting/batch dims parsed
+    from the op), 1 flop/element for other materializing ops; fusion bodies
+    are traversed for dots only.
+  * **hbm bytes**: every top-level op reads its operands and writes its
+    result, with TPU-aware exceptions: fusion internals, reshapes,
+    broadcasts, converts and iotas are free (they fuse); dynamic-slice /
+    gather / slice count only the *sliced* bytes (not the full operand —
+    critical for scan-over-layers, where the stacked parameter tensor is an
+    operand of every per-layer slice); dynamic-update-slice / scatter count
+    2x the update region. Still an upper bound on real traffic.
+  * **collective wire bytes**: ring-model per-device bytes for all-reduce /
+    all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Shapes in partitioned HLO are per-device, so all outputs are per-device.
+``while`` multipliers come from ``backend_config.known_trip_count`` (always
+emitted for jax.lax.scan/fori_loop).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_ATOM = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+    r"([a-z][a-z0-9\-]*)\(")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:body|calls|to_apply|true_computation|"
+                     r"false_computation|branch_computations)=\{?%?([\w.\-]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DOT_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that don't materialize / move data.
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "opt-barrier",
+             "custom-call", "reshape", "broadcast", "iota", "convert",
+             "copy-start", "copy-done", "rng-bit-generator"}
+
+# ops where only the sliced/updated region moves, not the whole operand
+_SLICE_OPS = {"dynamic-slice", "gather", "slice", "pad"}
+_UPDATE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _atoms(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_ATOM.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _atoms(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _atoms(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+class Op:
+    __slots__ = ("name", "result", "opcode", "line")
+
+    def __init__(self, name, result, opcode, line):
+        self.name, self.result, self.opcode, self.line = (
+            name, result, opcode, line)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                comps[cur].append(Op(m.group(1), m.group(2), m.group(3), line))
+    return comps
+
+
+_ARGS_RE = re.compile(r"[a-z0-9\-]+\(([^)]*)\)")
+
+
+def _operand_names(line: str) -> List[str]:
+    """Names of the operands of an op line (bare %name references)."""
+    m = _ARGS_RE.search(line)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def _dot_flops(op: Op, lookup) -> int:
+    names = _operand_names(op.line)
+    if not names:
+        return 0
+    lhs_shape = lookup(names[0])
+    if lhs_shape is None:
+        return 0
+    lhs = _atoms(lhs_shape)
+    if not lhs:
+        return 0
+    _, lhs_dims = lhs[0]
+    m = _DOT_DIMS.search(op.line)
+    contract = [int(i) for i in m.group(1).split(",") if i] if m else []
+    k = 1
+    for i in contract:
+        if i < len(lhs_dims):
+            k *= lhs_dims[i]
+    return 2 * _shape_elems(op.result) * k
+
+
+def _collective_wire(op: Op) -> float:
+    size = _shape_bytes(op.result)
+    n = 2
+    g = _GROUPS_IOTA.search(op.line)
+    if g:
+        n = int(g.group(2))
+    else:
+        g = _GROUPS_LIST.search(op.line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+    n = max(n, 2)
+    kind = op.opcode.replace("-start", "")
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n * size
+    if kind == "all-gather":
+        return (n - 1) / n * size
+    if kind == "reduce-scatter":
+        return (n - 1) * size
+    if kind == "all-to-all":
+        return (n - 1) / n * size
+    return float(size)  # collective-permute
+
+
+
+def _shape_elems_only(shape_str: str) -> int:
+    return _shape_elems(shape_str)
+
+
+_TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "broadcast",
+                "transpose"}
+
+
+def _fusion_bytes(op: Op, comps, table, lookup) -> float:
+    """HBM bytes for a fusion call site, slice-aware.
+
+    * An operand whose transitive consumers (through convert/bitcast/copy/
+      reshape) inside the fused computation are all dynamic-slice/gather ops
+      is charged at the sliced size — this is how scan-over-layers reads one
+      layer's weights from the stacked parameter tensor.
+    * A fusion rooted (modulo converts) in dynamic-update-slice writes only
+      the update region: charge ~2x the update (read-modify-write) and do
+      not charge the aliased full buffer operand or result.
+    """
+    mf = re.search(r"calls=%?([\w.\-]+)", op.line)
+    sub_ops = comps.get(mf.group(1), []) if mf else []
+    by_name = {so.name: so for so in sub_ops}
+
+    def resolve_producer(name):
+        seen = set()
+        while name in by_name and by_name[name].opcode in _TRANSPARENT:
+            if name in seen:
+                break
+            seen.add(name)
+            prods = _operand_names(by_name[name].line)
+            if not prods:
+                break
+            name = prods[0]
+        return name
+
+    params = {}
+    for so in sub_ops:
+        if so.opcode == "parameter":
+            mnum = re.search(r"parameter\((\d+)\)", so.line)
+            if mnum:
+                params[so.name] = int(mnum.group(1))
+
+    # transitive consumers (through transparent ops) per op name
+    direct_consumers = {}
+    for so in sub_ops:
+        for nm in _operand_names(so.line):
+            direct_consumers.setdefault(nm, []).append(so)
+
+    def sink_consumers(name, depth=0):
+        out = []
+        for c in direct_consumers.get(name, []):
+            if c.opcode in _TRANSPARENT and depth < 6:
+                out.extend(sink_consumers(c.name, depth + 1))
+            else:
+                out.append(c)
+        return out
+
+    # identify DUS/scatter aliasing (both update a region of a buffer that
+    # the fusion result aliases)
+    dus_ops = [so for so in sub_ops
+               if so.opcode in ("dynamic-update-slice", "scatter")]
+    aliased_params = set()
+    dus_rooted = False
+    update_bytes = 0.0
+    result_elems = _shape_elems(op.result)
+    for so in dus_ops:
+        if _shape_elems(so.result) != result_elems:
+            continue
+        dus_rooted = True
+        names = _operand_names(so.line)
+        if names:
+            buf = resolve_producer(names[0])
+            if buf in params:
+                aliased_params.add(buf)
+        upd_idx = 2 if so.opcode == "scatter" else 1
+        if len(names) > upd_idx:
+            upd = resolve_producer(names[upd_idx])
+            upd_shape = (by_name[upd].result if upd in by_name
+                         else lookup(upd))
+            if upd_shape:
+                update_bytes += 2 * _shape_bytes(upd_shape)
+
+    operand_names = _operand_names(op.line)
+    result_bytes = _shape_bytes(op.result)
+    total = 0.0
+    for pname, pnum in params.items():
+        if pname in aliased_params:
+            continue
+        sinks = [c for c in sink_consumers(pname)]
+        if sinks and all(c.opcode in ("dynamic-slice", "gather", "slice")
+                         for c in sinks):
+            total += sum(_shape_bytes(c.result) for c in sinks)
+        elif not sinks:
+            # pure transparent chain to ROOT (convert/bitcast-only fusion):
+            # the read is bounded by what the fusion emits
+            if pnum < len(operand_names):
+                shp = lookup(operand_names[pnum])
+                if shp:
+                    total += min(_shape_bytes(shp), result_bytes)
+        else:
+            if pnum < len(operand_names):
+                shp = lookup(operand_names[pnum])
+                if shp:
+                    total += _shape_bytes(shp)
+    if dus_rooted:
+        total += update_bytes
+    else:
+        total += _shape_bytes(op.result)
+    return total
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps = _split_computations(hlo)
+
+    # symbol table: op name -> result shape string (global; names are unique
+    # in optimized HLO output)
+    table: Dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            table[op.name] = op.result
+
+    def lookup(name: str) -> Optional[str]:
+        return table.get(name)
+
+    def operand_bytes(op: Op) -> int:
+        total = 0
+        for name in _operand_names(op.line):
+            shp = lookup(name)
+            if shp is not None:
+                total += _shape_bytes(shp)
+        return total
+
+    # entry = computation named on the ENTRY line, else "main"-like
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            entry = m.group(1) if m else None
+            break
+    if entry is None or entry not in comps:
+        candidates = [c for c in comps if c.startswith("main")]
+        entry = candidates[0] if candidates else next(iter(comps))
+
+    memo: Dict[Tuple[str, bool], Dict[str, float]] = {}
+
+    def walk(comp: str, fused: bool) -> Dict[str, float]:
+        key = (comp, fused)
+        if key in memo:
+            return memo[key]
+        totals = {"flops": 0.0, "bytes": 0.0, "wire": 0.0}
+        coll: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+        counts: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+        memo[key] = {**totals}  # cycle guard
+        for op in comps.get(comp, []):
+            oc = op.opcode
+            base = oc.replace("-start", "").replace("-done", "")
+            if oc.endswith("-done"):
+                continue
+            if oc == "while":
+                t = _TRIP.search(op.line)
+                mult = float(t.group(1)) if t else 1.0
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                if mb and mb.group(1) in comps:
+                    sub = walk(mb.group(1), fused)
+                    for k in totals:
+                        totals[k] += mult * sub[k]
+                    for c in COLLECTIVES:
+                        coll[c] += mult * sub.get("coll_" + c, 0.0)
+                        counts[c] += mult * sub.get("cnt_" + c, 0.0)
+                # NOTE: loop-carry traffic is captured by the ops inside the
+                # body (dynamic-slice reads of xs, the ops producing the new
+                # carry); counting the while tuple itself would multiply the
+                # whole stacked parameter tensor by the trip count.
+                continue
+            if oc == "fusion":
+                mf = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if mf and mf.group(1) in comps:
+                    sub = walk(mf.group(1), True)  # dots-only inside fusions
+                    totals["flops"] += sub["flops"]
+                    totals["wire"] += sub["wire"]
+                    for c in COLLECTIVES:
+                        coll[c] += sub.get("coll_" + c, 0.0)
+                        counts[c] += sub.get("cnt_" + c, 0.0)
+                if not fused:
+                    totals["bytes"] += _fusion_bytes(op, comps, table, lookup)
+                continue
+            if oc in ("call", "conditional", "async-start"):
+                for sub_name in _CALLED.findall(op.line):
+                    if sub_name in comps:
+                        sub = walk(sub_name, fused)
+                        for k in totals:
+                            totals[k] += sub[k]
+                        for c in COLLECTIVES:
+                            coll[c] += sub.get("coll_" + c, 0.0)
+                            counts[c] += sub.get("cnt_" + c, 0.0)
+                continue
+            if base in COLLECTIVES:
+                wire = _collective_wire(op)
+                totals["wire"] += wire
+                coll[base] += wire
+                counts[base] += 1
+                if not fused:
+                    totals["bytes"] += _shape_bytes(op.result)
+                continue
+            if oc in ("dot", "convolution"):
+                totals["flops"] += _dot_flops(op, lookup)
+                if not fused:
+                    totals["bytes"] += _shape_bytes(op.result) + operand_bytes(op)
+                continue
+            if oc in _SLICE_OPS:
+                if not fused:
+                    totals["bytes"] += _shape_bytes(op.result)
+                continue
+            if oc in _UPDATE_OPS:
+                if not fused:
+                    names = _operand_names(op.line)
+                    upd = (lookup(names[1]) if len(names) > 1 else None)
+                    if oc == "scatter" and len(names) > 2:
+                        upd = lookup(names[2])
+                    totals["bytes"] += (2 * _shape_bytes(upd) if upd
+                                        else _shape_bytes(op.result))
+                continue
+            if oc in _FREE_OPS:
+                if oc == "custom-call" and not fused:
+                    totals["bytes"] += _shape_bytes(op.result) + operand_bytes(op)
+                continue
+            # generic elementwise / reduce / gather / scatter / dus ops
+            totals["flops"] += _shape_elems(op.result)
+            if not fused:
+                totals["bytes"] += _shape_bytes(op.result) + operand_bytes(op)
+        result = dict(totals)
+        for c in COLLECTIVES:
+            result["coll_" + c] = coll[c]
+            result["cnt_" + c] = counts[c]
+        memo[key] = result
+        return result
+
+    return walk(entry, False)
+
+
+def summarize(hlo: str) -> Dict[str, object]:
+    r = analyze(hlo)
+    return {
+        "flops": r["flops"],
+        "hbm_bytes": r["bytes"],
+        "collective_wire_bytes": r["wire"],
+        "collective_breakdown": {c: r["coll_" + c] for c in COLLECTIVES},
+        "collective_counts": {c: r["cnt_" + c] for c in COLLECTIVES},
+    }
+
+
+def top_contributors(hlo: str, key: str = "bytes", n: int = 25):
+    """Largest per-op contributors (with loop multipliers) — §Perf debugging."""
+    comps = _split_computations(hlo)
+    table = {}
+    for ops in comps.values():
+        for op in ops:
+            table[op.name] = op.result
+    lookup = table.get
+
+    def operand_bytes(op):
+        return sum(_shape_bytes(lookup(nm)) for nm in _operand_names(op.line)
+                   if lookup(nm) is not None)
+
+    # compute multiplier per computation via while nesting
+    mults = {c: 0.0 for c in comps}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            entry = m.group(1) if m else None
+            break
+    if entry is None or entry not in comps:
+        entry = next(iter(comps))
+
+    import collections
+    queue = collections.deque([(entry, 1.0, False)])
+    seen = set()
+    items = []
+    while queue:
+        comp, mult, fused = queue.popleft()
+        if (comp, mult, fused) in seen:
+            continue
+        seen.add((comp, mult, fused))
+        for op in comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                t = _TRIP.search(op.line)
+                m2 = float(t.group(1)) if t else 1.0
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                if mb and mb.group(1) in comps:
+                    queue.append((mb.group(1), mult * m2, fused))
+                continue
+            if oc == "fusion":
+                mf = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if mf and mf.group(1) in comps:
+                    queue.append((mf.group(1), mult, True))
+                if not fused:
+                    b = _fusion_bytes(op, comps, table, lookup)
+                    items.append((mult * b, mult, op.opcode, op.line[:160]))
+                continue
+            if oc in ("call", "conditional"):
+                for sub in _CALLED.findall(op.line):
+                    if sub in comps:
+                        queue.append((sub, mult, fused))
+                continue
+            if fused:
+                if oc in ("dot", "convolution"):
+                    items.append((mult * _dot_flops(op, lookup), mult,
+                                  "FLOPS:" + oc, op.line[:160]))
+                continue
+            if oc in _FREE_OPS or oc.endswith("-done"):
+                continue
+            if oc in _SLICE_OPS:
+                b = _shape_bytes(op.result)
+            elif oc in _UPDATE_OPS:
+                names = _operand_names(op.line)
+                upd = lookup(names[1]) if len(names) > 1 else None
+                b = 2 * _shape_bytes(upd) if upd else _shape_bytes(op.result)
+            else:
+                b = _shape_bytes(op.result) + operand_bytes(op)
+            items.append((mult * b, mult, op.opcode, op.line[:160]))
+    items.sort(reverse=True)
+    return items[:n]

@@ -1,0 +1,143 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every cell.
+
+``input_specs(cfg, shape)`` builds the batch stand-ins (weak-type-correct,
+shardable, no allocation); ``batch_shardings`` / ``cache_shardings`` map them
+onto the mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import Model
+from repro.models.model_config import ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extras(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    ex: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        ex["frames"] = _sds((B, cfg.source_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        ex["vision_embeds"] = _sds((B, cfg.num_vision_tokens, cfg.d_model),
+                                   jnp.float32)
+        ex["mrope_positions"] = _sds((B, 3, S), jnp.int32)
+    return ex
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.phase == "train":
+        return {"tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32), **_extras(cfg, B, S)}
+    if shape.phase == "prefill":
+        return {"tokens": _sds((B, S), jnp.int32), **_extras(cfg, B, S)}
+    if shape.phase == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32),
+                "pos": _sds((B,), jnp.int32)}
+    raise ValueError(shape.phase)
+
+
+def abstract_cache(cfg: ModelConfig, B: int, max_len: int):
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(B, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+def _dp(mesh):
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def _axis_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def _batch_axes(mesh, batch: int):
+    dp = _dp(mesh)
+    return dp if batch % _axis_size(mesh, dp) == 0 else None
+
+
+def batch_shardings(mesh, cfg: ModelConfig, specs: Dict[str, Any]):
+    out = {}
+    full = tuple(n for n in ("pod", "data", "model") if n in mesh.axis_names)
+    for name, s in specs.items():
+        if (cfg.parallelism == "ep"
+                and s.shape[0] % _axis_size(mesh, full) == 0):
+            b_ax = full
+        else:
+            b_ax = _batch_axes(mesh, s.shape[0])
+        spec = (b_ax,) + (None,) * (len(s.shape) - 1)
+        out[name] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(mesh, cfg: ModelConfig, cache_abstract):
+    """Decode-cache shardings: batch over dp; kv-heads over model when
+    divisible, else sequence over model (flash-decode style); SSM inner dim
+    over model."""
+    tp = _axis_size(mesh, ("model",)) if "model" in mesh.axis_names else 1
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        kind = path[-1]
+        if kind in ("kv", "attn", "cross_kv"):
+            # (..., B, Smax, KV, hd)
+            nb = len(shape) - 4
+            B, Smax, KV = shape[-4], shape[-3], shape[-2]
+            b_ax = _batch_axes(mesh, B)
+            if KV % tp == 0:
+                spec = (None,) * nb + (b_ax, None, ("model",), None)
+            elif Smax % tp == 0:
+                spec = (None,) * nb + (b_ax, ("model",), None, None)
+            else:
+                spec = (None,) * nb + (b_ax, None, None, None)
+        elif kind == "conv":
+            # (..., B, K-1, d_inner)
+            nb = len(shape) - 3
+            b_ax = _batch_axes(mesh, shape[-3])
+            d_in = shape[-1]
+            spec = (None,) * nb + (b_ax, None,
+                                   ("model",) if d_in % tp == 0 else None)
+        elif kind == "h":
+            # mamba1 (..., B, d_inner, N); mamba2 (..., B, nh, hd, N)
+            if cfg.mamba_version == 1:
+                nb = len(shape) - 3
+                b_ax = _batch_axes(mesh, shape[-3])
+                d_in = shape[-2]
+                spec = (None,) * nb + (b_ax,
+                                       ("model",) if d_in % tp == 0 else None,
+                                       None)
+            else:
+                nb = len(shape) - 4
+                b_ax = _batch_axes(mesh, shape[-4])
+                nh = shape[-3]
+                spec = (None,) * nb + (b_ax,
+                                       ("model",) if nh % tp == 0 else None,
+                                       None, None)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, P(*spec))
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            t = type(tree)
+            return t(walk(v, path) for v in tree)
+        return leaf_spec(path, tree)
+
+    return walk(cache_abstract, ())

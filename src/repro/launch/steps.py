@@ -1,0 +1,87 @@
+"""Train / prefill / serve step builders (the functions the dry-run lowers).
+
+These are the production entry points: mixed-precision forward, chunked CE,
+optional gradient accumulation, optimizer update, and (for serving) KV-cache
+decode. Sharding comes from in_shardings/out_shardings + the logical
+constraints inside the model (launch/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.model_config import ModelConfig
+from repro.optim import make_optimizer
+from repro.optim.schedule import cosine_schedule
+
+
+def pick_optimizer_name(cfg: ModelConfig) -> str:
+    total, _ = cfg.param_counts()
+    return "adafactor" if total > 60e9 else "adamw"
+
+
+def make_train_step(cfg: ModelConfig, optimizer_name: Optional[str] = None,
+                    micro_steps: int = 1, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000):
+    """Returns (train_step, opt.init). train_step(params, opt_state, step,
+    batch) -> (params, opt_state, step+1, metrics)."""
+    model = Model(cfg)
+    opt = make_optimizer(optimizer_name or pick_optimizer_name(cfg))
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, step, batch):
+        if micro_steps > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((micro_steps, x.shape[0] // micro_steps)
+                                    + x.shape[1:]), batch)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / micro_steps, grads)
+            loss = loss / micro_steps
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        lr = cosine_schedule(step, warmup, total_steps, peak_lr)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        out = {"loss": loss, "lr": lr, "step": step}
+        out.update(metrics)
+        return params, opt_state, step + 1, out
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True):
+    """One decode iteration: logits for the current token -> next token."""
+    model = Model(cfg)
+
+    def serve_step(params, cache, batch):
+        tokens, pos = batch["tokens"], batch["pos"]
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return cache, next_tok[:, None], pos + 1
+
+    return serve_step

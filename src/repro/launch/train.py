@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container run with ``--smoke`` (reduced config, real training);
+on a TPU cluster the same entry point drives the production mesh (the mesh
+axes come from ``make_production_mesh`` and shardings from
+``launch/sharding.py`` — exactly what the dry-run validates).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.configs.shapes import SMOKE_SHAPES, SHAPES, ShapeSpec
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.runtime.driver import DriverConfig, TrainDriver
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b",
+                    choices=[a for a in ARCHITECTURES if a != "kineticsim"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    train_step, opt = make_train_step(cfg)
+
+    def wrapped(params, opt_state, step, batch):
+        with shd.activate(mesh):
+            return train_step(params, opt_state, step, batch)
+
+    jstep = jax.jit(wrapped, donate_argnums=(0, 1))
+    driver = TrainDriver(
+        cfg, shape, jstep, opt.init,
+        DriverConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                     checkpoint_dir=args.ckpt_dir))
+    out = driver.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"arch={cfg.name} steps={out['step']} "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Chunked (flash-style) attention with GQA, sliding window, softcap, M-RoPE.
+
+Training/prefill uses a blockwise online-softmax implementation: the score
+matrix is never materialized beyond (q_chunk x kv_chunk) tiles, and causal /
+sliding-window structure skips out-of-range KV blocks *statically* (the KV
+loop length is computed per Q chunk at trace time), so the compiled FLOPs
+reflect only the needed blocks. Decode uses a dense single-row path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class AttnDims(NamedTuple):
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+
+def attn_init(key, d_model, dims: AttnDims, *, qkv_bias=False, dtype=jnp.float32):
+    H, KV, hd = dims
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers._init(ks[0], (d_model, H * hd), dtype=dtype),
+        "wk": layers._init(ks[1], (d_model, KV * hd), dtype=dtype),
+        "wv": layers._init(ks[2], (d_model, KV * hd), dtype=dtype),
+        "wo": layers._init(ks[3], (H * hd, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, dims: AttnDims):
+    B, T, _ = x.shape
+    H, KV, hd = dims
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return (q.reshape(B, T, H, hd), k.reshape(B, T, KV, hd),
+            v.reshape(B, T, KV, hd))
+
+
+def _block_scores(q, k, scale, cap):
+    # q: [B, qc, KV, G, hd]; k: [B, kc, KV, hd] -> scores [B, KV, G, qc, kc]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return layers.softcap(s, cap)
+
+
+def _chunk(T: int, target: int) -> int:
+    c = min(target, T)
+    while T % c:
+        c -= 1
+    return c
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Blockwise attention. q: [B,T,H,hd]; k,v: [B,S,KV,hd] (GQA aware)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    qc = _chunk(T, q_chunk)
+    kc = _chunk(S, kv_chunk)
+    nq = T // qc
+    q = q.reshape(B, nq, qc, KV, G, hd)
+    nk_total = S // kc
+    k = k.reshape(B, nk_total, kc, KV, hd)
+    v = v.reshape(B, nk_total, kc, KV, hd)
+    offset = S - T if causal else 0  # self-attn on a suffix (prefill continuation)
+
+    out_chunks = []
+    for qi in range(nq):
+        # bf16 operands / f32 accumulation (EXPERIMENTS §Perf: f32 operand
+        # casts materialized hidden-sized f32 q/k/v and forced f32 cotangent
+        # all-reduces at every TP boundary).
+        q_blk = q[:, qi]
+        q_pos = offset + qi * qc + jnp.arange(qc)
+        if causal:
+            hi = min(nk_total, (offset + (qi + 1) * qc + kc - 1) // kc)
+        else:
+            hi = nk_total
+        lo = 0
+        if window is not None and causal:
+            lo = max(0, (offset + qi * qc - window) // kc)
+        n_blocks = hi - lo
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            k_blk, v_blk, k_start = inputs
+            s = _block_scores(q_blk, k_blk, scale, cap)
+            k_pos = k_start + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        k_starts = (lo + jnp.arange(n_blocks)) * kc
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (k[:, lo:hi].swapaxes(0, 1), v[:, lo:hi].swapaxes(0, 1), k_starts),
+        )
+        l = jnp.maximum(l, 1e-37)
+        out = (acc / l[..., None])  # [B, KV, G, qc, hd]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, KV * G, hd)
+        out_chunks.append(out)
+    o = jnp.concatenate(out_chunks, axis=1) if nq > 1 else out_chunks[0]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, cap=None,
+                     scale=None):
+    """Single-token attention against a cache.
+
+    q: [B,1,H,hd]; k_cache/v_cache: [B,Smax,KV,hd]; pos: int32[B] index of the
+    current token (cache entries > pos are invalid).
+    """
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    qh = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = layers.softcap(s, cap)
+    k_pos = jnp.arange(Smax)[None, :]  # [1, Smax]
+    mask = k_pos <= pos[:, None]
+    if window is not None:
+        mask &= (pos[:, None] - k_pos) < window
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_block(
+    params, x, dims: AttnDims, *,
+    positions=None, mrope_positions=None, rope_theta=10000.0,
+    causal=True, window=None, cap=None, scale=None, use_rope=True,
+    cache=None, cache_pos=None,
+):
+    """Full attention sub-layer: project -> rope -> attend -> out-proj.
+
+    Train/prefill: cache=None -> flash path; returns (out, new_kv or None).
+    Decode: cache=(k_cache, v_cache), cache_pos int32[B] -> dense path;
+    returns (out, (k_cache, v_cache) updated).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(params, x, dims)
+    q, k, v = (layers.grad_cast(q), layers.grad_cast(k),
+               layers.grad_cast(v))
+    if use_rope:
+        if mrope_positions is not None:
+            q = layers.apply_mrope(q, mrope_positions, rope_theta)
+            k = layers.apply_mrope(k, mrope_positions, rope_theta)
+        else:
+            if positions is None:
+                positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+            q = layers.apply_rope(q, positions, rope_theta)
+            k = layers.apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        o = flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                            scale=scale)
+        new_cache = (k, v)
+    else:
+        k_cache, v_cache = cache
+        # insert current k/v at cache_pos (T==1 decode). A where() over the
+        # cache rewrites the whole buffer every step (EXPERIMENTS §Perf
+        # deepseek decode iteration 1); the vmapped dynamic_update_slice
+        # lowers to a scatter touching only the new token's row.
+        bidx = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[bidx, cache_pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, cache_pos].set(v[:, 0].astype(v_cache.dtype))
+        o = decode_attention(q, k_cache, v_cache, cache_pos, window=window,
+                             cap=cap, scale=scale)
+        new_cache = (k_cache, v_cache)
+    out = o.reshape(B, T, -1) @ params["wo"]
+    return out, new_cache
+
+
+def cross_attention_block(params, x, dims: AttnDims, enc_kv, *, cap=None):
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    B, T, _ = x.shape
+    H, KV, hd = dims
+    q = (x @ params["wq"]).reshape(B, T, H, hd)
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype).reshape(H, hd)
+    k, v = enc_kv
+    o = flash_attention(q, k, v, causal=False, cap=cap)
+    return o.reshape(B, T, -1) @ params["wo"]
+
+
+def encode_kv(params, enc_out, dims: AttnDims):
+    """Project encoder output into cross-attention K/V once per sequence."""
+    B, S, _ = enc_out.shape
+    H, KV, hd = dims
+    k = (enc_out @ params["wk"]).reshape(B, S, KV, hd)
+    v = (enc_out @ params["wv"]).reshape(B, S, KV, hd)
+    if "bk" in params:
+        k = k + params["bk"].astype(k.dtype).reshape(KV, hd)
+        v = v + params["bv"].astype(v.dtype).reshape(KV, hd)
+    return k, v

@@ -1,0 +1,223 @@
+"""Shared neural layers (functional, explicit param pytrees)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_cv(x, scale, eps):
+    y, _ = _rmsnorm_fwd(x, scale, eps)
+    return y
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    y = (x32 * rstd * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    return y, (x, scale, rstd)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    # Compact backward (EXPERIMENTS §Perf kimi iteration 2): autodiff of the
+    # f32-internal forward materializes ~8 hidden-sized f32 tensors per norm
+    # (and forces f32 TP all-reduces of cotangents); this hand-written VJP
+    # keeps the boundary tensors in the compute dtype and saves rstd instead
+    # of recomputing the variance.
+    x, scale, rstd = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    s1 = 1.0 + scale.astype(jnp.float32)
+    gy = g32 * s1
+    proj = jnp.mean(gy * x32, axis=-1, keepdims=True)  # [..., 1] f32
+    dx = (rstd * (gy - x32 * (proj * rstd * rstd))).astype(x.dtype)
+    dscale = jnp.sum(g32 * x32 * rstd,
+                     axis=tuple(range(x.ndim - 1))).astype(scale.dtype)
+    return dx, dscale
+
+
+_rmsnorm_cv.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(params, x, eps=1e-6):
+    return _rmsnorm_cv(x, params["scale"], eps)
+
+
+@jax.custom_vjp
+def grad_cast(x):
+    """Identity whose cotangent is cast back to the primal dtype.
+
+    Placed at TP boundaries (e.g. q/k/v projection outputs) it keeps f32
+    accumulation *inside* attention while guaranteeing the dgrad dots, their
+    weight all-gathers, and the dX all-reduces run in the compute dtype —
+    i.e. structural bf16 gradient compression (EXPERIMENTS §Perf).
+    """
+    return x
+
+
+def _gc_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gc_bwd(marker, g):
+    return (g.astype(marker.dtype),)
+
+
+grad_cast.defvjp(_gc_fwd, _gc_bwd)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (gemma2)
+# ---------------------------------------------------------------------------
+def softcap(x, cap: Optional[float]):
+    if cap is None or cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., T, H, hd]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    angles = angles[..., None, :]  # add head axis -> [..., T, 1, hd/2]
+    # Trig in f32; rotation applied in the compute dtype. An f32 rotation
+    # here turns the q/k/v projection dgrads (and their TP all-reduces) f32
+    # (EXPERIMENTS §Perf kimi iteration 3).
+    sin = jnp.sin(angles).astype(x.dtype)
+    cos = jnp.cos(angles).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def apply_mrope(x, positions_thw, theta: float = 10000.0,
+                sections=(0.25, 0.375, 0.375)):
+    """Multimodal RoPE (Qwen2-VL §3): rotary dims split into (t, h, w) sections.
+
+    positions_thw: int32[..., 3, T] — temporal / height / width position ids
+    (for pure text all three are the token index). Each section of the
+    frequency spectrum rotates by its own coordinate.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    n_w = half - n_t - n_h
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [half]
+    pos_t = positions_thw[..., 0, :]
+    pos_h = positions_thw[..., 1, :]
+    pos_w = positions_thw[..., 2, :]
+    # Build per-dim positions by section.
+    sec = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((n_w,), 2, jnp.int32),
+    ])
+    pos_stack = jnp.stack([pos_t, pos_h, pos_w], axis=-1)  # [..., T, 3]
+    pos_per_dim = jnp.take_along_axis(
+        pos_stack[..., None, :],  # [..., T, 1, 3]
+        jnp.broadcast_to(sec[None, :, None], pos_stack.shape[:-1] + (half, 1)),
+        axis=-1,
+    )[..., 0]  # [..., T, half]
+    angles = pos_per_dim.astype(jnp.float32) * freqs  # [..., T, half]
+    angles = angles[..., None, :]
+    sin = jnp.sin(angles).astype(x.dtype)
+    cos = jnp.cos(angles).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / vanilla GELU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, activation="swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_out": _init(ks[2], (d_ff, d_model), dtype=dtype)}
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = _init(ks[0], (d_model, d_ff), dtype=dtype)
+        p["w_up"] = _init(ks[1], (d_model, d_ff), dtype=dtype)
+    else:
+        p["w_up"] = _init(ks[1], (d_model, d_ff), dtype=dtype)
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(params, x, activation="swiglu"):
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_out"]
+    if activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * (x @ params["w_up"])
+        return h @ params["w_out"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"], approximate=False)
+    return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    # ~N(0, d^-1/2): keeps tied-unembedding logits O(1) at init
+    return {"table": _init(key, (vocab, d_model), scale=d_model ** -0.5,
+                           dtype=dtype)}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, *, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    return x @ table.astype(x.dtype).T

@@ -1,0 +1,198 @@
+"""Model facade: init / loss / prefill / decode for every architecture."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import sharding
+from repro.models import attention, layers, transformer
+from repro.models.model_config import ModelConfig
+
+
+def cast_params(params, cfg: ModelConfig):
+    """Mixed precision: cast matrix params to the compute dtype; keep small
+    vectors (norm scales, biases, SSM A/dt/D) in float32 for numerics."""
+    cdt = cfg.dtype("compute")
+
+    def cast(leaf):
+        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf.astype(cdt)
+        return leaf
+
+    return jax.tree_util.tree_map(cast, params)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return transformer.init_params(key, self.cfg)
+
+    def abstract_params(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(lambda k: transformer.init_params(k, self.cfg),
+                              key)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Chunked cross-entropy LM loss (logits never fully materialized)."""
+        cfg = self.cfg
+        params = cast_params(params, cfg)
+        hidden, aux = transformer.forward_train(params, cfg, batch)
+        labels = batch["labels"]
+        B, T, D = hidden.shape
+        c = min(cfg.loss_chunk, T)
+        while T % c:
+            c -= 1
+        nc = T // c
+        hidden = hidden.reshape(B, nc, c, D).swapaxes(0, 1)
+        labels_c = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+        def ce_chunk(carry, xs):
+            h, y = xs
+            logits = transformer.logits_fn(params, cfg, h)  # [B, c, V] f32
+            logits = sharding.constrain(logits, "dp", None, "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+            return carry + jnp.sum(lse - gold), None
+
+        total, _ = jax.lax.scan(
+            ce_chunk, jnp.zeros((), jnp.float32), (hidden, labels_c))
+        ntok = B * T
+        loss = total / ntok + 0.01 * aux
+        return loss, {"ce": total / ntok, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch):
+        """Forward over a full prompt; returns (last_logits, seq-length cache)."""
+        cfg = self.cfg
+        params = cast_params(params, cfg)
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        if cfg.family == "encdec":
+            enc_out = transformer.encode(params, cfg, batch["frames"])
+            x = transformer.embed_tokens(params, cfg, tokens)
+            x = x + transformer._sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+            x, self_kv = transformer.decode_stack(
+                params, cfg, x, enc_out=enc_out, positions=positions)
+            cache = {"kv": self_kv, "cross_kv": self._cross_kv(params, enc_out)}
+        else:
+            mrope = batch.get("mrope_positions") if cfg.mrope else None
+            x = transformer.embed_tokens(params, cfg, tokens,
+                                         batch.get("vision_embeds"))
+            x, _, cache = transformer.backbone(
+                params, cfg, x, positions=positions, mrope_positions=mrope,
+                cache=None, cache_pos=None, collect=True)
+        logits = transformer.logits_fn(params, cfg, x[:, -1:, :])
+        return logits, cache
+
+    def _cross_kv(self, params, enc_out):
+        cfg = self.cfg
+
+        def f(carry, p):
+            return carry, attention.encode_kv(p["cross"], enc_out,
+                                              cfg.attn_dims)
+
+        _, ckv = jax.lax.scan(f, 0, params["blocks"])
+        return ckv
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        """Zeroed decode cache sized for ``max_len`` positions."""
+        cfg = self.cfg
+        cdt = cfg.dtype("compute")
+        nG, gl = cfg.num_groups, cfg.group_size
+        H, KV, hd = cfg.attn_dims
+
+        def kv(extra=()):
+            shape = extra + (batch, max_len, KV, hd)
+            return (jnp.zeros(shape, cdt), jnp.zeros(shape, cdt))
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            if cfg.unroll_decode:
+                extra = () if gl == 1 else (gl,)
+                return {"kv": tuple(kv(extra) for _ in range(nG))}
+            extra = (nG,) if gl == 1 else (nG, gl)
+            return {"kv": kv(extra)}
+        if cfg.family == "ssm":
+            sd = cfg.ssm_dims
+            conv, h = _ssm_zeros(sd, batch, nG, gl, cdt)
+            return {"conv": conv, "h": h}
+        if cfg.family == "hybrid":
+            sd = cfg.ssm_dims
+            conv, h = _ssm_zeros(sd, batch, nG, gl, cdt)
+            return {"conv": conv, "h": h, "attn": kv((nG,))}
+        if cfg.family == "encdec":
+            L = cfg.num_layers
+            return {
+                "kv": kv((L,)),
+                "cross_kv": (
+                    jnp.zeros((L, batch, cfg.source_len, KV, hd), cdt),
+                    jnp.zeros((L, batch, cfg.source_len, KV, hd), cdt),
+                ),
+            }
+        raise ValueError(cfg.family)
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: int32[B,1]; pos: int32[B]."""
+        cfg = self.cfg
+        params = cast_params(params, cfg)
+        positions = pos[:, None]
+        x = transformer.embed_tokens(params, cfg, tokens)
+        if cfg.family == "encdec":
+            x = x + jnp.take(
+                transformer._sinusoidal(int(cache["kv"][0].shape[2]),
+                                        cfg.d_model),
+                pos, axis=0)[:, None, :].astype(x.dtype)
+            x, new_kv = transformer.decode_stack(
+                params, cfg, x, positions=positions, cache=cache["kv"],
+                cache_pos=pos, cross_kv=cache["cross_kv"])
+            new_cache = {"kv": new_kv, "cross_kv": cache["cross_kv"]}
+        else:
+            mrope = None
+            if cfg.mrope:
+                mrope = jnp.broadcast_to(pos[:, None, None],
+                                         (pos.shape[0], 3, 1)).astype(jnp.int32)
+            if (cfg.family in ("dense", "vlm", "moe") and cfg.unroll_decode
+                    and isinstance(cache.get("kv"), tuple)):
+                new_kv = []
+                for g in range(cfg.num_groups):
+                    gp = jax.tree_util.tree_map(lambda a: a[g],
+                                                params["blocks"])
+                    x, _, ncache = transformer.apply_group_external(
+                        cfg, {}, gp, x, positions=positions,
+                        mrope_positions=mrope,
+                        group_cache={"kv": cache["kv"][g]}, cache_pos=pos)
+                    new_kv.append(ncache["kv"])
+                new_cache = {"kv": tuple(new_kv)}
+            else:
+                x, _, new_cache = transformer.backbone(
+                    params, cfg, x, positions=positions,
+                    mrope_positions=mrope, cache=cache, cache_pos=pos)
+        logits = transformer.logits_fn(params, cfg, x)
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    def param_count(self, params=None) -> int:
+        tree = params if params is not None else self.abstract_params()
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(tree))
+
+
+def _ssm_zeros(sd, batch, nG, gl, cdt):
+    extra = (nG,) if gl == 1 else (nG, gl)
+    conv = jnp.zeros(extra + (batch, sd.d_conv - 1, sd.d_inner), jnp.float32)
+    if sd.version == 1:
+        h = jnp.zeros(extra + (batch, sd.d_inner, sd.d_state), jnp.float32)
+    else:
+        h = jnp.zeros(extra + (batch, sd.num_heads, sd.head_dim, sd.d_state),
+                      jnp.float32)
+    return conv, h

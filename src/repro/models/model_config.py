@@ -1,0 +1,183 @@
+"""Architecture configuration dataclass shared by all ten assigned archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.attention import AttnDims
+from repro.models.moe import MoEDims
+from repro.models.ssm import SSMDims
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    d_ff: int = 256
+    vocab_size: int = 1024
+
+    norm: str = "rmsnorm"
+    activation: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    mrope: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    sliding_window: int = 0      # >0: window size for "local" layers
+    window_pattern: int = 0      # gemma2: group of N layers, first N-1 local
+    post_norm: bool = False      # gemma2 post-layer norms
+    embed_scale: bool = False    # gemma: scale embeddings by sqrt(d_model)
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_group_size: int = 512
+    capacity_factor: float = 1.25
+
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    mamba_version: int = 1
+    # 'sequential' (TPU-optimized persistent-state scan) or 'associative'
+    # (paper-faithful log-depth scan) — see EXPERIMENTS.md §Perf.
+    ssm_scan: str = "sequential"
+
+    # Hybrid (zamba2): one weight-tied shared attention block applied at the
+    # start of every group of `attn_every` SSM layers.
+    attn_every: int = 0
+
+    # Encoder-decoder (whisper)
+    encoder_layers: int = 0
+    source_len: int = 1500
+
+    # VLM stub frontend
+    num_vision_tokens: int = 0
+
+    # Parallelism layout: "tp" (Megatron TP over the model axis) or
+    # "ep" (MoE: pure DP over every axis + expert parallelism; no TP).
+    parallelism: str = "tp"
+
+    # Numerics / memory
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"          # none | full | dots
+    loss_chunk: int = 1024       # CE computed in seq chunks of this size
+
+    supports_long_context: bool = False  # sub-quadratic decode state
+    # Unroll the layer loop in decode and keep each layer's KV cache as its
+    # own donated buffer: scan-collected caches rewrite a full layer slice
+    # per token (EXPERIMENTS §Perf deepseek decode iteration 2).
+    unroll_decode: bool = True
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab_size(self) -> int:
+        """Vocab padded to a multiple of 512 (Megatron-style): keeps the
+        embedding shardable by any mesh axis <=512 and MXU-aligned. Logit
+        columns beyond vocab_size are masked in logits_fn."""
+        return (self.vocab_size + 511) // 512 * 512
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def attn_dims(self) -> AttnDims:
+        return AttnDims(self.num_heads, self.num_kv_heads, self.resolved_head_dim)
+
+    @property
+    def moe_dims(self) -> Optional[MoEDims]:
+        if not self.num_experts:
+            return None
+        return MoEDims(self.num_experts, self.top_k, self.d_ff,
+                       self.capacity_factor, self.moe_group_size)
+
+    @property
+    def ssm_dims(self) -> Optional[SSMDims]:
+        if not self.ssm_state:
+            return None
+        return SSMDims(
+            d_inner=self.ssm_expand * self.d_model,
+            d_state=self.ssm_state,
+            d_conv=self.ssm_conv,
+            dt_rank=max(self.d_model // 16, 1),
+            head_dim=self.ssm_head_dim,
+            version=self.mamba_version,
+        )
+
+    @property
+    def group_size(self) -> int:
+        """Layers per scan group (pattern periodicity)."""
+        if self.family == "hybrid" and self.attn_every:
+            return self.attn_every
+        if self.window_pattern:
+            return self.window_pattern
+        return 1
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.group_size == 0, (
+            f"{self.name}: num_layers {self.num_layers} not divisible by "
+            f"group size {self.group_size}")
+        return self.num_layers // self.group_size
+
+    def dtype(self, which: str):
+        return _DTYPES[getattr(self, which + "_dtype")]
+
+    def layer_is_local(self, idx_in_group: int) -> bool:
+        """gemma2 pattern: local layers first in each group, last is global."""
+        if not self.window_pattern or not self.sliding_window:
+            return False
+        return idx_in_group < self.window_pattern - 1
+
+    # ---- parameter accounting for MODEL_FLOPS (6·N·D) ----
+    def param_counts(self) -> Tuple[int, int]:
+        """(total, active) non-embedding parameter counts."""
+        D, F = self.d_model, self.d_ff
+        H, KV, hd = self.num_heads, self.num_kv_heads, self.resolved_head_dim
+        attn = D * (H + 2 * KV) * hd + H * hd * D
+        total = active = 0
+        if self.family in ("dense", "vlm"):
+            mlp = 3 * D * F if self.activation in ("swiglu", "geglu") else 2 * D * F
+            per = attn + mlp
+            total = active = self.num_layers * per
+        elif self.family == "moe":
+            per_exp = 3 * D * F
+            router = D * self.num_experts
+            per_layer_total = attn + router + self.num_experts * per_exp
+            per_layer_active = attn + router + self.top_k * per_exp
+            total = self.num_layers * per_layer_total
+            active = self.num_layers * per_layer_active
+        elif self.family == "ssm":
+            sd = self.ssm_dims
+            di, N = sd.d_inner, sd.d_state
+            per = (D * 2 * di + sd.d_conv * di + di * (sd.dt_rank + 2 * N)
+                   + sd.dt_rank * di + di * N + di * D)
+            total = active = self.num_layers * per
+        elif self.family == "hybrid":
+            sd = self.ssm_dims
+            di, N = sd.d_inner, sd.d_state
+            per = (D * 2 * di + sd.d_conv * di + D * 2 * N + D * sd.num_heads
+                   + di * D)
+            shared = attn  # one weight-tied block
+            total = active = self.num_layers * per + shared
+        elif self.family == "encdec":
+            mlp = 2 * D * F
+            enc = self.encoder_layers * (attn + mlp)
+            dec = self.num_layers * (2 * attn + mlp)
+            total = active = enc + dec
+        embed = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        return total + embed, active + embed

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer with GShard-style grouped one-hot dispatch.
+
+The dispatch is deliberately the same TPU idiom as the market engine's order
+aggregation (DESIGN.md §4): token->expert assignment is materialized as a
+one-hot tensor and resolved with MXU contractions, and position-in-expert is
+a *prefix scan* over the assignment mask — the paper's aggregation + scan
+pattern applied to MoE routing.
+
+Experts are sharded over the "model"/"expert" mesh axis (EP); groups over the
+data axes. XLA inserts the all-to-alls from the sharding constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    num_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden width
+    capacity_factor: float = 1.25
+    group_size: int = 512      # tokens per dispatch group
+
+
+def moe_init(key, d_model, dims: MoEDims, dtype=jnp.float32):
+    E, F = dims.num_experts, dims.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": layers._init(ks[0], (d_model, E), dtype=jnp.float32),
+        "we_gate": layers._init(ks[1], (E, d_model, F), dtype=dtype),
+        "we_up": layers._init(ks[2], (E, d_model, F), dtype=dtype),
+        "we_out": layers._init(ks[3], (E, F, d_model), dtype=dtype),
+    }
+
+
+def capacity(dims: MoEDims, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * dims.top_k * dims.capacity_factor / dims.num_experts)
+    c = max(c, 4)
+    return (c + 3) // 4 * 4  # pad to a multiple of 4 lanes
+
+
+def moe_apply(params, x, dims: MoEDims):
+    """x: [B, T, D] -> ([B, T, D], aux_loss scalar)."""
+    B, T, D = x.shape
+    E, K = dims.num_experts, dims.top_k
+    n_tokens = B * T
+    g = min(dims.group_size, n_tokens)
+    while n_tokens % g:
+        g -= 1
+    G = n_tokens // g
+    C = capacity(dims, g)
+
+    xt = x.reshape(G, g, D)
+    # §Perf kimi iteration 1: groups over dp ONLY (a 256-way dp_sp group
+    # sharding forces SPMD into replicate-then-repartition against the
+    # (model x data)-sharded expert weights).
+    xt = sharding.constrain(xt, "dp", None, None)
+
+    # Router matmul in the compute dtype (an f32 cast here materializes a
+    # hidden-sized f32 tensor per layer); softmax still in f32.
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)     # [G, g, K]
+    # renormalize selected gates
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # GShard slot-by-slot position assignment (prefix scan over the mask —
+    # the paper's aggregation pattern).
+    dispatch = jnp.zeros((G, g, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, g, E, C), dtype=jnp.float32)
+    counts_so_far = jnp.zeros((G, 1, E), jnp.float32)
+    slots = jnp.arange(C, dtype=jnp.float32)
+    for j in range(K):
+        mask_j = jax.nn.one_hot(expert_idx[..., j], E, dtype=jnp.float32)
+        pos_j = jnp.cumsum(mask_j, axis=1) - mask_j + counts_so_far  # [G,g,E]
+        counts_so_far = counts_so_far + mask_j.sum(axis=1, keepdims=True)
+        within = (pos_j < C) & (mask_j > 0)
+        oh_pos = (pos_j[..., None] == slots) & within[..., None]  # [G,g,E,C]
+        dispatch = dispatch + oh_pos.astype(x.dtype)
+        combine = combine + oh_pos.astype(jnp.float32) * gate_vals[..., j, None, None]
+
+    # Dispatch: one-hot contraction onto expert slots (MXU binning).
+    slots_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)  # [G, E, C, D]
+    slots_in = sharding.constrain(slots_in, "dp_data", "tp", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", slots_in,
+                   params["we_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", slots_in,
+                   params["we_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    slots_out = jnp.einsum("gecf,efd->gecd", h,
+                           params["we_out"].astype(x.dtype))
+    slots_out = sharding.constrain(slots_out, "dp_data", "tp", None, None)
+
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), slots_out)
+    y = sharding.constrain(y, "dp", None, None)
+
+    # Load-balancing auxiliary loss (Switch/GShard form).
+    top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    frac_tokens = top1.mean(axis=1)          # [G, E]
+    frac_probs = probs.mean(axis=1)          # [G, E]
+    aux = (frac_tokens * frac_probs).sum(axis=-1).mean() * E
+    return y.reshape(B, T, D), aux
+
+
+def moe_param_counts(d_model, dims: MoEDims):
+    """(total, active) parameter counts for MODEL_FLOPS accounting."""
+    per_expert = 3 * d_model * dims.d_ff
+    total = dims.num_experts * per_expert + d_model * dims.num_experts
+    active = dims.top_k * per_expert + d_model * dims.num_experts
+    return total, active

@@ -1,0 +1,377 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / enc-dec, train & decode.
+
+Layers are scanned in *groups* (the pattern periodicity: 1 for homogeneous
+stacks, 2 for gemma2 local/global, 6 for zamba2's shared-attention cadence)
+with per-group stacked parameters, which keeps the compiled HLO independent
+of depth. Decode threads per-group caches through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import sharding
+from repro.models import attention, layers, moe, ssm
+from repro.models.model_config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig, idx_in_group: int):
+    """Params of one layer (attention/moe/ssm mixer + mlp + norms)."""
+    dt = cfg.dtype("param")
+    ninit, _ = layers.make_norm(cfg.norm)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["attn_norm"] = ninit(cfg.d_model, dt)
+        p["attn"] = attention.attn_init(ks[0], cfg.d_model, cfg.attn_dims,
+                                        qkv_bias=cfg.qkv_bias, dtype=dt)
+        p["mlp_norm"] = ninit(cfg.d_model, dt)
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(ks[1], cfg.d_model, cfg.moe_dims, dtype=dt)
+        else:
+            p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                       cfg.activation, dtype=dt)
+        if cfg.post_norm:
+            p["attn_post_norm"] = ninit(cfg.d_model, dt)
+            p["mlp_post_norm"] = ninit(cfg.d_model, dt)
+    elif cfg.family in ("ssm", "hybrid"):
+        p["ssm_norm"] = ninit(cfg.d_model, dt)
+        p["ssm"] = ssm.ssm_init(ks[0], cfg.d_model, cfg.ssm_dims, dtype=dt)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def _group_init(key, cfg: ModelConfig):
+    gl = cfg.group_size
+    ks = jax.random.split(key, gl)
+    return [_block_init(ks[i], cfg, i) for i in range(gl)]
+
+
+def _stack_groups(groups):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = cfg.dtype("param")
+    ninit, _ = layers.make_norm(cfg.norm)
+    keys = jax.random.split(key, cfg.num_groups + 8)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[-1], cfg.padded_vocab_size,
+                                   cfg.d_model, dt),
+        "final_norm": ninit(cfg.d_model, dt),
+    }
+    if cfg.family != "encdec":
+        p["blocks"] = _stack_groups(
+            [_group_init(keys[g], cfg) for g in range(cfg.num_groups)])
+    if not cfg.tie_embeddings:
+        p["head"] = layers.embed_init(keys[-2], cfg.padded_vocab_size,
+                                      cfg.d_model, dt)
+    if cfg.family == "hybrid":
+        p["shared_attn_norm"] = ninit(cfg.d_model, dt)
+        p["shared_attn"] = attention.attn_init(
+            keys[-3], cfg.d_model, cfg.attn_dims, qkv_bias=cfg.qkv_bias,
+            dtype=dt)
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(keys[-4], cfg.encoder_layers)
+        p["enc_blocks"] = _stack_groups(
+            [_enc_block_init(k, cfg) for k in enc_keys])
+        p["enc_final_norm"] = ninit(cfg.d_model, dt)
+        dec_keys = jax.random.split(keys[-5], cfg.num_layers)
+        p["blocks"] = _stack_groups([_dec_block_init(k, cfg) for k in dec_keys])
+    return p
+
+
+def _enc_block_init(key, cfg: ModelConfig):
+    dt = cfg.dtype("param")
+    ninit, _ = layers.make_norm(cfg.norm)
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": ninit(cfg.d_model, dt),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.attn_dims,
+                                    qkv_bias=True, dtype=dt),
+        "mlp_norm": ninit(cfg.d_model, dt),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                               dtype=dt),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    dt = cfg.dtype("param")
+    ninit, _ = layers.make_norm(cfg.norm)
+    ks = jax.random.split(key, 3)
+    return {
+        "attn_norm": ninit(cfg.d_model, dt),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.attn_dims,
+                                    qkv_bias=True, dtype=dt),
+        "cross_norm": ninit(cfg.d_model, dt),
+        "cross": attention.attn_init(ks[1], cfg.d_model, cfg.attn_dims,
+                                     qkv_bias=True, dtype=dt),
+        "mlp_norm": ninit(cfg.d_model, dt),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation,
+                               dtype=dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train/prefill and decode share code; cache=None => train)
+# ---------------------------------------------------------------------------
+def _norm(cfg):
+    return layers.make_norm(cfg.norm)[1]
+
+
+def _apply_attn_layer(cfg, p, x, *, local, positions, mrope_positions,
+                      cache, cache_pos):
+    nfn = _norm(cfg)
+    window = cfg.sliding_window if local else None
+    cap = cfg.attn_softcap or None
+    h, new_cache = attention.attention_block(
+        p["attn"], nfn(p["attn_norm"], x), cfg.attn_dims,
+        positions=positions, mrope_positions=mrope_positions,
+        rope_theta=cfg.rope_theta, causal=True, window=window, cap=cap,
+        use_rope=cfg.use_rope, cache=cache, cache_pos=cache_pos)
+    if cfg.post_norm:
+        h = nfn(p["attn_post_norm"], h)
+    return x + h, new_cache
+
+
+def _apply_mlp_layer(cfg, p, x):
+    nfn = _norm(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h, aux = moe.moe_apply(p["moe"], nfn(p["mlp_norm"], x), cfg.moe_dims)
+    else:
+        h = layers.mlp_apply(p["mlp"], nfn(p["mlp_norm"], x), cfg.activation)
+    if cfg.post_norm:
+        h = nfn(p["mlp_post_norm"], h)
+    return x + h, aux
+
+
+def _apply_group(cfg, shared, group_params, x, *, positions, mrope_positions,
+                 group_cache, cache_pos, collect=False):
+    """One scan group: cfg.group_size layers (+ optional shared attention).
+
+    Modes: train (group_cache=None, collect=False, caches discarded),
+    prefill (group_cache=None, collect=True, seq-length caches returned),
+    decode (group_cache=Smax-slot cache, cache_pos=current position).
+    """
+    keep_cache = collect or group_cache is not None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    nfn = _norm(cfg)
+
+    if cfg.family == "hybrid":
+        # Shared (weight-tied) attention block at the head of every group.
+        attn_cache = None if group_cache is None else group_cache["attn"]
+        h, attn_cache = attention.attention_block(
+            shared["shared_attn"], nfn(shared["shared_attn_norm"], x),
+            cfg.attn_dims, positions=positions, rope_theta=cfg.rope_theta,
+            causal=True, use_rope=cfg.use_rope,
+            cache=attn_cache, cache_pos=cache_pos)
+        x = x + h
+        if keep_cache:
+            new_cache["attn"] = attn_cache
+
+    def _slice_group_cache(name, i):
+        if group_cache is None:
+            return None
+        entry = group_cache[name]
+        if cfg.group_size > 1:
+            return jax.tree_util.tree_map(lambda a: a[i], entry)
+        return entry
+
+    layer_caches = []
+    for i in range(cfg.group_size):
+        p = group_params[i]
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, kv = _apply_attn_layer(
+                cfg, p, x, local=cfg.layer_is_local(i), positions=positions,
+                mrope_positions=mrope_positions,
+                cache=_slice_group_cache("kv", i), cache_pos=cache_pos)
+            x, aux = _apply_mlp_layer(cfg, p, x)
+            aux_total = aux_total + aux
+            layer_caches.append(kv)
+        else:  # ssm / hybrid
+            cache_i = None
+            if group_cache is not None:
+                cache_i = (_slice_group_cache("conv", i),
+                           _slice_group_cache("h", i))
+            h, new_ssm = ssm.ssm_apply(
+                p["ssm"], nfn(p["ssm_norm"], x), cfg.ssm_dims, cache=cache_i,
+                scan_mode=cfg.ssm_scan)
+            x = x + h
+            layer_caches.append(new_ssm)
+    x = sharding.constrain(x, "dp", None, None)
+
+    if keep_cache:
+        def _restack(entries):
+            if cfg.group_size > 1:
+                return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *entries)
+            return entries[0]
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            new_cache["kv"] = _restack(layer_caches)
+        else:
+            new_cache["conv"] = _restack([c[0] for c in layer_caches])
+            new_cache["h"] = _restack([c[1] for c in layer_caches])
+    return x, aux_total, (new_cache if keep_cache else None)
+
+
+def apply_group_external(cfg, shared, group_params, x, *, positions,
+                         mrope_positions, group_cache, cache_pos):
+    """Public entry for the unrolled decode path (model.decode_step)."""
+    return _apply_group(cfg, shared, group_params, x, positions=positions,
+                        mrope_positions=mrope_positions,
+                        group_cache=group_cache, cache_pos=cache_pos)
+
+
+def _shared_params(params, cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return {"shared_attn": params["shared_attn"],
+                "shared_attn_norm": params["shared_attn_norm"]}
+    return {}
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def backbone(params, cfg: ModelConfig, x, *, positions=None,
+             mrope_positions=None, cache=None, cache_pos=None, collect=False):
+    """Scan the block stack. x: [B, T, D]. Returns (x, aux, new_cache)."""
+    shared = _shared_params(params, cfg)
+
+    def group_fn(carry, xs):
+        x = carry
+        gp, gcache = xs
+        x, aux, ncache = _apply_group(
+            cfg, shared, gp, x,
+            positions=positions, mrope_positions=mrope_positions,
+            group_cache=gcache, cache_pos=cache_pos, collect=collect)
+        return x, (aux, ncache)
+
+    group_fn = _remat_wrap(cfg, group_fn)
+    x, (auxes, new_cache) = jax.lax.scan(
+        group_fn, x, (params["blocks"], cache))
+    return x, jnp.sum(auxes), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+def _sinusoidal(T, D):
+    pos = np.arange(T)[:, None]
+    i = np.arange(D // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / D)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, S_src, D] precomputed conv-frontend embeddings (STUB)."""
+    nfn = _norm(cfg)
+    x = frames.astype(cfg.dtype("compute"))
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def enc_fn(x, p):
+        h, _ = attention.attention_block(
+            p["attn"], nfn(p["attn_norm"], x), cfg.attn_dims,
+            causal=False, use_rope=False)
+        x = x + h
+        x = x + layers.mlp_apply(p["mlp"], nfn(p["mlp_norm"], x),
+                                 cfg.activation)
+        return x, None
+
+    enc_fn = _remat_wrap(cfg, enc_fn)
+    x, _ = jax.lax.scan(enc_fn, x, params["enc_blocks"])
+    return nfn(params["enc_final_norm"], x)
+
+
+def decode_stack(params, cfg: ModelConfig, x, enc_out=None, *, positions=None,
+                 cache=None, cache_pos=None, cross_kv=None):
+    """Whisper decoder stack (self + cross attention)."""
+    nfn = _norm(cfg)
+
+    def dec_fn(x, xs):
+        p = xs[0]
+        self_cache = xs[1] if cache is not None else None
+        ckv = xs[2] if cross_kv is not None else None
+        h, new_kv = attention.attention_block(
+            p["attn"], nfn(p["attn_norm"], x), cfg.attn_dims,
+            positions=positions, causal=True, use_rope=False,
+            cache=self_cache, cache_pos=cache_pos)
+        x = x + h
+        if ckv is None:
+            ckv_local = attention.encode_kv(p["cross"], enc_out, cfg.attn_dims)
+        else:
+            ckv_local = ckv
+        x = x + attention.cross_attention_block(
+            p["cross"], nfn(p["cross_norm"], x), cfg.attn_dims, ckv_local)
+        x = x + layers.mlp_apply(p["mlp"], nfn(p["mlp_norm"], x),
+                                 cfg.activation)
+        return x, new_kv
+
+    dec_fn = _remat_wrap(cfg, dec_fn)
+    xs = (params["blocks"],)
+    xs += ((cache,) if cache is not None else (None,))
+    xs += ((cross_kv,) if cross_kv is not None else (None,))
+    x, new_cache = jax.lax.scan(dec_fn, x, xs)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg: ModelConfig, tokens, vision_embeds=None):
+    x = layers.embed_apply(params["embed"], tokens).astype(cfg.dtype("compute"))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if vision_embeds is not None and cfg.num_vision_tokens:
+        nv = cfg.num_vision_tokens
+        x = x.at[:, :nv, :].set(vision_embeds.astype(x.dtype))
+    return sharding.constrain(x, "dp", None, None)
+
+
+def logits_fn(params, cfg: ModelConfig, x):
+    nfn = _norm(cfg)
+    x = nfn(params["final_norm"], x)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["table"])
+    logits = x @ table.astype(x.dtype).T
+    logits = layers.softcap(logits.astype(jnp.float32),
+                            cfg.final_softcap or None)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # mask vocab-padding columns (Megatron-style padded embedding)
+        col = jnp.arange(cfg.padded_vocab_size)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward_train(params, cfg: ModelConfig, batch):
+    """Teacher-forced forward. Returns (hidden [B,T,D], aux)."""
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, batch["frames"])
+        x = embed_tokens(params, cfg, tokens)
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)
+        x, _ = decode_stack(params, cfg, x, enc_out=enc_out,
+                            positions=positions)
+        return x, jnp.zeros((), jnp.float32)
+    mrope = batch.get("mrope_positions") if cfg.mrope else None
+    x = embed_tokens(params, cfg, tokens, batch.get("vision_embeds"))
+    x, aux, _ = backbone(params, cfg, x, positions=positions,
+                         mrope_positions=mrope)
+    return x, aux

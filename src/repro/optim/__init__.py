@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, make_optimizer,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,138 @@
+"""Functional optimizers: AdamW and Adafactor (factored second moment).
+
+Adafactor is what makes the 1T-parameter kimi-k2 cell fit: second-moment
+state is O(rows + cols) instead of O(rows x cols), and params/grads can stay
+bf16 (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * g32 * g32
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu, nu
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, m, n, p)
+               for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
+              weight_decay=0.0) -> Optimizer:
+    """Adafactor without momentum (memory-lean; Shazeer & Stern 2018)."""
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree_util.tree_map(one, params,
+                                        is_leaf=lambda x: hasattr(x, "ndim")),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if factored(p):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                          eps))[..., None] * vc[..., None, :]
+                step = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                step = g32 * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+            # update clipping (RMS of step <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

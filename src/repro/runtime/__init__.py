@@ -1,0 +1,4 @@
+from repro.runtime.driver import TrainDriver, DriverConfig  # noqa: F401
+from repro.runtime.fault import (  # noqa: F401
+    FaultInjector, HeartbeatMonitor, StragglerWatch,
+)

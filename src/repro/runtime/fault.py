@@ -1,0 +1,82 @@
+"""Fault-tolerance primitives: heartbeats, straggler detection, injection.
+
+On a real cluster the heartbeat transport is the coordination service
+(jax.distributed / etcd); here the same logic runs over an in-process clock
+so the recovery paths are exercised by tests on one CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker liveness; a worker is dead after ``timeout_s``."""
+
+    def __init__(self, workers: List[int], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_seen: Dict[int, float] = {w: clock() for w in workers}
+
+    def beat(self, worker: int) -> None:
+        self.last_seen[worker] = self.clock()
+
+    def dead_workers(self) -> List[int]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.dead_workers()
+
+
+class StragglerWatch:
+    """EMA step-time tracker; flags steps > ``k`` sigma above the mean.
+
+    The mitigation hook is pluggable: at scale it triggers data-shard
+    rebalancing or hot-spare swap-in; the default logs and counts.
+    """
+
+    def __init__(self, window: int = 50, k_sigma: float = 3.0,
+                 min_samples: int = 10):
+        self.times: deque = deque(maxlen=window)
+        self.k = k_sigma
+        self.min_samples = min_samples
+        self.flagged: List[tuple] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        import numpy as np
+
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            mu = float(np.mean(self.times))
+            sd = float(np.std(self.times)) + 1e-9
+            if dt > mu + self.k * sd:
+                is_straggler = True
+                self.flagged.append((step, dt, mu, sd))
+        self.times.append(dt)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic failure injection for integration tests.
+
+    ``fail_at_steps`` raises ``SimulatedNodeFailure`` just *after* the
+    optimizer update of those steps, emulating a node loss between steps.
+    """
+
+    fail_at_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedNodeFailure(f"injected failure at step {step}")
+
+
+class SimulatedNodeFailure(RuntimeError):
+    pass

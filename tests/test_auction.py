@@ -1,0 +1,108 @@
+"""Clearing math: the paper's analytical ground truth + invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import auction
+
+
+BUY = np.array([[10.0, 5.0, 8.0, 0.0, 2.0]], dtype=np.float32)
+SELL = np.array([[0.0, 4.0, 7.0, 6.0, 3.0]], dtype=np.float32)
+
+
+class TestPaperAnalyticalCase:
+    """Paper §IV-C, Eq. 11-18: the L=5 configuration-independent baseline."""
+
+    def test_cumulative_profiles(self):
+        d = auction.suffix_sum(BUY, np)
+        s = auction.prefix_sum(SELL, np)
+        assert np.allclose(d, [[25, 15, 10, 2, 2]])    # Eq. 13
+        assert np.allclose(s, [[0, 4, 11, 17, 20]])    # Eq. 14
+
+    @pytest.mark.parametrize("scan", ["cumsum", "hillis-steele"])
+    def test_clearing(self, scan):
+        c = auction.clear(BUY, SELL, np, scan=scan)
+        assert c["p_star"][0, 0] == 2                  # Eq. 16
+        assert c["volume"][0, 0] == 10.0
+        assert np.allclose(c["new_bid"], [[10, 5, 0, 0, 0]])   # Eq. 17
+        assert np.allclose(c["new_ask"], [[0, 0, 1, 6, 3]])    # Eq. 18
+
+    def test_all_backends_identical_on_case(self):
+        import jax.numpy as jnp
+
+        cn = auction.clear(BUY, SELL, np)
+        cj = auction.clear(jnp.asarray(BUY), jnp.asarray(SELL), jnp)
+        for k in ("p_star", "volume", "new_bid", "new_ask"):
+            assert (np.asarray(cj[k]) == cn[k]).all(), k
+
+
+def _books(draw, L):
+    qty = st.integers(min_value=0, max_value=50)
+    buy = draw(st.lists(qty, min_size=L, max_size=L))
+    sell = draw(st.lists(qty, min_size=L, max_size=L))
+    return (np.asarray([buy], dtype=np.float32),
+            np.asarray([sell], dtype=np.float32))
+
+
+@st.composite
+def books(draw):
+    L = draw(st.sampled_from([4, 8, 16, 32]))
+    return _books(draw, L)
+
+
+@settings(max_examples=200, deadline=None)
+@given(books())
+def test_clearing_invariants(bs):
+    """Conservation + feasibility + price-priority invariants."""
+    buy, sell = bs
+    c = auction.clear(buy, sell, np)
+    v = c["volume"][0, 0]
+    tb, ts = c["traded_buy"], c["traded_sell"]
+    # traded volume balances on both sides and equals V
+    assert np.isclose(tb.sum(), v)
+    assert np.isclose(ts.sum(), v)
+    # no over-execution, no negative residuals
+    assert (tb <= buy + 1e-6).all() and (tb >= 0).all()
+    assert (ts <= sell + 1e-6).all() and (ts >= 0).all()
+    assert (c["new_bid"] >= 0).all() and (c["new_ask"] >= 0).all()
+    # V is the max executable volume over the grid
+    d = auction.suffix_sum(buy, np)
+    s = auction.prefix_sum(sell, np)
+    assert np.isclose(v, np.minimum(d, s).max())
+    # price priority: no traded buy below p*, no traded sell above p*
+    p = int(c["p_star"][0, 0])
+    assert (tb[0, :p] == 0).all()
+    assert (ts[0, p + 1:] == 0).all()
+    # the book never crosses after clearing: best residual bid <= best ask
+    nb, na = c["new_bid"][0], c["new_ask"][0]
+    if v > 0 and nb.any() and na.any():
+        bb = np.max(np.nonzero(nb)[0])
+        ba = np.min(np.nonzero(na)[0])
+        assert bb <= ba, (nb, na)
+
+
+@settings(max_examples=100, deadline=None)
+@given(books())
+def test_hillis_steele_bitwise_matches_cumsum(bs):
+    buy, sell = bs
+    a = auction.clear(buy, sell, np, scan="cumsum")
+    b = auction.clear(buy, sell, np, scan="hillis-steele")
+    for k in ("p_star", "volume", "new_bid", "new_ask"):
+        assert (a[k] == b[k]).all()
+
+
+def test_no_cross_no_trade():
+    buy = np.array([[5.0, 0.0, 0.0, 0.0]], dtype=np.float32)
+    sell = np.array([[0.0, 0.0, 0.0, 5.0]], dtype=np.float32)
+    c = auction.clear(buy, sell, np)
+    assert c["volume"][0, 0] == 0.0
+    assert (c["new_bid"] == buy).all() and (c["new_ask"] == sell).all()
+
+
+def test_best_quotes_fallback():
+    bid = np.zeros((1, 8), np.float32)
+    ask = np.zeros((1, 8), np.float32)
+    last = np.full((1, 1), 3.5, np.float32)
+    bb, ba, mid = auction.best_quotes(bid, ask, last, np)
+    assert bb[0, 0] == -1 and ba[0, 0] == 8
+    assert mid[0, 0] == 3.5  # Eq. 3 fallback to last price
