@@ -19,6 +19,7 @@ SECTIONS = [
     ("latency", "benchmarks.latency"),                  # Fig 6
     ("memory_footprint", "benchmarks.memory_footprint"),# Table V / Fig 5
     ("emergent_dynamics", "benchmarks.emergent_dynamics"),  # Fig 7
+    ("scenario_sweep", "benchmarks.scenario_sweep"),    # scenario engine
     ("roofline", "benchmarks.roofline_report"),         # EXPERIMENTS §Roofline
 ]
 

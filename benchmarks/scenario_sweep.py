@@ -1,0 +1,50 @@
+"""Scenario-engine throughput: events/s per scenario preset and mixture.
+
+Every scenario compiles to the same fully fused persistent kernel (overlays
+are branch-free ``where`` selects on static config fields), so the paper's
+headline throughput should be *scenario-invariant* — this sweep measures
+exactly that, plus the cost of richer archetype mixtures.
+"""
+from __future__ import annotations
+
+from benchmarks.common import FIXED_A, FIXED_M, STEPS, emit, events_per_s, \
+    time_call
+from repro.core import engine
+from repro.core.config import scenario_config, scenario_names
+
+BACKENDS = ["numpy", "jax-scan", "pallas-kinetic"]
+
+MIXTURES = {
+    "paper": dict(alpha_maker=0.15, alpha_momentum=0.15),
+    "hetero4": dict(alpha_maker=0.10, alpha_momentum=0.20,
+                    alpha_fundamentalist=0.25),
+}
+
+
+def run() -> list:
+    rows = []
+    for scenario in scenario_names():
+        for mix_name, mix in MIXTURES.items():
+            cfg = scenario_config(
+                scenario, num_markets=FIXED_M, num_agents=FIXED_A,
+                num_steps=STEPS, **mix)
+            per_backend = {}
+            for b in BACKENDS:
+                t, _ = time_call(engine.simulate, cfg, backend=b, trials=3,
+                                 warmup=1)
+                per_backend[b] = t
+                rows.append((
+                    f"scenarios/{scenario}/{mix_name}/{b}",
+                    t * 1e6,
+                    f"events_per_s={events_per_s(cfg, t):.4g}"))
+            k = per_backend["pallas-kinetic"]
+            rows.append((
+                f"scenarios/{scenario}/{mix_name}/speedups",
+                k * 1e6,
+                ";".join(f"vs_{b}={per_backend[b] / k:.2f}x"
+                         for b in BACKENDS if b != "pallas-kinetic")))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

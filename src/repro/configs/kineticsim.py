@@ -1,5 +1,5 @@
 """The paper's own workload as a selectable config (market ensembles)."""
-from repro.core.config import MarketConfig
+from repro.core.config import MarketConfig, scenario_config, scenario_names
 
 
 def config():
@@ -11,3 +11,22 @@ def config():
 def smoke_config():
     return MarketConfig(num_markets=16, num_agents=32, num_levels=64,
                         num_steps=10)
+
+
+def scenario(name: str, **overrides) -> MarketConfig:
+    """Paper workload under a named scenario preset (see scenario_names())."""
+    base = dict(num_markets=8192, num_agents=256, num_levels=128,
+                num_steps=500)
+    base.update(overrides)
+    return scenario_config(name, **base)
+
+
+def scenario_smoke(name: str, **overrides) -> MarketConfig:
+    """CPU-tractable scenario config (same presets, reduced shape)."""
+    base = dict(num_markets=16, num_agents=32, num_levels=64, num_steps=10)
+    base.update(overrides)
+    return scenario_config(name, **base)
+
+
+def all_scenarios():
+    return scenario_names()

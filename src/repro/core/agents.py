@@ -1,25 +1,112 @@
-"""Agent strategy classes (paper §III-C), array-module polymorphic.
+"""Agent archetype registry (paper §III-C), array-module polymorphic.
 
 Every backend — NumPy reference, JAX step/scan engines, and both Pallas
 kernels — executes *this exact function* for agent decisions (the paper's
 "shared device-side decide()"), which is what makes the bitwise-identity
 experiments meaningful.
 
+Archetypes are registered per strategy-class id; ``decide`` evaluates every
+registered archetype on the full [M, A] lattice and selects per-agent with
+``where`` masks derived from the static mixture in :class:`MarketConfig`.
+The dispatch is branch-free by construction — no data-dependent control
+flow — so the same code fuses inside the persistent Pallas clearing kernel,
+lax.scan, and the NumPy host loop without specialization.
+
 All float math is float32 with explicit casts so NumPy (which would otherwise
 promote to float64) and JAX produce identical bit patterns.
 """
 from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
 
 from repro.core import rng
 from repro.core.config import (
     CH_MKT,
     CH_PRICE,
     CH_QTY,
+    CH_SHOCK,
     CH_SIDE,
+    FUNDAMENTALIST,
     MAKER,
     MOMENTUM,
+    NOISE,
     MarketConfig,
 )
+
+
+class ArchetypeContext(NamedTuple):
+    """Per-step inputs every archetype sees (all already [M, A]-broadcastable)."""
+
+    cfg: MarketConfig
+    xp: "module"
+    mid: "array"        # float32[M, 1] current mid price
+    prev_mid: "array"   # float32[M, 1] previous step's mid price
+    step_i: "array"     # int32 scalar step index (traced ok)
+    agent_ids: "array"  # int32[1, A] agent indices within a market
+    u_side: "array"     # float32[M, A] side-channel uniforms
+    u_price: "array"    # float32[M, A] price-channel uniforms
+
+
+# type_id -> (name, fn(ctx) -> (side_buy, price_f)); ids match config constants.
+_ARCHETYPES: Dict[int, Tuple[str, Callable]] = {}
+
+
+def register_archetype(type_id: int, name: str):
+    def deco(fn):
+        _ARCHETYPES[type_id] = (name, fn)
+        return fn
+    return deco
+
+
+def archetype_names() -> Dict[int, str]:
+    return {tid: name for tid, (name, _) in sorted(_ARCHETYPES.items())}
+
+
+@register_archetype(NOISE, "noise")
+def _noise(ctx: ArchetypeContext):
+    """Random side; price = mid + U[-Δ, Δ]."""
+    f32 = ctx.xp.float32
+    side_buy = ctx.u_side < f32(0.5)
+    eta = (ctx.u_price * f32(2.0) - f32(1.0)) * f32(ctx.cfg.noise_delta)
+    return side_buy, ctx.mid + eta
+
+
+@register_archetype(MOMENTUM, "momentum")
+def _momentum(ctx: ArchetypeContext):
+    """Trend follower: side = sgn(mid_t - mid_{t-1}); price = mid ± 1."""
+    xp, f32 = ctx.xp, ctx.xp.float32
+    ret = xp.sign(ctx.mid - ctx.prev_mid)  # float32[M, 1]
+    ret = ret + xp.zeros_like(ctx.u_side)  # broadcast [M, A]
+    side_buy = xp.where(ret != f32(0.0), ret > f32(0.0), ctx.u_side < f32(0.5))
+    price_f = ctx.mid + xp.where(side_buy, f32(1.0), f32(-1.0))
+    return side_buy, price_f
+
+
+@register_archetype(MAKER, "maker")
+def _maker(ctx: ArchetypeContext):
+    """Market maker: alternate on parity of (a + s); fixed half-spread offset."""
+    xp, f32 = ctx.xp, ctx.xp.float32
+    side_buy = ((ctx.agent_ids + ctx.step_i) % xp.int32(2)) == xp.int32(0)
+    half = f32(ctx.cfg.maker_half_spread)
+    price_f = xp.where(side_buy, ctx.mid - half, ctx.mid + half)
+    return side_buy, price_f
+
+
+@register_archetype(FUNDAMENTALIST, "fundamentalist")
+def _fundamentalist(ctx: ArchetypeContext):
+    """Mean reversion toward the fundamental price F.
+
+    Buys when mid < F (random side at the fixed point), quoting part-way back
+    toward F (strength kappa) with a unit jitter so fundamentalists do not
+    collapse onto a single tick.
+    """
+    xp, f32 = ctx.xp, ctx.xp.float32
+    dev = f32(ctx.cfg.fundamental) - ctx.mid  # float32[M, 1]
+    dev = dev + xp.zeros_like(ctx.u_side)     # broadcast [M, A]
+    side_buy = xp.where(dev != f32(0.0), dev > f32(0.0), ctx.u_side < f32(0.5))
+    jitter = ctx.u_price * f32(2.0) - f32(1.0)
+    price_f = ctx.mid + dev * f32(ctx.cfg.fundamentalist_kappa) + jitter
+    return side_buy, price_f
 
 
 def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
@@ -63,31 +150,35 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
     atype = cfg.agent_types(xp)[None, :]  # int32[1, A]
     mid = xp.asarray(mid, dtype=xp.float32)
     prev_mid = xp.asarray(prev_mid, dtype=xp.float32)
-
-    # --- NOISE: random side, price = round(mid + U[-Δ, Δ]) ---
-    noise_side_buy = u_side < f32(0.5)
-    eta = (u_price * f32(2.0) - f32(1.0)) * f32(cfg.noise_delta)
-    noise_price = mid + eta
-
-    # --- MOMENTUM: side = sgn(mid_t - mid_{t-1}); price = round(mid ± 1) ---
-    ret = xp.sign(mid - prev_mid)  # float32[M, 1]
-    ret = ret + xp.zeros_like(u_side)  # broadcast [M, A]
-    mom_side_buy = xp.where(ret != f32(0.0), ret > f32(0.0), u_side < f32(0.5))
-    mom_price = mid + xp.where(mom_side_buy, f32(1.0), f32(-1.0))
-
-    # --- MAKER: alternate on parity of (a + s); fixed half-spread offset ---
     step_i = xp.asarray(step).astype(xp.int32)
-    maker_side_buy = ((agent_ids + step_i) % xp.int32(2)) == xp.int32(0)
-    maker_side_buy = maker_side_buy | xp.zeros_like(noise_side_buy)
-    half = f32(cfg.maker_half_spread)
-    maker_price = xp.where(maker_side_buy, mid - half, mid + half)
 
-    is_mom = atype == MOMENTUM
+    ctx = ArchetypeContext(cfg=cfg, xp=xp, mid=mid, prev_mid=prev_mid,
+                           step_i=step_i, agent_ids=agent_ids,
+                           u_side=u_side, u_price=u_price)
+
+    # Branch-free archetype dispatch: evaluate each populated archetype on
+    # the full lattice, select by the static per-agent type vector. Masks are
+    # disjoint, so the fold order only needs to be deterministic (ascending
+    # type id) for bitwise reproducibility. Archetypes whose static count is
+    # zero are skipped entirely — their mask would be all-False, so the
+    # result is value-identical while the NumPy host loop (which cannot
+    # constant-fold the dead select) skips the work.
+    zero_f = xp.zeros_like(u_side)
+    zero_b = zero_f > f32(0.0)  # all-False bool[M, A] broadcast template
+    counts = cfg.archetype_counts()
+    ids = [tid for tid in sorted(_ARCHETYPES) if counts.get(tid, 0) > 0]
+    _, fn0 = _ARCHETYPES[ids[0]]
+    side_buy, price_f = fn0(ctx)
+    side_buy = side_buy | zero_b
+    price_f = price_f + zero_f
+    for tid in ids[1:]:
+        _, fn = _ARCHETYPES[tid]
+        s, p = fn(ctx)
+        mask = atype == xp.int32(tid)
+        side_buy = xp.where(mask, s | zero_b, side_buy)
+        price_f = xp.where(mask, p + zero_f, price_f)
+
     is_maker = atype == MAKER
-    side_buy = xp.where(is_maker, maker_side_buy,
-                        xp.where(is_mom, mom_side_buy, noise_side_buy))
-    price_f = xp.where(is_maker, maker_price,
-                       xp.where(is_mom, mom_price, noise_price))
 
     # Marketable orders (never for makers): force to the grid boundary.
     marketable = (u_mkt < f32(cfg.p_marketable)) & ~is_maker
@@ -96,6 +187,16 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
         xp.where(side_buy, f32(L - 1), f32(0.0)),
         price_f,
     )
+
+    # Scenario overlay: flash-crash panic (branch-free; the static python
+    # guard keeps baseline configs off the extra RNG channel entirely, so
+    # their streams are unchanged). Panicking non-makers sell marketably.
+    if cfg.shock_intensity > 0.0 and cfg.shock_step >= 0:
+        at_shock = step_i == xp.int32(cfg.shock_step)
+        panic = (u(CH_SHOCK) < f32(cfg.shock_intensity)) & ~is_maker
+        panic = panic & (at_shock | zero_b)
+        side_buy = xp.where(panic, zero_b, side_buy)
+        price_f = xp.where(panic, f32(0.0) + zero_f, price_f)
 
     # Round-half-even (identical in NumPy & JAX), prune to the grid (paper
     # §III-A: out-of-window orders are clipped / made marketable).

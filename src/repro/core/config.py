@@ -1,19 +1,35 @@
-"""Configuration for the KineticSim market engine."""
+"""Configuration for the KineticSim market engine.
+
+Besides the raw simulation shape (M, A, L, S) this module owns the two axes
+of the scenario engine:
+
+  * the **archetype mixture** — static per-config fractions of the agent
+    population assigned to each strategy class (paper §III-C plus the
+    fundamentalist/mean-reversion class), resolved to a deterministic
+    ``int32[A]`` type vector by agent index so every backend sees the exact
+    same population; and
+  * the **scenario** — named presets (baseline, flash-crash, high/low
+    volatility regimes, wide/thin opening books) expressed purely as config
+    fields, so scenario dispatch compiles to branch-free ``where`` selects
+    inside the fused step and never breaks the persistent kernel.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
-# Agent strategy classes (paper §III-C)
+# Agent strategy classes (paper §III-C + fundamentalist extension)
 NOISE = 0
 MOMENTUM = 1
 MAKER = 2
+FUNDAMENTALIST = 3
 
 # RNG channels
 CH_SIDE = 0
 CH_PRICE = 1
 CH_MKT = 2
 CH_QTY = 3
+CH_SHOCK = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,9 +52,23 @@ class MarketConfig:
     noise_delta: float = 8.0       # Δ_noise — uniform price offset half-width
     maker_half_spread: float = 2.0 # Δ_maker_half_spread
 
-    # Population mix (paper §IV-J: α_maker fixed at 0.15, α_mom swept)
+    # Population mix (paper §IV-J: α_maker fixed at 0.15, α_mom swept).
+    # Static weights: agents [0, A·α_maker) are makers, the next A·α_mom are
+    # momentum, the next A·α_fund fundamentalists, the remainder noise.
     alpha_maker: float = 0.15
     alpha_momentum: float = 0.15
+    alpha_fundamentalist: float = 0.0
+
+    # Fundamentalist behaviour: mean reversion toward ``fundamental_price``
+    # (defaults to the grid midpoint when negative) at strength kappa.
+    fundamental_price: float = -1.0
+    fundamentalist_kappa: float = 0.5
+
+    # Scenario (presets below; "baseline" leaves every knob at its default).
+    scenario: str = "baseline"
+    shock_step: int = -1           # flash-crash step (< 0 → disabled)
+    shock_intensity: float = 0.0   # P(agent panic-sells marketably at shock)
+    shock_cancel: float = 0.0      # fraction of resting bids withdrawn at shock
 
     # Opening book seeding (paper Alg.1 line 3); quotes straddle L/2.
     initial_quote_qty: float = 10.0
@@ -50,8 +80,21 @@ class MarketConfig:
             raise ValueError(f"num_levels must be a power of two >= 4, got {L}")
         if L > 1024:
             raise ValueError("num_levels > 1024 requires tiling (paper §V)")
-        if not (0.0 <= self.alpha_maker + self.alpha_momentum <= 1.0):
+        mix_total = (self.alpha_maker + self.alpha_momentum
+                     + self.alpha_fundamentalist)
+        if not (0.0 <= mix_total <= 1.0):
             raise ValueError("agent fractions must sum to <= 1")
+        assigned = self.num_makers + self.num_momentum + self.num_fundamentalists
+        if assigned > self.num_agents:
+            raise ValueError(
+                f"per-class rounding assigns {assigned} agents > "
+                f"num_agents={self.num_agents}; adjust alphas or num_agents")
+        if not (0.0 <= self.shock_intensity <= 1.0):
+            raise ValueError("shock_intensity must be in [0, 1]")
+        if not (0.0 <= self.shock_cancel <= 1.0):
+            raise ValueError("shock_cancel must be in [0, 1]")
+        if self.shock_step >= self.num_steps:
+            raise ValueError("shock_step must be < num_steps")
 
     # ---- derived population counts (deterministic by agent index) ----
     @property
@@ -63,17 +106,57 @@ class MarketConfig:
         return int(round(self.num_agents * self.alpha_momentum))
 
     @property
+    def num_fundamentalists(self) -> int:
+        return int(round(self.num_agents * self.alpha_fundamentalist))
+
+    @property
     def mid0(self) -> float:
         return float(self.num_levels // 2)
 
+    @property
+    def fundamental(self) -> float:
+        """Resolved fundamental price (grid midpoint unless overridden)."""
+        return self.mid0 if self.fundamental_price < 0 else self.fundamental_price
+
+    def mixture(self) -> Dict[int, float]:
+        """Static archetype weights {type_id: fraction}, summing to 1."""
+        noise = 1.0 - (self.alpha_maker + self.alpha_momentum
+                       + self.alpha_fundamentalist)
+        return {
+            NOISE: noise,
+            MOMENTUM: self.alpha_momentum,
+            MAKER: self.alpha_maker,
+            FUNDAMENTALIST: self.alpha_fundamentalist,
+        }
+
+    def archetype_counts(self) -> Dict[int, int]:
+        """Resolved population {type_id: agent count} (sums to num_agents)."""
+        nm, nmo, nf = self.num_makers, self.num_momentum, self.num_fundamentalists
+        return {
+            NOISE: self.num_agents - (nm + nmo + nf),
+            MOMENTUM: nmo,
+            MAKER: nm,
+            FUNDAMENTALIST: nf,
+        }
+
     def agent_types(self, xp) -> "xp.ndarray":
-        """int32[A] strategy class per agent index: makers, momentum, noise."""
+        """int32[A] strategy class per agent index.
+
+        Assignment order: makers, momentum, fundamentalists, then noise —
+        a pure function of the static mixture weights, so every backend
+        derives the identical population without any device-side state.
+        """
         a = xp.arange(self.num_agents, dtype=xp.int32)
-        nm, nmo = self.num_makers, self.num_momentum
+        nm, nmo, nf = self.num_makers, self.num_momentum, self.num_fundamentalists
         return xp.where(
             a < nm,
             xp.int32(MAKER),
-            xp.where(a < nm + nmo, xp.int32(MOMENTUM), xp.int32(NOISE)),
+            xp.where(
+                a < nm + nmo,
+                xp.int32(MOMENTUM),
+                xp.where(a < nm + nmo + nf,
+                         xp.int32(FUNDAMENTALIST), xp.int32(NOISE)),
+            ),
         )
 
     def initial_books(self, xp) -> Tuple["xp.ndarray", "xp.ndarray"]:
@@ -94,3 +177,79 @@ class MarketConfig:
     def events(self) -> int:
         """Total agent events M*A*S (paper's throughput denominator)."""
         return self.num_markets * self.num_agents * self.num_steps
+
+
+# ---------------------------------------------------------------------------
+# Scenario presets. Each preset is a function (num_steps) -> field overrides;
+# taking num_steps lets flash-crash place its shock mid-run by default.
+# ---------------------------------------------------------------------------
+SCENARIO_PRESETS: Dict[str, Callable[[int], dict]] = {}
+
+
+def register_scenario(name: str):
+    def deco(fn):
+        SCENARIO_PRESETS[name] = fn
+        return fn
+    return deco
+
+
+@register_scenario("baseline")
+def _baseline(num_steps: int) -> dict:
+    return {}
+
+
+@register_scenario("flash-crash")
+def _flash_crash(num_steps: int) -> dict:
+    # Mid-run shock: 60% of non-maker agents dump marketably while half the
+    # resting bid support is withdrawn at the same step.
+    return {
+        "shock_step": num_steps // 2,
+        "shock_intensity": 0.6,
+        "shock_cancel": 0.5,
+    }
+
+
+@register_scenario("high-vol")
+def _high_vol(num_steps: int) -> dict:
+    return {"noise_delta": 16.0, "p_marketable": 0.25}
+
+
+@register_scenario("low-vol")
+def _low_vol(num_steps: int) -> dict:
+    return {"noise_delta": 2.0, "p_marketable": 0.05}
+
+
+@register_scenario("wide-book")
+def _wide_book(num_steps: int) -> dict:
+    return {"initial_quote_qty": 64.0, "initial_spread": 8}
+
+
+@register_scenario("thin-book")
+def _thin_book(num_steps: int) -> dict:
+    return {"initial_quote_qty": 1.0, "initial_spread": 2}
+
+
+def scenario_names() -> Tuple[str, ...]:
+    return tuple(sorted(SCENARIO_PRESETS))
+
+
+def scenario_config(name: str, **overrides) -> MarketConfig:
+    """Preset constructor: build a MarketConfig for a named scenario.
+
+    Explicit ``overrides`` win over preset fields, so e.g. the flash-crash
+    shock step stays configurable: ``scenario_config("flash-crash",
+    shock_step=7, num_steps=20)``.
+    """
+    if name not in SCENARIO_PRESETS:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {scenario_names()}")
+    if overrides.get("scenario", name) != name:
+        raise ValueError(
+            f"scenario={overrides['scenario']!r} override conflicts with "
+            f"preset name {name!r}")
+    num_steps = overrides.get(
+        "num_steps", MarketConfig.__dataclass_fields__["num_steps"].default)
+    fields = dict(SCENARIO_PRESETS[name](num_steps))
+    fields.update(overrides)
+    fields["scenario"] = name
+    return MarketConfig(**fields)

@@ -1,4 +1,5 @@
-"""Public engine API: ``simulate(cfg, backend=...)`` with a backend registry.
+"""Public engine API: ``simulate(cfg, backend=...)`` with a backend registry,
+plus the scenario front door ``simulate_scenario(name, backend=...)``.
 
 Backends (paper §IV's five engines):
   * ``numpy``             — CPU (NumPy) reference, kinetic RNG (bitwise-comparable)
@@ -13,7 +14,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
-from repro.core.config import MarketConfig
+from repro.core.config import MarketConfig, scenario_config, scenario_names
 from repro.core.result import SimResult
 
 _REGISTRY: Dict[str, Callable[..., SimResult]] = {}
@@ -57,3 +58,15 @@ def simulate(cfg: MarketConfig, backend: str = "jax-scan", **kwargs) -> SimResul
     if backend not in _REGISTRY:
         raise KeyError(f"unknown backend {backend!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[backend](cfg, **kwargs)
+
+
+def scenarios():
+    """Registered scenario preset names (see repro.core.config)."""
+    return scenario_names()
+
+
+def simulate_scenario(name: str, backend: str = "jax-scan",
+                      config_overrides: Dict = None, **kwargs) -> SimResult:
+    """Build a scenario preset config and simulate it on ``backend``."""
+    cfg = scenario_config(name, **(config_overrides or {}))
+    return simulate(cfg, backend=backend, **kwargs)

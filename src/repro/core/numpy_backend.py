@@ -1,7 +1,9 @@
 """CPU (NumPy) reference backend — the paper's baseline 1 (§IV, §IV-E).
 
-Vectorized across markets with ``np.add.at`` scatter binning (exactly the
-paper's described implementation), sequential over steps on the host.
+Drives the shared ``simulate_step`` semantics with ``np.add.at`` scatter
+binning (exactly the paper's described implementation), sequential over
+steps on the host — so scenario overlays and archetype dispatch can never
+drift from the device engines.
 
 Two RNG modes:
   * ``kinetic``   — the production counter RNG: bitwise-comparable to every
@@ -15,9 +17,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import agents, auction, rng
+from repro.core import rng
 from repro.core.config import MarketConfig
-from repro.core.step import MarketState, initial_state
+from repro.core.step import initial_state, simulate_step
 from repro.core.result import SimResult
 
 
@@ -34,10 +36,9 @@ def _bin_orders_scatter(side_buy, price, qty, M, L):
 
 def simulate(cfg: MarketConfig, rng_mode: str = "kinetic",
              scan: str = "cumsum") -> SimResult:
-    M, A, L, S = cfg.num_markets, cfg.num_agents, cfg.num_levels, cfg.num_steps
+    M, L, S = cfg.num_markets, cfg.num_levels, cfg.num_steps
     state = initial_state(cfg, np)
     market_ids = np.arange(M, dtype=np.int32)[:, None]
-    agent_ids = np.arange(A, dtype=np.int32)[None, :]
 
     if rng_mode == "kinetic":
         uniform_fn = None
@@ -55,26 +56,14 @@ def simulate(cfg: MarketConfig, rng_mode: str = "kinetic",
     price_path = np.zeros((M, S), dtype=np.float32)
     volume_path = np.zeros((M, S), dtype=np.float32)
 
+    bin_orders = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
     for s in range(S):
-        _, _, mid = auction.best_quotes(state.bid, state.ask, state.last_price, np)
-        side_buy, price, qty = agents.decide(
-            cfg, mid, state.prev_mid, np.int32(s), market_ids, agent_ids, np,
-            uniform_fn=uniform_fn,
+        state, out = simulate_step(
+            cfg, state, np.int32(s), market_ids, np,
+            bin_orders=bin_orders, scan=scan, uniform_fn=uniform_fn,
         )
-        buy, sell = _bin_orders_scatter(side_buy, price, qty, M, L)
-        total_buy = state.bid + buy
-        total_ask = state.ask + sell
-        cleared = auction.clear(total_buy, total_ask, np, scan=scan)
-        executed = cleared["volume"] > np.float32(0.0)
-        new_last = np.where(
-            executed, cleared["p_star"].astype(np.float32), state.last_price
-        )
-        state = MarketState(
-            bid=cleared["new_bid"], ask=cleared["new_ask"],
-            last_price=new_last, prev_mid=mid,
-        )
-        price_path[:, s] = new_last[:, 0]
-        volume_path[:, s] = cleared["volume"][:, 0]
+        price_path[:, s] = out.price[:, 0]
+        volume_path[:, s] = out.volume[:, 0]
 
     return SimResult(
         bid=state.bid, ask=state.ask,

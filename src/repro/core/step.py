@@ -1,10 +1,15 @@
 """One simulation step (paper Alg. 1 lines 5-22), shared by all backends.
 
-``simulate_step`` is the complete per-step semantics: microstructure state
-estimation -> agent decisions -> order aggregation -> cooperative clearing ->
-residual book update. Backends differ only in *how* they bin orders (scatter
-vs one-hot matmul) and how they drive the S-step loop (host loop, lax.scan,
-or a persistent Pallas grid) — never in semantics.
+``simulate_step`` is the complete per-step semantics: scenario overlay ->
+microstructure state estimation -> agent decisions -> order aggregation ->
+cooperative clearing -> residual book update. Backends differ only in *how*
+they bin orders (scatter vs one-hot matmul) and how they drive the S-step
+loop (host loop, lax.scan, or a persistent Pallas grid) — never in semantics.
+
+Scenario effects are selected by static config fields and applied with
+branch-free ``where`` masks on the traced step index, so a scenario config
+compiles to the same fused kernel as the baseline — no data-dependent
+control flow ever reaches the Pallas grid.
 """
 from __future__ import annotations
 
@@ -52,6 +57,24 @@ def bin_orders_onehot(side_buy, price, qty, L, xp):
     return buy, sell
 
 
+def apply_scenario_shock(cfg: MarketConfig, bid, step_idx, xp):
+    """Flash-crash liquidity withdrawal (scenario overlay, branch-free).
+
+    At the shock step a static fraction ``shock_cancel`` of every resting bid
+    level is cancelled — buy-side support vanishes just as panicking agents
+    market-sell (see :func:`repro.core.agents.decide`). ``floor`` keeps the
+    book integer-valued in f32, preserving the exact-add bitwise-identity
+    argument (paper §IV-B). The static python guard means baseline configs
+    trace the identical graph as before.
+    """
+    if cfg.shock_cancel <= 0.0 or cfg.shock_step < 0:
+        return bid
+    f32 = xp.float32
+    at_shock = xp.asarray(step_idx).astype(xp.int32) == xp.int32(cfg.shock_step)
+    cancelled = xp.floor(bid * f32(cfg.shock_cancel))
+    return xp.where(at_shock, bid - cancelled, bid)
+
+
 def simulate_step(
     cfg: MarketConfig,
     state: MarketState,
@@ -60,24 +83,29 @@ def simulate_step(
     xp,
     bin_orders: Callable = None,
     scan: str = "cumsum",
+    uniform_fn: Callable = None,
 ):
     """Advance all markets one step. Returns (MarketState, StepOutput)."""
     if bin_orders is None:
         bin_orders = lambda s, p, q: bin_orders_onehot(s, p, q, cfg.num_levels, xp)
     f32 = xp.float32
 
+    # Scenario overlay (before quoting: the withdrawal moves the mid too).
+    resting_bid = apply_scenario_shock(cfg, state.bid, step_idx, xp)
+
     # Phase 2: microstructure state estimation (paper Alg.1 lines 5-7)
-    _, _, mid = auction.best_quotes(state.bid, state.ask, state.last_price, xp)
+    _, _, mid = auction.best_quotes(resting_bid, state.ask, state.last_price, xp)
 
     # Phase 3: agent decisions + order aggregation (lines 8-13)
     agent_ids = xp.arange(cfg.num_agents, dtype=xp.int32)
     side_buy, price, qty = agents.decide(
-        cfg, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp
+        cfg, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp,
+        uniform_fn=uniform_fn,
     )
     buy, sell = bin_orders(side_buy, price, qty)
 
     # Incoming orders join the resting book; clearing runs over the total.
-    total_buy = state.bid + buy
+    total_buy = resting_bid + buy
     total_ask = state.ask + sell
 
     # Phase 4: cooperative parallel clearing (lines 14-21)

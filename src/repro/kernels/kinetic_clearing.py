@@ -17,6 +17,12 @@ Block/tile layout: markets on sublanes (MB multiple of 8), price ticks on
 lanes (L multiple of 128 native; smaller L still correct, just padded by the
 compiler). VMEM working set ≈ (7·MB·L + MB·A·L_onehot-chunk + 2·MB·S) f32 —
 see EXPERIMENTS.md §Perf for the measured budget.
+
+Scenario engine: archetype mixtures and scenario overlays (flash-crash
+shock, volatility regimes, book seeding) are static ``cfg`` fields dispatched
+branch-free inside ``simulate_step`` — every scenario traces to the same
+fully fused persistent kernel, and baseline configs trace the identical
+graph as before the scenario engine existed.
 """
 from __future__ import annotations
 

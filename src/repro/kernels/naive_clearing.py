@@ -13,6 +13,11 @@ is always SIMD over lanes), so this ablation isolates the *persistence* axis;
 the scan-depth axis is exercised separately via the ``scan=`` mode flag
 ('hillis-steele' log-depth vs 'cumsum'). The performance gap between this and
 :mod:`kinetic_clearing` is a clean attribution to state residency (§IV-I).
+
+Scenario configs (archetype mixtures, flash-crash shocks, regimes) dispatch
+branch-free inside the shared ``simulate_step``, so this ablation stays
+bitwise comparable to the persistent kernel on every scenario — the basis of
+the parity matrix in tests/test_parity_matrix.py.
 """
 from __future__ import annotations
 

@@ -8,21 +8,32 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(num_axes: int) -> dict:
+    """``axis_types=`` kwargs for ``jax.make_mesh`` where supported.
+
+    ``jax.sharding.AxisType`` only exists from jax 0.5; on 0.4.x meshes are
+    implicitly Auto, so passing nothing is semantically equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * num_axes}
+
+
+def make_mesh_compat(shape, axes, **kwargs):
+    """``jax.make_mesh`` with explicit-Auto axis types on jax >= 0.5."""
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)), **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (same axis names)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware model used by the roofline analysis (EXPERIMENTS.md §Roofline)

@@ -1,9 +1,19 @@
-"""Clearing math: the paper's analytical ground truth + invariants."""
+"""Clearing math: the paper's analytical ground truth + invariants.
+
+The exhaustive property tests need ``hypothesis`` (declared in
+requirements-dev.txt, optional); without it they skip and a seeded
+random-book fallback exercises the same invariant checks.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import auction
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency
+    HAVE_HYPOTHESIS = False
 
 
 BUY = np.array([[10.0, 5.0, 8.0, 0.0, 2.0]], dtype=np.float32)
@@ -36,25 +46,8 @@ class TestPaperAnalyticalCase:
             assert (np.asarray(cj[k]) == cn[k]).all(), k
 
 
-def _books(draw, L):
-    qty = st.integers(min_value=0, max_value=50)
-    buy = draw(st.lists(qty, min_size=L, max_size=L))
-    sell = draw(st.lists(qty, min_size=L, max_size=L))
-    return (np.asarray([buy], dtype=np.float32),
-            np.asarray([sell], dtype=np.float32))
-
-
-@st.composite
-def books(draw):
-    L = draw(st.sampled_from([4, 8, 16, 32]))
-    return _books(draw, L)
-
-
-@settings(max_examples=200, deadline=None)
-@given(books())
-def test_clearing_invariants(bs):
+def _check_clearing_invariants(buy, sell):
     """Conservation + feasibility + price-priority invariants."""
-    buy, sell = bs
     c = auction.clear(buy, sell, np)
     v = c["volume"][0, 0]
     tb, ts = c["traded_buy"], c["traded_sell"]
@@ -81,14 +74,56 @@ def test_clearing_invariants(bs):
         assert bb <= ba, (nb, na)
 
 
-@settings(max_examples=100, deadline=None)
-@given(books())
-def test_hillis_steele_bitwise_matches_cumsum(bs):
-    buy, sell = bs
+def _check_hillis_steele_matches_cumsum(buy, sell):
     a = auction.clear(buy, sell, np, scan="cumsum")
     b = auction.clear(buy, sell, np, scan="hillis-steele")
     for k in ("p_star", "volume", "new_bid", "new_ask"):
         assert (a[k] == b[k]).all()
+
+
+if HAVE_HYPOTHESIS:
+    def _books(draw, L):
+        qty = st.integers(min_value=0, max_value=50)
+        buy = draw(st.lists(qty, min_size=L, max_size=L))
+        sell = draw(st.lists(qty, min_size=L, max_size=L))
+        return (np.asarray([buy], dtype=np.float32),
+                np.asarray([sell], dtype=np.float32))
+
+    @st.composite
+    def books(draw):
+        L = draw(st.sampled_from([4, 8, 16, 32]))
+        return _books(draw, L)
+
+    @settings(max_examples=200, deadline=None)
+    @given(books())
+    def test_clearing_invariants(bs):
+        _check_clearing_invariants(*bs)
+
+    @settings(max_examples=100, deadline=None)
+    @given(books())
+    def test_hillis_steele_bitwise_matches_cumsum(bs):
+        _check_hillis_steele_matches_cumsum(*bs)
+
+
+def _random_books(rng, L):
+    buy = rng.integers(0, 51, size=(1, L)).astype(np.float32)
+    sell = rng.integers(0, 51, size=(1, L)).astype(np.float32)
+    return buy, sell
+
+
+def test_clearing_invariants_fallback():
+    """Non-hypothesis fallback: seeded random integer books, same checks."""
+    rng = np.random.default_rng(1234)
+    for L in (4, 8, 16, 32):
+        for _ in range(25):
+            _check_clearing_invariants(*_random_books(rng, L))
+
+
+def test_hillis_steele_matches_cumsum_fallback():
+    rng = np.random.default_rng(99)
+    for L in (4, 8, 16, 32):
+        for _ in range(15):
+            _check_hillis_steele_matches_cumsum(*_random_books(rng, L))
 
 
 def test_no_cross_no_trade():

@@ -1,0 +1,93 @@
+"""Order binning: one-hot MXU contraction vs scatter reference (bitwise),
+plus ``pick_tile`` edge cases.
+
+The one-hot contraction is the TPU-native replacement for the paper's
+shared-memory atomicAdd histogram; because quantities are exact small
+integers in f32, the two binnings must agree *exactly* (==, not allclose) —
+the foundation of the cross-engine bitwise-identity claim.
+"""
+import numpy as np
+import pytest
+
+from repro.core.step import bin_orders_onehot
+from repro.kernels.kinetic_clearing import pick_tile
+
+
+def _bin_orders_scatter_ref(side_buy, price, qty, M, L):
+    """Scalar-loop scatter reference (the paper's atomicAdd semantics)."""
+    buy = np.zeros((M, L), dtype=np.float32)
+    sell = np.zeros((M, L), dtype=np.float32)
+    for m in range(M):
+        for a in range(price.shape[1]):
+            tgt = buy if side_buy[m, a] else sell
+            tgt[m, price[m, a]] += qty[m, a]
+    return buy, sell
+
+
+def _random_orders(rng, M, A, L, q_max=8):
+    side_buy = rng.random((M, A)) < 0.5
+    price = rng.integers(0, L, size=(M, A)).astype(np.int32)
+    qty = (1.0 + rng.integers(0, q_max, size=(M, A))).astype(np.float32)
+    return side_buy, price, qty
+
+
+@pytest.mark.parametrize("M,A,L", [
+    (1, 1, 4),
+    (4, 16, 16),
+    (8, 64, 32),
+    (3, 200, 128),   # A >> L: heavy per-level accumulation
+    (16, 7, 64),     # A < L: sparse histogram
+])
+def test_onehot_matches_scatter_exactly(M, A, L):
+    rng = np.random.default_rng(M * 100 + A)
+    side_buy, price, qty = _random_orders(rng, M, A, L)
+    want_buy, want_sell = _bin_orders_scatter_ref(side_buy, price, qty, M, L)
+    got_buy, got_sell = bin_orders_onehot(side_buy, price, qty, L, np)
+    # exact-integer f32 equality, not allclose
+    assert got_buy.dtype == np.float32 and got_sell.dtype == np.float32
+    assert (got_buy == want_buy).all()
+    assert (got_sell == want_sell).all()
+
+
+def test_onehot_matches_scatter_jax():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    side_buy, price, qty = _random_orders(rng, 6, 48, 32)
+    want_buy, want_sell = _bin_orders_scatter_ref(side_buy, price, qty, 6, 32)
+    got_buy, got_sell = bin_orders_onehot(
+        jnp.asarray(side_buy), jnp.asarray(price), jnp.asarray(qty), 32, jnp)
+    assert (np.asarray(got_buy) == want_buy).all()
+    assert (np.asarray(got_sell) == want_sell).all()
+
+
+def test_onehot_mass_conservation():
+    rng = np.random.default_rng(11)
+    side_buy, price, qty = _random_orders(rng, 4, 32, 16)
+    buy, sell = bin_orders_onehot(side_buy, price, qty, 16, np)
+    assert buy.sum() + sell.sum() == qty.sum()
+    assert (buy.sum(axis=1) + sell.sum(axis=1) == qty.sum(axis=1)).all()
+
+
+class TestPickTile:
+    def test_divisor_and_bound(self):
+        for m in range(1, 300):
+            mb = pick_tile(m)
+            assert 1 <= mb <= min(8, m)
+            assert m % mb == 0
+
+    def test_prime_m_degenerates_to_one(self):
+        # A prime M > target has no divisor <= target except 1.
+        for m in (11, 13, 8191):
+            assert pick_tile(m) == 1
+
+    def test_m_smaller_than_target(self):
+        # M <= target: the whole ensemble is one tile.
+        for m in (1, 2, 3, 5, 7, 8):
+            assert pick_tile(m) == m
+        assert pick_tile(3, target=8) == 3
+
+    def test_custom_target(self):
+        assert pick_tile(64, target=16) == 16
+        assert pick_tile(24, target=16) == 12
+        assert pick_tile(17, target=16) == 1

@@ -49,8 +49,8 @@ def test_sharded_matmul_collectives_detected():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import summarize
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("model",))
         n = 128
         def g(x, w1, w2):
             return ((x @ w1) @ w2).sum()
@@ -80,8 +80,8 @@ def test_mini_dryrun_smoke_arch():
         from repro.launch import hlo_analysis
         from repro.models.model import Model
         import dataclasses
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = get_config("llama4-scout-17b-a16e", smoke=True)
         model = Model(cfg)
         train_step, opt = make_train_step(cfg)

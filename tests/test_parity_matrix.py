@@ -1,0 +1,232 @@
+"""Paper §IV-B parity matrix, regenerated as an executable test sweep.
+
+The paper's headline correctness claim: across 53 configurations the two
+custom engines produce *bitwise-identical* order books, and aggregate
+statistics match the CPU reference to within 0.1%. Here the matrix spans
+(M, A, L, S) shapes x scenario presets x archetype mixtures:
+
+  * ``pallas-naive`` vs ``pallas-kinetic`` (interpret mode on CPU): every
+    result field bitwise identical — the two-custom-engines experiment;
+  * engine aggregate statistics vs the NumPy reference: relative drift
+    <= 0.1% — the CPU-reference experiment.
+
+Tier-1 runs a fast 8-case subset spanning all scenarios and mixtures; the
+full >= 53-configuration matrix is ``slow``-marked (nightly CI). A ``tpu``-
+marked case re-runs one configuration with real Mosaic lowering.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.config import scenario_config, scenario_names
+
+BOOK_FIELDS = ("bid", "ask", "last_price", "prev_mid", "price_path",
+               "volume_path")
+STATS = ("mean_clearing_price", "volume_per_market", "trade_count",
+         "volatility")
+STAT_TOL = 1e-3  # the paper's 0.1%
+
+# Archetype mixtures: static weights (maker, momentum, fundamentalist);
+# noise takes the remainder. >= 3 distinct mixtures per the paper sweep.
+MIXTURES = {
+    "paper": dict(alpha_maker=0.15, alpha_momentum=0.15,
+                  alpha_fundamentalist=0.0),
+    "fundamental": dict(alpha_maker=0.10, alpha_momentum=0.10,
+                        alpha_fundamentalist=0.30),
+    "mom-heavy": dict(alpha_maker=0.10, alpha_momentum=0.50,
+                      alpha_fundamentalist=0.05),
+    "noise-only": dict(alpha_maker=0.0, alpha_momentum=0.0,
+                       alpha_fundamentalist=0.0),
+}
+
+SHAPES = [  # (M, A, L, S) — includes a prime M and A > L cases
+    (4, 16, 16, 6),
+    (8, 32, 32, 10),
+    (5, 48, 64, 12),
+]
+
+SCENARIOS = scenario_names()  # 6 presets
+
+# 6 scenarios x 4 mixtures x 3 shapes = 72 >= 53 configurations.
+FULL_MATRIX = [
+    (sc, mix, shape)
+    for sc in SCENARIOS
+    for mix in MIXTURES
+    for shape in SHAPES
+]
+
+# Fast tier-1 subset: smallest shape, all 6 scenarios, all 4 mixtures.
+TIER1 = [
+    ("baseline", "paper", SHAPES[0]),
+    ("baseline", "noise-only", SHAPES[0]),
+    ("flash-crash", "fundamental", SHAPES[0]),
+    ("flash-crash", "paper", SHAPES[0]),
+    ("high-vol", "mom-heavy", SHAPES[0]),
+    ("low-vol", "fundamental", SHAPES[0]),
+    ("thin-book", "mom-heavy", SHAPES[0]),
+    ("wide-book", "noise-only", SHAPES[0]),
+]
+
+
+def _case_id(case):
+    sc, mix, (M, A, L, S) = case
+    return f"{sc}-{mix}-M{M}A{A}L{L}S{S}"
+
+
+def _config(case):
+    sc, mix, (M, A, L, S) = case
+    return scenario_config(
+        sc, num_markets=M, num_agents=A, num_levels=L, num_steps=S,
+        seed=FULL_MATRIX.index(case), **MIXTURES[mix])
+
+
+def _assert_parity(case, interpret=True):
+    cfg = _config(case)
+    naive = engine.simulate(cfg, backend="pallas-naive",
+                            interpret=interpret).to_numpy()
+    kinetic = engine.simulate(cfg, backend="pallas-kinetic",
+                              interpret=interpret).to_numpy()
+
+    # Claim 1: the two custom engines are bitwise identical, field by field.
+    for f in BOOK_FIELDS:
+        a, b = getattr(naive, f), getattr(kinetic, f)
+        assert a.dtype == b.dtype and a.shape == b.shape, f
+        assert (a == b).all(), f"{_case_id(case)}: field {f} differs"
+
+    # Claim 2: aggregate statistics within 0.1% of the NumPy reference.
+    reference = engine.simulate(cfg, backend="numpy").to_numpy()
+    for stat in STATS:
+        got = getattr(kinetic, stat)()
+        want = getattr(reference, stat)()
+        if np.isnan(want):
+            assert np.isnan(got), f"{_case_id(case)}: {stat} nan mismatch"
+            continue
+        drift = abs(got - want) / max(abs(want), 1e-9)
+        assert drift <= STAT_TOL, (
+            f"{_case_id(case)}: {stat} drift {drift:.2e} "
+            f"(engine={got}, reference={want})")
+
+
+def test_matrix_regenerates_paper_claim_shape():
+    """The matrix itself must span the paper's claimed breadth."""
+    assert len(FULL_MATRIX) >= 53
+    assert len({sc for sc, _, _ in FULL_MATRIX}) >= 3
+    assert len({mix for _, mix, _ in FULL_MATRIX}) >= 3
+    assert set(TIER1) <= set(FULL_MATRIX)
+
+
+@pytest.mark.parametrize("case", TIER1, ids=_case_id)
+def test_parity_tier1(case):
+    _assert_parity(case)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", FULL_MATRIX, ids=_case_id)
+def test_parity_full_matrix(case):
+    _assert_parity(case)
+
+
+@pytest.mark.tpu
+def test_parity_mosaic_lowering():
+    """One configuration through the real TPU lowering (not interpret)."""
+    import jax
+
+    if jax.default_backend() != "tpu":
+        pytest.skip("requires a TPU backend")
+    _assert_parity(("flash-crash", "paper", SHAPES[1]), interpret=False)
+
+
+# ---- scenario-engine unit checks (fast; ride along with the matrix) ----
+
+def test_mixture_population_counts():
+    from repro.core.config import FUNDAMENTALIST, MAKER, MOMENTUM, NOISE
+
+    cfg = scenario_config("baseline", num_agents=40, num_steps=4,
+                          **MIXTURES["fundamental"])
+    types = np.asarray(cfg.agent_types(np))
+    assert (types == MAKER).sum() == 4
+    assert (types == MOMENTUM).sum() == 4
+    assert (types == FUNDAMENTALIST).sum() == 12
+    assert (types == NOISE).sum() == 20
+    assert abs(sum(cfg.mixture().values()) - 1.0) < 1e-12
+
+
+def test_scenario_override_precedence():
+    cfg = scenario_config("flash-crash", num_steps=20, shock_step=7)
+    assert cfg.scenario == "flash-crash"
+    assert cfg.shock_step == 7          # explicit override wins
+    default = scenario_config("flash-crash", num_steps=20)
+    assert default.shock_step == 10     # preset places the shock mid-run
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        scenario_config("no-such-scenario")
+
+
+def test_conflicting_scenario_override_raises():
+    with pytest.raises(ValueError):
+        scenario_config("baseline", scenario="flash-crash")
+    # a redundant-but-consistent override is fine
+    assert scenario_config("baseline", scenario="baseline").scenario == "baseline"
+
+
+def test_rounding_overshoot_rejected():
+    """Per-class rounding may not assign more agents than exist."""
+    from repro.core.config import MarketConfig
+
+    with pytest.raises(ValueError):
+        MarketConfig(num_agents=2, alpha_maker=0.4, alpha_momentum=0.3,
+                     alpha_fundamentalist=0.3)
+
+
+def test_archetype_counts_sum_to_population():
+    cfg = scenario_config("baseline", num_agents=37, num_steps=4,
+                          **MIXTURES["mom-heavy"])
+    counts = cfg.archetype_counts()
+    assert sum(counts.values()) == 37
+    types = np.asarray(cfg.agent_types(np))
+    for tid, n in counts.items():
+        assert (types == tid).sum() == n
+
+
+def test_flash_crash_moves_the_market():
+    """The shock must actually bite: price drops and volatility jumps at
+    the shock step relative to the baseline twin."""
+    kw = dict(num_markets=8, num_agents=64, num_levels=64, num_steps=16,
+              seed=2)
+    base = engine.simulate(scenario_config("baseline", **kw),
+                           backend="numpy").to_numpy()
+    crash_cfg = scenario_config("flash-crash", **kw)
+    crash = engine.simulate(crash_cfg, backend="numpy").to_numpy()
+    s = crash_cfg.shock_step
+    # identical up to the shock (same RNG stream, same dynamics)...
+    assert (base.price_path[:, :s] == crash.price_path[:, :s]).all()
+    # ...then the crash prints strictly lower on average
+    assert crash.price_path[:, s].mean() < base.price_path[:, s].mean()
+    assert crash.volatility() > base.volatility()
+
+
+def test_fundamentalists_dampen_volatility():
+    """Mean-reversion pressure should reduce dispersion vs a momentum-heavy
+    population under identical noise."""
+    kw = dict(num_markets=16, num_agents=64, num_levels=64, num_steps=40,
+              seed=4)
+    fund = engine.simulate(
+        scenario_config("baseline", alpha_maker=0.1, alpha_momentum=0.0,
+                        alpha_fundamentalist=0.5, **kw),
+        backend="numpy").to_numpy()
+    mom = engine.simulate(
+        scenario_config("baseline", alpha_maker=0.1, alpha_momentum=0.5,
+                        alpha_fundamentalist=0.0, **kw),
+        backend="numpy").to_numpy()
+    assert fund.volatility() < mom.volatility()
+
+
+def test_archetype_registry_complete():
+    from repro.core import agents
+    from repro.core.config import FUNDAMENTALIST, MAKER, MOMENTUM, NOISE
+
+    names = agents.archetype_names()
+    assert names == {NOISE: "noise", MOMENTUM: "momentum", MAKER: "maker",
+                     FUNDAMENTALIST: "fundamentalist"}
