@@ -8,10 +8,11 @@ real hardware.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,7 +59,28 @@ def events_per_s(cfg, seconds: float) -> float:
     return cfg.events() / seconds if seconds > 0 else float("nan")
 
 
-def emit(rows: List[Row]) -> None:
+def emit(rows: List[Row], json_path: Optional[str] = None,
+         benchmark: Optional[str] = None) -> None:
+    """Print CSV rows; optionally also write a machine-readable JSON artifact
+    (the seed of the ``BENCH_*.json`` trajectory uploaded by CI)."""
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
         sys.stdout.flush()
+    if json_path:
+        write_json(rows, json_path, benchmark or "benchmark")
+
+
+def write_json(rows: List[Row], path: str, benchmark: str) -> None:
+    payload = {
+        "benchmark": benchmark,
+        "full_scale": FULL,
+        "rows": [
+            {"name": name, "us": us,
+             "derived": dict(kv.split("=", 1) for kv in derived.split(";")
+                             if "=" in kv)}
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")

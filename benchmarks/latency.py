@@ -1,54 +1,69 @@
 """Paper Fig 6: per-step latency distribution (11 trials, median + min-max).
 
-Per-step latency is the end-to-end time of ONE simulation step, including
-any dispatch overhead — the regime where the persistent engine's single
-launch wins (paper: 22.1us vs 339-1704us).
+Per-step latency is the end-to-end time of ONE simulation step on a *warm*
+session — the regime where the persistent engine's single launch wins
+(paper: 22.1us vs 339-1704us). With the Session API this is finally the
+real warm path: the engine compiles once, the books stay device-resident,
+and each trial times exactly one ``Session.step()`` (its dedicated
+single-step executable), with no re-init and no retrace.
+
+    PYTHONPATH=src python -m benchmarks.latency \
+        --backends numpy,jax-scan --json bench_latency.json
 """
 from __future__ import annotations
 
+import argparse
 import time
+from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import FIXED_A, emit
-from repro.core import engine
+from benchmarks.common import FIXED_A, FULL, Row, _block, emit
 from repro.core.config import MarketConfig
+from repro.core.session import Engine
 
 TRIALS = 11
 
+DEFAULT_BACKENDS = ("numpy", "jax-per-step", "jax-scan", "pallas-naive",
+                    "pallas-kinetic")
 
-def _step_latency(backend: str, cfg: MarketConfig) -> tuple:
-    """Median/min/max per-step latency via single-step simulations (the
-    jit/interpret warmup is excluded by a warmup call)."""
-    import dataclasses
 
-    one = dataclasses.replace(cfg, num_steps=1)
-    engine.simulate(one, backend=backend)  # warmup/compile
+def _step_latency(backend: str, cfg: MarketConfig) -> Tuple[float, float, float]:
+    """Median/min/max warm per-step latency over ``TRIALS`` session steps."""
+    eng = Engine(backend)
+    sess = eng.open(cfg)
+    _block(sess.step())  # warmup: compile the single-step executable
+    warm_traces = eng.trace_count
     times = []
     for _ in range(TRIALS):
         t0 = time.perf_counter()
-        engine.simulate(one, backend=backend)
+        batch = sess.step()
+        _block(batch)
         times.append(time.perf_counter() - t0)
+    assert eng.trace_count == warm_traces, f"{backend}: retraced while warm"
     return float(np.median(times)), float(np.min(times)), float(np.max(times))
 
 
-def run() -> list:
-    cfg = MarketConfig(num_markets=256 if not _full() else 4096,
-                       num_agents=FIXED_A)
+def run(backends=DEFAULT_BACKENDS) -> List[Row]:
+    cfg = MarketConfig(num_markets=4096 if FULL else 256, num_agents=FIXED_A)
     rows = []
-    for b in ("numpy", "jax-per-step", "jax-scan", "pallas-naive",
-              "pallas-kinetic"):
+    for b in backends:
         med, lo, hi = _step_latency(b, cfg)
         rows.append((f"fig6/step_latency/{b}", med * 1e6,
                      f"min_us={lo * 1e6:.1f};max_us={hi * 1e6:.1f}"))
     return rows
 
 
-def _full():
-    from benchmarks.common import FULL
-
-    return FULL
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS),
+                    help="comma-separated backend list")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    rows = run([b for b in args.backends.split(",") if b])
+    emit(rows, json_path=args.json, benchmark="latency")
 
 
 if __name__ == "__main__":
-    emit(run())
+    main()

@@ -1,12 +1,24 @@
 """Quickstart: simulate an ensemble of call-auction markets with KineticSim.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Uses the Session API — the stateful open/step/close lifecycle:
+
+    eng  = Engine(backend)     # caches compiled executables
+    sess = eng.open(cfg)       # live device-resident MarketState
+    sess.run(n)                # advance n steps, get a StepBatch
+
+Migration note: the one-shot ``engine.simulate(cfg, backend=...)`` is kept
+as a thin compatibility wrapper over a one-session run — existing code
+keeps working unchanged, but a warm session amortizes compilation across
+calls and never re-initializes state.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import engine
 from repro.core.config import MarketConfig
+from repro.core.session import Engine
 
 
 def main():
@@ -14,7 +26,9 @@ def main():
                        num_steps=100, seed=42)
     # The paper's engine: persistent, VMEM-resident clearing kernel
     # (interpret mode on CPU; Mosaic lowering on TPU).
-    result = engine.simulate(cfg, backend="pallas-kinetic").to_numpy()
+    eng = Engine("pallas-kinetic")
+    with eng.open(cfg) as sess:
+        result = sess.run_to_result().to_numpy()
     print(f"simulated {cfg.num_markets} markets x {cfg.num_steps} steps "
           f"x {cfg.num_agents} agents = {cfg.events():,} agent-events")
     print(f"mean clearing price : {result.mean_clearing_price():8.3f}")
@@ -22,7 +36,13 @@ def main():
     print(f"trades per market   : {result.trade_count():8.1f}")
     print(f"return volatility   : {result.volatility():8.3f}")
 
-    # Cross-check against the NumPy reference — bitwise identical (paper IV-B)
+    # A second session reuses the cached executable: zero retraces.
+    with eng.open(cfg) as sess:
+        sess.run(cfg.num_steps)
+    print(f"compiled executables traced {eng.trace_count}x for 2 sessions")
+
+    # Cross-check against the NumPy reference — bitwise identical (paper
+    # IV-B); the compat wrapper is itself a one-session run.
     ref = engine.simulate(cfg, backend="numpy").to_numpy()
     assert (ref.price_path == result.price_path).all()
     print("bitwise-identical to the NumPy reference: True")

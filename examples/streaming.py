@@ -1,0 +1,52 @@
+"""Streaming consumption of a live market session (SHIFT-style front door).
+
+    PYTHONPATH=src python examples/streaming.py
+
+A real-time consumer never wants a terminal ``SimResult`` — it wants per-step
+prices as they happen. ``Session.stream`` yields one ``StepBatch(price,
+volume, mid)`` per compiled chunk while the books stay device-resident, so
+the consumer processes slice k while the engine's next chunk runs entirely
+on-device. The demo also shows the RL stepping hook (external order
+injection) and an exact snapshot/restore mid-stream.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.config import scenario_config
+from repro.core.session import Engine, ExternalOrders
+
+
+def main():
+    cfg = scenario_config("flash-crash", num_markets=64, num_agents=128,
+                          num_levels=128, num_steps=400, seed=7)
+    eng = Engine("pallas-kinetic", chunk_size=100)
+
+    print(f"streaming {cfg.num_steps} steps in chunks of 100 "
+          f"(shock at step {cfg.shock_step})")
+    with eng.open(cfg) as sess:
+        for batch in sess.stream(cfg.num_steps):
+            b = batch.to_numpy()
+            lo, hi = sess.step_count - b.num_steps, sess.step_count
+            print(f"  steps [{lo:3d}, {hi:3d}): "
+                  f"mid={b.mid.mean():7.2f}  "
+                  f"volume/market={b.volume.sum(axis=1).mean():7.1f}  "
+                  f"min px={b.price.min():6.1f}")
+
+        # RL stepping hook: snapshot, then compare a hands-off step against
+        # an aggressive external buy sweep from the exact same state.
+        snap = sess.snapshot()
+        passive = sess.step().to_numpy()
+        sess.restore(snap)
+        aggressive = sess.step(ExternalOrders(
+            side_buy=True, price=cfg.num_levels - 1,
+            qty=np.full(cfg.num_markets, 64.0, np.float32))).to_numpy()
+        print(f"next-step volume: hands-off={passive.volume.sum():8.1f}  "
+              f"with external buy sweep={aggressive.volume.sum():8.1f}")
+    print(f"executables traced {eng.trace_count}x "
+          f"(1 chunk + 1 single-step) for the whole stream")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,11 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    Engine,
+    ExternalOrders,
+    Session,
+    StepBatch,
+    backend_available,
+)

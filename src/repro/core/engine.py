@@ -1,5 +1,12 @@
-"""Public engine API: ``simulate(cfg, backend=...)`` with a backend registry,
-plus the scenario front door ``simulate_scenario(name, backend=...)``.
+"""Public engine API.
+
+The stateful front door lives in :mod:`repro.core.session`:
+``Engine(backend, **backend_opts)`` caches compiled chunk executables and
+``engine.open(cfg) -> Session`` holds a live device-resident market. This
+module keeps the historical one-shot surface — ``simulate(cfg, backend=...)``
+and ``simulate_scenario(name, backend=...)`` — as thin compatibility
+wrappers over a one-session run, sharing a module-level engine cache so
+repeated calls reuse warm executables.
 
 Backends (paper §IV's five engines):
   * ``numpy``             — CPU (NumPy) reference, kinetic RNG (bitwise-comparable)
@@ -12,61 +19,78 @@ Backends (paper §IV's five engines):
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.config import MarketConfig, scenario_config, scenario_names
 from repro.core.result import SimResult
+from repro.core.session import (  # noqa: F401 (re-exported API)
+    Engine,
+    ExternalOrders,
+    Session,
+    StepBatch,
+    backend_available,
+    register_backend,
+)
+from repro.core import session as _session
 
-_REGISTRY: Dict[str, Callable[..., SimResult]] = {}
-
-
-def register(name: str):
-    def deco(fn):
-        _REGISTRY[name] = fn
-        return fn
-    return deco
-
-
-def backends():
-    _ensure_builtin()
-    return sorted(_REGISTRY)
-
-
-def _ensure_builtin():
-    if "numpy" in _REGISTRY:
-        return
-    from repro.core import jax_backend, numpy_backend
-
-    _REGISTRY["numpy"] = lambda cfg, **kw: numpy_backend.simulate(
-        cfg, rng_mode="kinetic", **kw)
-    _REGISTRY["numpy-splitmix64"] = lambda cfg, **kw: numpy_backend.simulate(
-        cfg, rng_mode="splitmix64", **kw)
-    _REGISTRY["numpy-pcg64"] = lambda cfg, **kw: numpy_backend.simulate(
-        cfg, rng_mode="pcg64", **kw)
-    _REGISTRY["jax-scan"] = lambda cfg, **kw: jax_backend.simulate(
-        cfg, mode="scan", **kw)
-    _REGISTRY["jax-per-step"] = lambda cfg, **kw: jax_backend.simulate(
-        cfg, mode="per-step", **kw)
-    try:
-        from repro.kernels import ops as _kernel_ops  # registers pallas backends
-    except ImportError:
-        pass
+# Warm engines shared by the compatibility wrappers, keyed by
+# (backend, sorted backend_opts) — repeated simulate() calls with the same
+# options reuse the same compiled executables.
+_COMPAT_ENGINES: Dict[Tuple[Any, ...], Engine] = {}
 
 
-def simulate(cfg: MarketConfig, backend: str = "jax-scan", **kwargs) -> SimResult:
-    _ensure_builtin()
-    if backend not in _REGISTRY:
-        raise KeyError(f"unknown backend {backend!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[backend](cfg, **kwargs)
+def _ensure_builtin() -> None:
+    _session._ensure_builtin()
 
 
-def scenarios():
+def backends() -> List[str]:
+    return _session.backends()
+
+
+def clear_compat_cache() -> None:
+    """Release the wrappers' warm engines and their compiled executables
+    (for long-lived processes sweeping many distinct configurations)."""
+    _COMPAT_ENGINES.clear()
+
+
+def _compat_engine(backend: str, opts: Dict[str, Any]) -> Engine:
+    key = (backend,) + tuple(sorted(opts.items()))
+    eng = _COMPAT_ENGINES.get(key)
+    if eng is None:
+        eng = Engine(backend, **opts)
+        _COMPAT_ENGINES[key] = eng
+    return eng
+
+
+def simulate(cfg: MarketConfig, backend: str = "jax-scan",
+             **kwargs: Any) -> SimResult:
+    """One-shot compatibility wrapper: open a session, run ``cfg.num_steps``
+    steps, return the terminal :class:`SimResult`.
+
+    Raises ``KeyError`` for unknown backends; if a backend failed to
+    register (e.g. the Pallas kernels' import failed), the error carries the
+    recorded reason — see :func:`backend_available`.
+    """
+    with _compat_engine(backend, kwargs).open(cfg) as sess:
+        return sess.run_to_result(cfg.num_steps)
+
+
+def scenarios() -> Tuple[str, ...]:
     """Registered scenario preset names (see repro.core.config)."""
     return scenario_names()
 
 
 def simulate_scenario(name: str, backend: str = "jax-scan",
-                      config_overrides: Dict = None, **kwargs) -> SimResult:
+                      config_overrides: Optional[Dict[str, Any]] = None,
+                      **kwargs: Any) -> SimResult:
     """Build a scenario preset config and simulate it on ``backend``."""
     cfg = scenario_config(name, **(config_overrides or {}))
     return simulate(cfg, backend=backend, **kwargs)
+
+
+def open_scenario(name: str, backend: str = "jax-scan",
+                  config_overrides: Optional[Dict[str, Any]] = None,
+                  **kwargs: Any) -> Session:
+    """Session-API scenario front door: open a warm session on a preset."""
+    cfg = scenario_config(name, **(config_overrides or {}))
+    return _compat_engine(backend, kwargs).open(cfg)

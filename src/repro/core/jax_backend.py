@@ -1,8 +1,8 @@
 """JAX framework baselines (paper §IV: "JAX GPU" and launch-per-step analogue).
 
 Two engines:
-  * ``scan``     — the paper's most competitive framework baseline: the whole
-                   S-step loop fused into one XLA computation via
+  * ``scan``     — the paper's most competitive framework baseline: a fixed
+                   chunk of steps fused into one XLA computation via
                    ``jax.lax.scan`` under ``jax.jit``.
   * ``per-step`` — a host loop dispatching one jitted step at a time, with the
                    book round-tripping device memory every step. This is the
@@ -10,18 +10,25 @@ Two engines:
                    Θ(S·M·L) memory traffic the paper's persistent kernel
                    eliminates.
 
-Both reuse the shared step semantics in :mod:`repro.core.step`.
+Both reuse the shared step semantics in :mod:`repro.core.step`. The session
+entry point is :func:`open_chunk_runner`: the chunk length is static while
+``(step0, n_valid)`` are runtime scalars, so one trace serves any requested
+step count and repeated warm runs never retrace; the carried state buffers
+are donated back to the executable on every call. :func:`simulate` is a
+compatibility wrapper over a one-session run.
 """
 from __future__ import annotations
 
-import functools
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import session
 from repro.core.config import MarketConfig
 from repro.core.result import SimResult
-from repro.core.step import MarketState, initial_state, simulate_step
+from repro.core.step import MarketState, simulate_step
 
 
 def _bin_orders_scatter_jax(side_buy, price, qty, M, L):
@@ -34,53 +41,106 @@ def _bin_orders_scatter_jax(side_buy, price, qty, M, L):
     return buy, sell
 
 
-def _step_fn(cfg: MarketConfig, binning: str, scan_mode: str, state, s):
+def _make_bin_orders(cfg: MarketConfig, binning: str):
     M, L = cfg.num_markets, cfg.num_levels
-    market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
-    bin_orders = None
     if binning == "scatter":
-        bin_orders = lambda sb, p, q: _bin_orders_scatter_jax(sb, p, q, M, L)
-    new_state, out = simulate_step(
-        cfg, state, s, market_ids, jnp, bin_orders=bin_orders, scan=scan_mode
-    )
-    return new_state, out
+        return lambda sb, p, q: _bin_orders_scatter_jax(sb, p, q, M, L)
+    return None  # one-hot MXU default inside simulate_step
+
+
+class JaxChunkRunner(session.ChunkRunner):
+    """jit-compiled chunk executor for the two JAX framework regimes."""
+
+    xp = jnp
+
+    def __init__(self, cfg: MarketConfig, chunk: int, mode: str,
+                 binning: str, scan: str):
+        super().__init__()
+        if mode not in ("scan", "per-step"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.cfg = cfg
+        self.chunk = int(chunk)
+        self.mode = mode
+        M, L = cfg.num_markets, cfg.num_levels
+        market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
+        bin_orders = _make_bin_orders(cfg, binning)
+        self._zero_ext = (jnp.zeros((M, L), jnp.float32),
+                          jnp.zeros((M, L), jnp.float32))
+
+        if mode == "scan":
+            def chunk_fn(state, step0, n_valid, ext_buy, ext_ask):
+                self._trace_count += 1  # python side effect: trace-time only
+                zeros_ext = jnp.zeros_like(ext_buy)
+
+                def body(st, s):
+                    eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
+                    ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
+                    new_st, out = simulate_step(
+                        cfg, st, step0 + s, market_ids, jnp,
+                        bin_orders=bin_orders, scan=scan,
+                        ext_buy=eb, ext_ask=ea,
+                    )
+                    active = s < n_valid
+                    st = MarketState(*(jnp.where(active, new, old)
+                                       for new, old in zip(new_st, st)))
+                    return st, (out.price[:, 0], out.volume[:, 0],
+                                out.mid[:, 0])
+
+                steps = jnp.arange(self.chunk, dtype=jnp.int32)
+                final, (pp, vp, mp) = jax.lax.scan(body, state, steps)
+                return final, pp.T, vp.T, mp.T
+
+            self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0,))
+        else:
+            def step_fn(state, s, ext_buy, ext_ask):
+                self._trace_count += 1
+                return simulate_step(
+                    cfg, state, s, market_ids, jnp, bin_orders=bin_orders,
+                    scan=scan, ext_buy=ext_buy, ext_ask=ext_ask,
+                )
+
+            self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    def run(self, state: MarketState, aux, step0: int, n: int,
+            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+        eb, ea = self._zero_ext if ext is None else ext
+        if self.mode == "scan":
+            state, pp, vp, mp = self._chunk_fn(
+                state, jnp.int32(step0), jnp.int32(n), eb, ea)
+            return state, aux, session.StepBatch(
+                price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n])
+
+        # Launch-per-step regime: one jitted dispatch per step, outputs
+        # materialized on host each step (the deliberate device round-trip).
+        zeros = self._zero_ext[0]
+        prices, volumes, mids = [], [], []
+        for k in range(n):
+            keep = k == 0 and ext is not None
+            state, out = self._step_fn(
+                state, jnp.int32(step0 + k),
+                eb if keep else zeros, ea if keep else zeros)
+            prices.append(jax.device_get(out.price))
+            volumes.append(jax.device_get(out.volume))
+            mids.append(jax.device_get(out.mid))
+        batch = session.StepBatch(
+            price=jnp.asarray(np.concatenate(prices, axis=1)),
+            volume=jnp.asarray(np.concatenate(volumes, axis=1)),
+            mid=jnp.asarray(np.concatenate(mids, axis=1)),
+        )
+        return state, aux, batch
+
+
+def open_chunk_runner(cfg: MarketConfig, chunk: int, mode: str = "scan",
+                      binning: str = "onehot",
+                      scan: str = "cumsum") -> JaxChunkRunner:
+    """Session factory for the JAX framework baselines."""
+    return JaxChunkRunner(cfg, chunk, mode=mode, binning=binning, scan=scan)
 
 
 def simulate(cfg: MarketConfig, mode: str = "scan", binning: str = "onehot",
              scan: str = "cumsum") -> SimResult:
-    """Run the full simulation. mode: 'scan' | 'per-step'."""
-    step = functools.partial(_step_fn, cfg, binning, scan)
-    state = initial_state(cfg, jnp)
-
-    if mode == "scan":
-        @jax.jit
-        def run(state):
-            steps = jnp.arange(cfg.num_steps, dtype=jnp.int32)
-            final, outs = jax.lax.scan(step, state, steps)
-            return final, outs
-
-        final, outs = run(state)
-        price_path = outs.price[..., 0].T   # [S, M, 1] -> [M, S]
-        volume_path = outs.volume[..., 0].T
-    elif mode == "per-step":
-        jit_step = jax.jit(step)
-        prices, volumes = [], []
-        for s in range(cfg.num_steps):
-            state, out = jit_step(state, jnp.int32(s))
-            # Materialize on host: this is the deliberate per-step device
-            # round-trip of the launch-per-step regime.
-            prices.append(jax.device_get(out.price))
-            volumes.append(jax.device_get(out.volume))
-        final = state
-        import numpy as np
-
-        price_path = np.concatenate(prices, axis=1)
-        volume_path = np.concatenate(volumes, axis=1)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-
-    return SimResult(
-        bid=final.bid, ask=final.ask,
-        last_price=final.last_price, prev_mid=final.prev_mid,
-        price_path=jnp.asarray(price_path), volume_path=jnp.asarray(volume_path),
-    )
+    """Compatibility wrapper: one-session run over ``cfg.num_steps``."""
+    runner = open_chunk_runner(
+        cfg, min(session.DEFAULT_CHUNK, cfg.num_steps),
+        mode=mode, binning=binning, scan=scan)
+    return session.run_runner_to_result(runner, cfg)

@@ -5,21 +5,29 @@ binning (exactly the paper's described implementation), sequential over
 steps on the host — so scenario overlays and archetype dispatch can never
 drift from the device engines.
 
-Two RNG modes:
+Three RNG modes:
   * ``kinetic``   — the production counter RNG: bitwise-comparable to every
                     other backend (paper's bitwise-identity experiment).
   * ``splitmix64``— the paper's 64-bit generator (different stream): only
                     statistically comparable, mirroring the paper's
                     CPU-vs-CUDA <0.1% equivalence experiment.
   * ``pcg64``     — NumPy's own PRNG, the paper's literal CPU reference.
+
+The session entry point is :func:`open_chunk_runner`; :func:`simulate` is a
+compatibility wrapper over a one-session run. Because the kinetic and
+SplitMix64 streams are pure functions of the absolute step coordinate —
+and the PCG64 generator persists inside the session — chunked execution is
+bitwise-identical to one-shot in every mode.
 """
 from __future__ import annotations
 
+from typing import Any, Optional, Tuple
+
 import numpy as np
 
-from repro.core import rng
+from repro.core import rng, session
 from repro.core.config import MarketConfig
-from repro.core.step import initial_state, simulate_step
+from repro.core.step import MarketState, simulate_step
 from repro.core.result import SimResult
 
 
@@ -34,39 +42,85 @@ def _bin_orders_scatter(side_buy, price, qty, M, L):
     return buy, sell
 
 
+class NumpyChunkRunner(session.ChunkRunner):
+    """Host-loop chunk executor (no compilation; ``trace_count`` stays 0)."""
+
+    xp = np
+
+    def __init__(self, cfg: MarketConfig, chunk: int, rng_mode: str,
+                 scan: str):
+        super().__init__()
+        if rng_mode not in ("kinetic", "splitmix64", "pcg64"):
+            raise ValueError(f"unknown rng_mode {rng_mode!r}")
+        self.cfg = cfg
+        self.chunk = int(chunk)
+        self.rng_mode = rng_mode
+        self.scan = scan
+        M, L = cfg.num_markets, cfg.num_levels
+        self._market_ids = np.arange(M, dtype=np.int32)[:, None]
+        self._bin = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
+
+    # ---- stateful RNG (PCG64 only) ----
+    def init_aux(self, cfg: MarketConfig) -> Optional[np.random.Generator]:
+        if self.rng_mode == "pcg64":
+            return np.random.Generator(np.random.PCG64(cfg.seed))
+        return None
+
+    def aux_state(self, aux) -> Optional[dict]:
+        return None if aux is None else aux.bit_generator.state
+
+    def restore_aux(self, payload) -> Optional[np.random.Generator]:
+        if self.rng_mode != "pcg64":
+            return None
+        gen = np.random.Generator(np.random.PCG64(self.cfg.seed))
+        gen.bit_generator.state = payload
+        return gen
+
+    def _uniform_fn(self, aux):
+        if self.rng_mode == "kinetic":
+            return None
+        if self.rng_mode == "splitmix64":
+            seed = self.cfg.seed
+
+            def uniform_fn(gid, step, channel):
+                return rng.splitmix64_uniform(seed, gid, step, channel)
+            return uniform_fn
+
+        def uniform_fn(gid, step, channel):
+            return aux.random(size=gid.shape, dtype=np.float32)
+        return uniform_fn
+
+    def run(self, state: MarketState, aux, step0: int, n: int,
+            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+        cfg = self.cfg
+        M = cfg.num_markets
+        uniform_fn = self._uniform_fn(aux)
+        pp = np.zeros((M, n), dtype=np.float32)
+        vp = np.zeros((M, n), dtype=np.float32)
+        mp = np.zeros((M, n), dtype=np.float32)
+        for k in range(n):
+            eb, ea = ext if (k == 0 and ext is not None) else (None, None)
+            state, out = simulate_step(
+                cfg, state, np.int32(step0 + k), self._market_ids, np,
+                bin_orders=self._bin, scan=self.scan, uniform_fn=uniform_fn,
+                ext_buy=eb, ext_ask=ea,
+            )
+            pp[:, k] = out.price[:, 0]
+            vp[:, k] = out.volume[:, 0]
+            mp[:, k] = out.mid[:, 0]
+        return state, aux, session.StepBatch(price=pp, volume=vp, mid=mp)
+
+
+def open_chunk_runner(cfg: MarketConfig, chunk: int,
+                      rng_mode: str = "kinetic",
+                      scan: str = "cumsum") -> NumpyChunkRunner:
+    """Session factory for the CPU reference backend."""
+    return NumpyChunkRunner(cfg, chunk, rng_mode=rng_mode, scan=scan)
+
+
 def simulate(cfg: MarketConfig, rng_mode: str = "kinetic",
              scan: str = "cumsum") -> SimResult:
-    M, L, S = cfg.num_markets, cfg.num_levels, cfg.num_steps
-    state = initial_state(cfg, np)
-    market_ids = np.arange(M, dtype=np.int32)[:, None]
-
-    if rng_mode == "kinetic":
-        uniform_fn = None
-    elif rng_mode == "splitmix64":
-        def uniform_fn(gid, step, channel):
-            return rng.splitmix64_uniform(cfg.seed, gid, step, channel)
-    elif rng_mode == "pcg64":
-        gen = np.random.Generator(np.random.PCG64(cfg.seed))
-
-        def uniform_fn(gid, step, channel):
-            return gen.random(size=gid.shape, dtype=np.float32)
-    else:
-        raise ValueError(f"unknown rng_mode {rng_mode!r}")
-
-    price_path = np.zeros((M, S), dtype=np.float32)
-    volume_path = np.zeros((M, S), dtype=np.float32)
-
-    bin_orders = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
-    for s in range(S):
-        state, out = simulate_step(
-            cfg, state, np.int32(s), market_ids, np,
-            bin_orders=bin_orders, scan=scan, uniform_fn=uniform_fn,
-        )
-        price_path[:, s] = out.price[:, 0]
-        volume_path[:, s] = out.volume[:, 0]
-
-    return SimResult(
-        bid=state.bid, ask=state.ask,
-        last_price=state.last_price, prev_mid=state.prev_mid,
-        price_path=price_path, volume_path=volume_path,
-    )
+    """Compatibility wrapper: one-session run over ``cfg.num_steps``."""
+    runner = open_chunk_runner(cfg, min(session.DEFAULT_CHUNK, cfg.num_steps),
+                               rng_mode=rng_mode, scan=scan)
+    return session.run_runner_to_result(runner, cfg)

@@ -1,18 +1,21 @@
 """Simulation result container + aggregate statistics (paper Table II/Fig 7)."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import numpy as np
 
+# Arrays may be host numpy or device (jax) arrays depending on the backend.
+Array = Any
+
 
 class SimResult(NamedTuple):
-    bid: "array"          # float32[M, L] final resting bids
-    ask: "array"          # float32[M, L] final resting asks
-    last_price: "array"   # float32[M, 1]
-    prev_mid: "array"     # float32[M, 1]
-    price_path: "array"   # float32[M, S] clearing-price path
-    volume_path: "array"  # float32[M, S] per-step transacted volume
+    bid: Array          # float32[M, L] final resting bids
+    ask: Array          # float32[M, L] final resting asks
+    last_price: Array   # float32[M, 1]
+    prev_mid: Array     # float32[M, 1]
+    price_path: Array   # float32[M, S] clearing-price path
+    volume_path: Array  # float32[M, S] per-step transacted volume
 
     def to_numpy(self) -> "SimResult":
         return SimResult(*(np.asarray(x) for x in self))

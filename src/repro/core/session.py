@@ -1,0 +1,465 @@
+"""Stateful session API: open/step/close engine lifecycle with compile-once
+reuse, chunked streaming, and an RL stepping hook.
+
+The paper's headline regime — 22.1µs warm per-step latency, HBM traffic
+independent of step count — is about *persistent state across step
+boundaries*. This module is the front door to that regime:
+
+    eng = Engine("pallas-kinetic")
+    with eng.open(cfg) as sess:           # device-resident MarketState
+        for batch in sess.stream(10_000): # chunked StepBatch slices
+            consume(batch)
+        obs = sess.step(actions)          # gym-style RL hook
+
+Design:
+
+  * :class:`Engine` caches compiled chunk executables per (config-semantics,
+    chunk-length) key, shared by every session it opens — opening a second
+    session with the same shape triggers **zero** retraces.
+  * Each backend supplies a :class:`ChunkRunner`: a fixed ``chunk``-length
+    compiled entry taking runtime ``(step0, n_valid)`` scalars, so one trace
+    serves any requested step count; partial tails are gated branch-free.
+  * State buffers are **donated** back to the executable on every chunk
+    (``jax.jit(..., donate_argnums=(0,))``), so a warm session updates its
+    books in place with no per-call re-init.
+  * Chunked execution is bitwise-identical to one-shot: the RNG is a pure
+    function of the absolute step coordinate and the scenario overlay keys
+    on the absolute step, so chunk boundaries are invisible to the stream.
+  * :meth:`Session.step` injects external orders through a reserved slot in
+    the incoming flow (``simulate_step``'s ``ext_buy``/``ext_ask``) — the
+    gym-style hook for future RL workloads; ``actions=None`` is a bitwise
+    no-op relative to :meth:`Session.run`.
+  * :meth:`Session.snapshot` / :meth:`Session.restore` round-trip the full
+    session state (books, step cursor, stateful RNG) exactly, and wire into
+    :class:`repro.checkpoint.manager.CheckpointManager` via
+    :meth:`Session.save_checkpoint` / :meth:`Session.restore_checkpoint`.
+
+``engine.simulate()`` / ``engine.simulate_scenario()`` remain as thin
+compatibility wrappers over a one-session run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple, Union
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.config import MarketConfig
+from repro.core.result import SimResult
+from repro.core.step import MarketState, initial_state
+
+#: Default compiled chunk length (steps per device call) for streaming runs.
+DEFAULT_CHUNK = 64
+
+# backend name -> factory(cfg, chunk, **backend_opts) -> ChunkRunner
+_FACTORIES: Dict[str, Callable[..., "ChunkRunner"]] = {}
+# backend name -> reason string for backends whose registration failed
+_FAILED: Dict[str, str] = {}
+
+
+class StepBatch(NamedTuple):
+    """A contiguous slice of per-step outputs streamed from a session."""
+
+    price: Any   # float32[M, n] clearing price (last price when no cross)
+    volume: Any  # float32[M, n] transacted volume
+    mid: Any     # float32[M, n] pre-clearing mid used for agent decisions
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.price.shape[-1])
+
+    def to_numpy(self) -> "StepBatch":
+        return StepBatch(*(np.asarray(x) for x in self))
+
+    @staticmethod
+    def concatenate(batches: "list[StepBatch]", xp=np) -> "StepBatch":
+        if len(batches) == 1:
+            return batches[0]
+        return StepBatch(*(xp.concatenate(parts, axis=-1)
+                           for parts in zip(*batches)))
+
+
+class ExternalOrders(NamedTuple):
+    """One external limit order per market for :meth:`Session.step`.
+
+    Each field is broadcastable to ``[M]``: ``side_buy`` bool, ``price``
+    int tick index (clipped to the grid), ``qty`` float lots.
+    """
+
+    side_buy: Any
+    price: Any
+    qty: Any
+
+
+class ChunkRunner:
+    """Backend adapter: a compiled (or host-loop) fixed-chunk executor.
+
+    Subclasses set ``chunk`` and ``xp`` and implement :meth:`run`; stateful
+    RNG backends additionally override the ``aux`` hooks. A runner is
+    immutable and shared by every session opened with the same semantics —
+    all per-session mutable state lives in :class:`Session`.
+    """
+
+    chunk: int = 1
+    xp: Any = np
+
+    def __init__(self) -> None:
+        self._trace_count = 0
+
+    @property
+    def trace_count(self) -> int:
+        """Times the underlying executable was (re)traced; 0 for host loops."""
+        return self._trace_count
+
+    def init_state(self, cfg: MarketConfig) -> MarketState:
+        return initial_state(cfg, self.xp)
+
+    def to_device(self, state: MarketState) -> MarketState:
+        return MarketState(*(self.xp.asarray(np.asarray(x), dtype=self.xp.float32)
+                             for x in state))
+
+    # ---- stateful-RNG hooks (identity for counter-based backends) ----
+    def init_aux(self, cfg: MarketConfig) -> Any:
+        return None
+
+    def aux_state(self, aux: Any) -> Any:
+        """JSON-serializable payload capturing ``aux``, or None."""
+        return None
+
+    def restore_aux(self, payload: Any) -> Any:
+        return None
+
+    def run(self, state: MarketState, aux: Any, step0: int, n: int,
+            ext: Optional[Tuple[Any, Any]]) -> Tuple[MarketState, Any, StepBatch]:
+        """Advance ``n <= self.chunk`` steps from absolute step ``step0``.
+
+        ``ext`` is an optional ``(ext_buy, ext_ask)`` float32[M, L] pair
+        injected at the first step of the chunk. Returns the new state, new
+        aux, and a :class:`StepBatch` whose paths have exactly ``n`` columns.
+        """
+        raise NotImplementedError
+
+
+def register_backend(name: str):
+    """Register a session factory ``f(cfg, chunk, **opts) -> ChunkRunner``."""
+    def deco(fn):
+        _FACTORIES[name] = fn
+        _FAILED.pop(name, None)
+        return fn
+    return deco
+
+
+def _ensure_builtin() -> None:
+    if "numpy" in _FACTORIES:
+        return
+    from repro.core import jax_backend, numpy_backend  # noqa: F401 (register)
+
+    for mode in ("kinetic", "splitmix64", "pcg64"):
+        name = "numpy" if mode == "kinetic" else f"numpy-{mode}"
+        _FACTORIES[name] = _numpy_factory(mode)
+    _FACTORIES["jax-scan"] = _jax_factory("scan")
+    _FACTORIES["jax-per-step"] = _jax_factory("per-step")
+    try:
+        from repro.kernels import ops as _kernel_ops  # noqa: F401 (register)
+    except ImportError as exc:
+        # Record the reason instead of swallowing it: surfaced by
+        # backend_available() and by Engine/simulate KeyErrors.
+        reason = f"{type(exc).__name__}: {exc}"
+        for name in ("pallas-naive", "pallas-kinetic"):
+            _FAILED.setdefault(name, reason)
+
+
+def _numpy_factory(rng_mode: str):
+    def factory(cfg, chunk, **opts):
+        from repro.core import numpy_backend
+
+        return numpy_backend.open_chunk_runner(cfg, chunk, rng_mode=rng_mode,
+                                               **opts)
+    return factory
+
+
+def _jax_factory(mode: str):
+    def factory(cfg, chunk, **opts):
+        from repro.core import jax_backend
+
+        return jax_backend.open_chunk_runner(cfg, chunk, mode=mode, **opts)
+    return factory
+
+
+def backends() -> "list[str]":
+    _ensure_builtin()
+    return sorted(_FACTORIES)
+
+
+def backend_available(name: str) -> Union[bool, str]:
+    """True if ``name`` is registered, the recorded failure-reason string if
+    its registration failed (e.g. a Pallas ImportError), False if unknown."""
+    _ensure_builtin()
+    if name in _FACTORIES:
+        return True
+    if name in _FAILED:
+        return _FAILED[name]
+    return False
+
+
+def _unknown_backend_error(name: str) -> KeyError:
+    if name in _FAILED:
+        return KeyError(
+            f"backend {name!r} failed to register: {_FAILED[name]}")
+    return KeyError(f"unknown backend {name!r}; have {sorted(_FACTORIES)}")
+
+
+def _semantic_key(cfg: MarketConfig) -> Tuple[Any, ...]:
+    """Executable cache key: every config field except ``num_steps``.
+
+    ``num_steps`` never enters the per-step semantics — chunk runners are
+    parametrized by their static chunk length instead — so configs differing
+    only in total step count share one compiled executable.
+    """
+    return tuple(getattr(cfg, f.name) for f in dataclasses.fields(cfg)
+                 if f.name != "num_steps")
+
+
+def run_runner_to_result(runner: ChunkRunner, cfg: MarketConfig) -> SimResult:
+    """One-session run over ``cfg.num_steps`` on a bare runner — the shared
+    body of every backend's ``simulate()`` compatibility wrapper."""
+    state = runner.init_state(cfg)
+    aux = runner.init_aux(cfg)
+    batches, t = [], 0
+    while t < cfg.num_steps:
+        n = min(runner.chunk, cfg.num_steps - t)
+        state, aux, batch = runner.run(state, aux, t, n, None)
+        batches.append(batch)
+        t += n
+    if batches:
+        batch = StepBatch.concatenate(batches, xp=runner.xp)
+    else:
+        empty = runner.xp.zeros((cfg.num_markets, 0), runner.xp.float32)
+        batch = StepBatch(empty, empty, empty)
+    return SimResult(bid=state.bid, ask=state.ask,
+                     last_price=state.last_price, prev_mid=state.prev_mid,
+                     price_path=batch.price, volume_path=batch.volume)
+
+
+class Engine:
+    """Compiled-executable cache + session factory for one backend.
+
+    ``backend_opts`` are backend-specific knobs (``scan=``, ``mb=``,
+    ``interpret=``, ``binning=``) folded into every runner this engine
+    builds. Executables are cached per (config-semantics, chunk-length) and
+    shared across sessions: re-opening the same shape never recompiles.
+    ``cfg.num_steps`` itself is not part of the key, but it does cap the
+    *default* chunk length at ``min(DEFAULT_CHUNK, num_steps)`` — pass an
+    explicit ``chunk_size`` to share one executable across configs whose
+    ``num_steps`` differ below ``DEFAULT_CHUNK``.
+    """
+
+    def __init__(self, backend: str = "jax-scan", *,
+                 chunk_size: Optional[int] = None, **backend_opts: Any):
+        _ensure_builtin()
+        if backend not in _FACTORIES:
+            raise _unknown_backend_error(backend)
+        self.backend = backend
+        self.chunk_size = chunk_size
+        self.backend_opts = dict(backend_opts)
+        self._runners: Dict[Tuple[Any, ...], ChunkRunner] = {}
+
+    @property
+    def trace_count(self) -> int:
+        """Total traces across all cached executables (retrace detector)."""
+        return sum(r.trace_count for r in self._runners.values())
+
+    def clear_cache(self) -> None:
+        """Drop all cached executables (long-lived config-sweep processes)."""
+        self._runners.clear()
+
+    def _runner(self, cfg: MarketConfig, chunk: int) -> ChunkRunner:
+        key = _semantic_key(cfg) + (chunk,)
+        runner = self._runners.get(key)
+        if runner is None:
+            runner = _FACTORIES[self.backend](cfg, chunk, **self.backend_opts)
+            self._runners[key] = runner
+        return runner
+
+    def open(self, cfg: MarketConfig, *,
+             chunk_size: Optional[int] = None) -> "Session":
+        """Open a live session holding a device-resident :class:`MarketState`."""
+        chunk = chunk_size or self.chunk_size \
+            or min(DEFAULT_CHUNK, cfg.num_steps)
+        return Session(self, cfg, self._runner(cfg, max(1, chunk)))
+
+
+class Session:
+    """A live simulation: device-resident books + an absolute step cursor.
+
+    Obtained from :meth:`Engine.open`; usable as a context manager. All
+    advancement APIs (:meth:`run`, :meth:`stream`, :meth:`step`) move the
+    same cursor, so they interleave freely with bitwise-reproducible
+    results — any chunking of S steps equals one ``run(S)`` call.
+    """
+
+    def __init__(self, engine: Engine, cfg: MarketConfig, runner: ChunkRunner):
+        self._engine = engine
+        self.cfg = cfg
+        self._runner = runner
+        self._step_runner: Optional[ChunkRunner] = None
+        self._state = runner.init_state(cfg)
+        self._aux = runner.init_aux(cfg)
+        self._t = 0
+        self._closed = False
+
+    # ---- lifecycle ----
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Release the device-resident state (the executables stay cached)."""
+        self._state = None
+        self._aux = None
+        self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("session is closed")
+
+    # ---- introspection ----
+    @property
+    def state(self) -> MarketState:
+        """Current device-resident state. Do not hold across :meth:`run`:
+        the buffers are donated to the next chunk call."""
+        self._check_open()
+        return self._state
+
+    @property
+    def step_count(self) -> int:
+        """Absolute number of steps advanced since open/restore."""
+        return self._t
+
+    # ---- advancement ----
+    def stream(self, n_steps: Optional[int] = None) -> Iterator[StepBatch]:
+        """Advance ``n_steps`` (default ``cfg.num_steps``), yielding one
+        :class:`StepBatch` per compiled chunk as it completes."""
+        self._check_open()
+        remaining = self.cfg.num_steps if n_steps is None else int(n_steps)
+        while remaining > 0:
+            n = min(self._runner.chunk, remaining)
+            self._state, self._aux, batch = self._runner.run(
+                self._state, self._aux, self._t, n, None)
+            self._t += n
+            remaining -= n
+            yield batch
+
+    def run(self, n_steps: Optional[int] = None) -> StepBatch:
+        """Advance ``n_steps`` (default ``cfg.num_steps``) and return the
+        concatenated :class:`StepBatch` for exactly those steps."""
+        self._check_open()
+        n = self.cfg.num_steps if n_steps is None else int(n_steps)
+        batches = list(self.stream(n))
+        if not batches:
+            M = self.cfg.num_markets
+            empty = self._runner.xp.zeros((M, 0), self._runner.xp.float32)
+            return StepBatch(empty, empty, empty)
+        return StepBatch.concatenate(batches, xp=self._runner.xp)
+
+    def step(self, actions: Optional[Any] = None) -> StepBatch:
+        """Gym-style hook: advance exactly one step, optionally injecting
+        external orders through the reserved slot.
+
+        ``actions`` is an :class:`ExternalOrders` (or a ``(side_buy, price,
+        qty)`` triple / mapping with those keys), one order per market;
+        ``None`` advances the market untouched — bitwise-identical to a
+        one-step :meth:`run`. Uses a dedicated single-step executable (shared
+        through the engine cache) so warm per-step latency has no chunk
+        overhead. Returns the one-column :class:`StepBatch` observation.
+        """
+        self._check_open()
+        if self._step_runner is None:
+            self._step_runner = self._engine._runner(self.cfg, 1)
+        ext = self._build_ext(actions)
+        self._state, self._aux, batch = self._step_runner.run(
+            self._state, self._aux, self._t, 1, ext)
+        self._t += 1
+        return batch
+
+    def _build_ext(self, actions: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        if actions is None:
+            return None
+        if isinstance(actions, dict):
+            actions = ExternalOrders(actions["side_buy"], actions["price"],
+                                     actions["qty"])
+        side_buy, price, qty = actions
+        M, L = self.cfg.num_markets, self.cfg.num_levels
+        side = np.broadcast_to(np.asarray(side_buy, dtype=bool).reshape(-1),
+                               (M,))
+        tick = np.clip(
+            np.broadcast_to(np.asarray(price, dtype=np.int64).reshape(-1), (M,)),
+            0, L - 1)
+        lots = np.broadcast_to(
+            np.asarray(qty, dtype=np.float32).reshape(-1), (M,))
+        ext_buy = np.zeros((M, L), dtype=np.float32)
+        ext_ask = np.zeros((M, L), dtype=np.float32)
+        rows = np.arange(M)
+        ext_buy[rows, tick] = np.where(side, lots, np.float32(0.0))
+        ext_ask[rows, tick] = np.where(side, np.float32(0.0), lots)
+        return ext_buy, ext_ask
+
+    # ---- results ----
+    def to_result(self, batch: StepBatch) -> SimResult:
+        """Assemble a terminal :class:`SimResult` from the final books plus a
+        streamed batch — the one-shot ``simulate()`` compatibility shape."""
+        self._check_open()
+        s = self._state
+        return SimResult(bid=s.bid, ask=s.ask, last_price=s.last_price,
+                         prev_mid=s.prev_mid, price_path=batch.price,
+                         volume_path=batch.volume)
+
+    def run_to_result(self, n_steps: Optional[int] = None) -> SimResult:
+        return self.to_result(self.run(n_steps))
+
+    # ---- snapshot / restore ----
+    def snapshot(self) -> Dict[str, Any]:
+        """Exact host-side capture: books, step cursor, stateful RNG."""
+        self._check_open()
+        snap: Dict[str, Any] = {
+            field: np.asarray(value)
+            for field, value in zip(MarketState._fields, self._state)
+        }
+        snap["t"] = self._t
+        snap["rng"] = self._runner.aux_state(self._aux)
+        return snap
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Restore from :meth:`snapshot` — resumes the exact stream."""
+        self._check_open()
+        self._state = self._runner.to_device(
+            MarketState(*(snap[f] for f in MarketState._fields)))
+        self._t = int(snap["t"])
+        rng = snap.get("rng")
+        self._aux = (self._runner.restore_aux(rng) if rng is not None
+                     else self._runner.init_aux(self.cfg)
+                     if self._aux is not None else None)
+
+    def save_checkpoint(self, manager, step: Optional[int] = None) -> int:
+        """Persist the session through a ``CheckpointManager``; returns the
+        checkpoint step (defaults to the session's step cursor)."""
+        from repro.checkpoint import manager as ckpt
+
+        step = self._t if step is None else int(step)
+        manager.save(step, ckpt.session_tree(self.snapshot()))
+        manager.wait()
+        return step
+
+    def restore_checkpoint(self, manager, step: Optional[int] = None) -> int:
+        """Restore from a ``CheckpointManager``; returns the restored step."""
+        from repro.checkpoint import manager as ckpt
+
+        tree = manager.restore(step)
+        if tree is None:
+            raise FileNotFoundError(
+                f"no checkpoint found in {manager.dir}")
+        self.restore(ckpt.snapshot_from_tree(tree))
+        return self._t

@@ -84,8 +84,18 @@ def simulate_step(
     bin_orders: Callable = None,
     scan: str = "cumsum",
     uniform_fn: Callable = None,
+    ext_buy=None,
+    ext_ask=None,
 ):
-    """Advance all markets one step. Returns (MarketState, StepOutput)."""
+    """Advance all markets one step. Returns (MarketState, StepOutput).
+
+    ``ext_buy``/``ext_ask`` (optional float32[M, L]) are externally injected
+    order quantities — the session layer's reserved agent slot for RL-style
+    stepping. They join the incoming flow after agent binning, exactly as if
+    one extra agent had quoted them this step. Zero arrays are a bitwise
+    no-op (exact-integer f32 adds), so gated injection never perturbs the
+    stream; ``None`` keeps pre-session traces byte-identical.
+    """
     if bin_orders is None:
         bin_orders = lambda s, p, q: bin_orders_onehot(s, p, q, cfg.num_levels, xp)
     f32 = xp.float32
@@ -107,6 +117,10 @@ def simulate_step(
     # Incoming orders join the resting book; clearing runs over the total.
     total_buy = resting_bid + buy
     total_ask = state.ask + sell
+    if ext_buy is not None:
+        total_buy = total_buy + ext_buy
+    if ext_ask is not None:
+        total_ask = total_ask + ext_ask
 
     # Phase 4: cooperative parallel clearing (lines 14-21)
     cleared = auction.clear(total_buy, total_ask, xp, scan=scan)

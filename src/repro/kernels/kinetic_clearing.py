@@ -95,6 +95,131 @@ def pick_tile(num_markets: int, target: int = 8) -> int:
     return mb
 
 
+def _chunk_kernel_body(
+    step0_ref, nvalid_ref,
+    bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
+    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+    price_path_ref, volume_path_ref, mid_path_ref,
+    *, cfg: MarketConfig, mb: int, chunk: int, scan: str,
+):
+    """Session variant of the persistent scheduler: a fixed ``chunk``-length
+    trace that serves *any* requested step count.
+
+    ``step0`` (runtime scalar) offsets the RNG / scenario step coordinate so
+    a warm session resumes mid-stream; ``n_valid`` (runtime scalar) gates the
+    carried state with branch-free ``where`` masks so a partial tail chunk
+    advances exactly ``n_valid`` steps without retracing. External orders
+    (``ext_buy``/``ext_ask``, the RL stepping hook's reserved slot) are
+    injected at the first local step only; zero arrays are bitwise no-ops.
+    """
+    i = pl.program_id(0)
+    step0 = step0_ref[0, 0]
+    n_valid = nvalid_ref[0, 0]
+
+    bid = bid_ref[...]
+    ask = ask_ref[...]
+    last = last_ref[...]
+    pmid = pmid_ref[...]
+    ext_b = ext_buy_ref[...]
+    ext_a = ext_ask_ref[...]
+    zeros_ext = jnp.zeros_like(ext_b)
+
+    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+
+    def body(s, carry):
+        bid, ask, last, pmid, pp, vp, mp = carry
+        state = MarketState(bid=bid, ask=ask, last_price=last, prev_mid=pmid)
+        eb = jnp.where(s == jnp.int32(0), ext_b, zeros_ext)
+        ea = jnp.where(s == jnp.int32(0), ext_a, zeros_ext)
+        new_state, out = simulate_step(
+            cfg, state, step0 + s, market_ids, jnp, bin_orders=None,
+            scan=scan, ext_buy=eb, ext_ask=ea,
+        )
+        # Steps past n_valid are computed but discarded — the carried state
+        # only advances while active, and the caller slices the paths.
+        active = s < n_valid
+        bid = jnp.where(active, new_state.bid, bid)
+        ask = jnp.where(active, new_state.ask, ask)
+        last = jnp.where(active, new_state.last_price, last)
+        pmid = jnp.where(active, new_state.prev_mid, pmid)
+        pp = jax.lax.dynamic_update_slice(pp, out.price, (0, s))
+        vp = jax.lax.dynamic_update_slice(vp, out.volume, (0, s))
+        mp = jax.lax.dynamic_update_slice(mp, out.mid, (0, s))
+        return bid, ask, last, pmid, pp, vp, mp
+
+    pp0 = jnp.zeros((mb, chunk), jnp.float32)
+    vp0 = jnp.zeros((mb, chunk), jnp.float32)
+    mp0 = jnp.zeros((mb, chunk), jnp.float32)
+    bid, ask, last, pmid, pp, vp, mp = jax.lax.fori_loop(
+        0, chunk, body, (bid, ask, last, pmid, pp0, vp0, mp0)
+    )
+
+    out_bid_ref[...] = bid
+    out_ask_ref[...] = ask
+    out_last_ref[...] = last
+    out_pmid_ref[...] = pmid
+    price_path_ref[...] = pp
+    volume_path_ref[...] = vp
+    mid_path_ref[...] = mp
+
+
+def kinetic_clearing_chunk(
+    bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
+    step0: jax.Array, n_valid: jax.Array,
+    ext_buy: jax.Array, ext_ask: jax.Array,
+    *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """``num_steps``-parametrized persistent entry for the Session API.
+
+    One trace (per static ``chunk`` length) serves every chunk of up to
+    ``chunk`` steps: ``step0``/``n_valid`` are int32[1, 1] runtime scalars.
+    Deliberately *not* jitted here — the session runner owns the ``jax.jit``
+    wrapper so it can donate the state buffers and count traces.
+
+    Returns ``(bid, ask, last, pmid, price_path[M, chunk],
+    volume_path[M, chunk], mid_path[M, chunk])``; only the first ``n_valid``
+    path columns are meaningful.
+    """
+    M, L = bid.shape
+    if M % mb:
+        raise ValueError(f"M={M} not divisible by tile mb={mb}")
+    grid = (M // mb,)
+
+    book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
+    step_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    path_spec = pl.BlockSpec((mb, chunk), lambda i: (i, 0))
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        )
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
+        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
+        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel_body, cfg=cfg, mb=mb, chunk=chunk,
+                          scan=scan),
+        grid=grid,
+        in_specs=[step_spec, step_spec, book_spec, book_spec, scalar_spec,
+                  scalar_spec, book_spec, book_spec],
+        out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
+                   path_spec, path_spec, path_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+        **kwargs,
+    )(step0, n_valid, bid, ask, last, pmid, ext_buy, ext_ask)
+
+
 @functools.partial(
     jax.jit, static_argnames=("cfg", "mb", "scan", "interpret")
 )

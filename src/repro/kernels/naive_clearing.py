@@ -104,3 +104,102 @@ def naive_clearing(
         host_step, (bid, ask, last, pmid), steps
     )
     return bid, ask, last, pmid, pp.T, vp.T
+
+
+def _chunk_step_kernel_body(
+    step_ref,
+    bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
+    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+    price_ref, volume_ref, mid_ref,
+    *, cfg: MarketConfig, mb: int, scan: str,
+):
+    """Per-step kernel with external-order inputs (Session API variant)."""
+    i = pl.program_id(0)
+    s = step_ref[0, 0]
+    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+    state = MarketState(
+        bid=bid_ref[...], ask=ask_ref[...],
+        last_price=last_ref[...], prev_mid=pmid_ref[...],
+    )
+    new_state, out = simulate_step(
+        cfg, state, s, market_ids, jnp, scan=scan,
+        ext_buy=ext_buy_ref[...], ext_ask=ext_ask_ref[...],
+    )
+    out_bid_ref[...] = new_state.bid
+    out_ask_ref[...] = new_state.ask
+    out_last_ref[...] = new_state.last_price
+    out_pmid_ref[...] = new_state.prev_mid
+    price_ref[...] = out.price
+    volume_ref[...] = out.volume
+    mid_ref[...] = out.mid
+
+
+def naive_clearing_chunk(
+    bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
+    step0: jax.Array, n_valid: jax.Array,
+    ext_buy: jax.Array, ext_ask: jax.Array,
+    *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
+    interpret: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Session entry for the launch-per-step regime: ``chunk`` kernel
+    launches per call, state round-tripping HBM between launches.
+
+    Mirrors :func:`kinetic_clearing_chunk`'s contract — ``step0``/``n_valid``
+    int32[1, 1] runtime scalars, external orders injected at the first local
+    step, gated state so a partial tail advances exactly ``n_valid`` steps —
+    but keeps the Θ(chunk) dispatches and Θ(chunk·M·L) HBM traffic that this
+    ablation exists to exhibit. Not jitted here; the session runner owns jit.
+    """
+    M, L = bid.shape
+    if M % mb:
+        raise ValueError(f"M={M} not divisible by tile mb={mb}")
+    grid = (M // mb,)
+
+    book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
+    step_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, L), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+    )
+    step_call = pl.pallas_call(
+        functools.partial(_chunk_step_kernel_body, cfg=cfg, mb=mb, scan=scan),
+        grid=grid,
+        in_specs=[step_spec, book_spec, book_spec, scalar_spec, scalar_spec,
+                  book_spec, book_spec],
+        out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
+                   scalar_spec, scalar_spec, scalar_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+
+    step0_s = step0[0, 0]
+    n_valid_s = n_valid[0, 0]
+    zeros_ext = jnp.zeros_like(ext_buy)
+
+    def host_step(carry, s):
+        bid, ask, last, pmid = carry
+        eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
+        ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
+        step_arr = jnp.full((1, 1), step0_s + s, dtype=jnp.int32)
+        nbid, nask, nlast, npmid, price, volume, mid = step_call(
+            step_arr, bid, ask, last, pmid, eb, ea
+        )
+        active = s < n_valid_s
+        bid = jnp.where(active, nbid, bid)
+        ask = jnp.where(active, nask, ask)
+        last = jnp.where(active, nlast, last)
+        pmid = jnp.where(active, npmid, pmid)
+        return (bid, ask, last, pmid), (price[:, 0], volume[:, 0], mid[:, 0])
+
+    steps = jnp.arange(chunk, dtype=jnp.int32)
+    (bid, ask, last, pmid), (pp, vp, mp) = jax.lax.scan(
+        host_step, (bid, ask, last, pmid), steps
+    )
+    return bid, ask, last, pmid, pp.T, vp.T, mp.T

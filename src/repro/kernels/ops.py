@@ -1,52 +1,110 @@
-"""Jit'd public wrappers for the Pallas engines + backend registration.
+"""Session runners + public wrappers for the Pallas engines.
 
 On this CPU container the kernels execute in ``interpret=True`` mode (the
 kernel body runs as pure JAX ops — bit-exact semantics); on TPU the same
 entry points lower via Mosaic. ``interpret=None`` auto-detects.
+
+Both Pallas families are plumbed through the Session API: the chunk entries
+(:func:`repro.kernels.kinetic_clearing.kinetic_clearing_chunk`,
+:func:`repro.kernels.naive_clearing.naive_clearing_chunk`) take runtime
+``(step0, n_valid)`` scalars over a static chunk length, so one trace serves
+any requested step count; the runner jits them with donated state buffers.
+``simulate_kinetic``/``simulate_naive`` remain one-session compatibility
+wrappers registered behind ``engine.simulate``.
 """
 from __future__ import annotations
 
-import jax
+from typing import Any, Optional, Tuple
 
-from repro.core import engine
+import jax
+import jax.numpy as jnp
+
+from repro.core import session
 from repro.core.config import MarketConfig
 from repro.core.result import SimResult
-from repro.core.step import initial_state
-from repro.kernels.kinetic_clearing import kinetic_clearing, pick_tile
-from repro.kernels.naive_clearing import naive_clearing
+from repro.core.step import MarketState
+from repro.kernels.kinetic_clearing import kinetic_clearing_chunk, pick_tile
+from repro.kernels.naive_clearing import naive_clearing_chunk
 
 
-def _auto_interpret(interpret):
+def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
 
 
-def _simulate_with(kernel_fn, cfg: MarketConfig, mb=None, scan="cumsum",
-                   interpret=None) -> SimResult:
-    import jax.numpy as jnp
+class PallasChunkRunner(session.ChunkRunner):
+    """jit wrapper around a chunk-parametrized Pallas entry point."""
 
-    state = initial_state(cfg, jnp)
-    mb = pick_tile(cfg.num_markets) if mb is None else mb
-    bid, ask, last, pmid, pp, vp = kernel_fn(
-        state.bid, state.ask, state.last_price, state.prev_mid,
-        cfg=cfg, mb=mb, scan=scan, interpret=_auto_interpret(interpret),
-    )
-    return SimResult(bid=bid, ask=ask, last_price=last, prev_mid=pmid,
-                     price_path=pp, volume_path=vp)
+    xp = jnp
+
+    def __init__(self, kernel_chunk_fn, cfg: MarketConfig, chunk: int,
+                 mb: Optional[int], scan: str, interpret: Optional[bool]):
+        super().__init__()
+        self.cfg = cfg
+        self.chunk = int(chunk)
+        mb = pick_tile(cfg.num_markets) if mb is None else mb
+        interpret = _auto_interpret(interpret)
+        M, L = cfg.num_markets, cfg.num_levels
+        self._zero_ext = (jnp.zeros((M, L), jnp.float32),
+                          jnp.zeros((M, L), jnp.float32))
+
+        def chunk_fn(state, step0, n_valid, ext_buy, ext_ask):
+            self._trace_count += 1  # python side effect: trace-time only
+            return kernel_chunk_fn(
+                state.bid, state.ask, state.last_price, state.prev_mid,
+                step0, n_valid, ext_buy, ext_ask,
+                cfg=cfg, chunk=self.chunk, mb=mb, scan=scan,
+                interpret=interpret,
+            )
+
+        self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0,))
+
+    def run(self, state: MarketState, aux, step0: int, n: int,
+            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+        eb, ea = self._zero_ext if ext is None else ext
+        step0_arr = jnp.full((1, 1), step0, dtype=jnp.int32)
+        nvalid_arr = jnp.full((1, 1), n, dtype=jnp.int32)
+        bid, ask, last, pmid, pp, vp, mp = self._chunk_fn(
+            state, step0_arr, nvalid_arr, eb, ea)
+        new_state = MarketState(bid=bid, ask=ask, last_price=last,
+                                prev_mid=pmid)
+        return new_state, aux, session.StepBatch(
+            price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n])
 
 
-@engine.register("pallas-kinetic")
-def simulate_kinetic(cfg: MarketConfig, mb=None, scan="cumsum",
-                     interpret=None) -> SimResult:
-    """The paper's engine: persistent, VMEM-resident, one kernel for S steps."""
-    return _simulate_with(kinetic_clearing, cfg, mb=mb, scan=scan,
+@session.register_backend("pallas-kinetic")
+def open_kinetic_runner(cfg: MarketConfig, chunk: int, mb=None,
+                        scan: str = "cumsum",
+                        interpret: Optional[bool] = None) -> PallasChunkRunner:
+    """The paper's engine: persistent, VMEM-resident, one launch per chunk."""
+    return PallasChunkRunner(kinetic_clearing_chunk, cfg, chunk, mb=mb,
+                             scan=scan, interpret=interpret)
+
+
+@session.register_backend("pallas-naive")
+def open_naive_runner(cfg: MarketConfig, chunk: int, mb=None,
+                      scan: str = "cumsum",
+                      interpret: Optional[bool] = None) -> PallasChunkRunner:
+    """Ablation: per-step kernel launches, HBM-resident book."""
+    return PallasChunkRunner(naive_clearing_chunk, cfg, chunk, mb=mb,
+                             scan=scan, interpret=interpret)
+
+
+def _simulate_with(factory, cfg: MarketConfig, **opts: Any) -> SimResult:
+    runner = factory(cfg, min(session.DEFAULT_CHUNK, cfg.num_steps), **opts)
+    return session.run_runner_to_result(runner, cfg)
+
+
+def simulate_kinetic(cfg: MarketConfig, mb=None, scan: str = "cumsum",
+                     interpret: Optional[bool] = None) -> SimResult:
+    """Compatibility wrapper: one-session run of the persistent engine."""
+    return _simulate_with(open_kinetic_runner, cfg, mb=mb, scan=scan,
                           interpret=interpret)
 
 
-@engine.register("pallas-naive")
-def simulate_naive(cfg: MarketConfig, mb=None, scan="cumsum",
-                   interpret=None) -> SimResult:
-    """Ablation: per-step kernel launches, HBM-resident book."""
-    return _simulate_with(naive_clearing, cfg, mb=mb, scan=scan,
+def simulate_naive(cfg: MarketConfig, mb=None, scan: str = "cumsum",
+                   interpret: Optional[bool] = None) -> SimResult:
+    """Compatibility wrapper: one-session run of the per-step ablation."""
+    return _simulate_with(open_naive_runner, cfg, mb=mb, scan=scan,
                           interpret=interpret)

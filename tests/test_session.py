@@ -1,0 +1,256 @@
+"""Session API: chunk-boundary semantics, compile-once reuse, RL hook.
+
+Acceptance sweep for the stateful open/step/close lifecycle:
+  * any chunking of S steps is bitwise-identical to one ``run(S)`` call on
+    every registered backend — including a flash-crash config whose
+    ``shock_step`` straddles a chunk boundary;
+  * ``snapshot()/restore()`` round-trips exactly (incl. the stateful PCG64
+    generator), and survives a ``CheckpointManager`` round-trip on disk;
+  * repeated runs on a warm jax/pallas session trigger no retracing
+    (trace-counter assertion);
+  * ``Session.step(actions=...)`` injects external orders; ``actions=None``
+    is bitwise-invisible to the stream.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.config import MarketConfig, scenario_config
+from repro.core.session import DEFAULT_CHUNK, Engine, ExternalOrders, StepBatch
+
+CFG = MarketConfig(num_markets=4, num_agents=16, num_levels=16, num_steps=12,
+                   seed=3)
+
+ALL_BACKENDS = ["numpy", "numpy-splitmix64", "numpy-pcg64", "jax-scan",
+                "jax-per-step", "pallas-naive", "pallas-kinetic"]
+# One representative per backend family for the slower sweeps.
+FAMILY_BACKENDS = ["numpy", "numpy-pcg64", "jax-scan", "pallas-naive",
+                   "pallas-kinetic"]
+
+BATCH_FIELDS = ("price", "volume", "mid")
+STATE_FIELDS = ("bid", "ask", "last_price", "prev_mid")
+
+_ENGINES = {}
+
+
+def _engine(backend: str) -> Engine:
+    # Shared warm engines: compile-once reuse across the whole module.
+    if backend not in _ENGINES:
+        _ENGINES[backend] = Engine(backend)
+    return _ENGINES[backend]
+
+
+def _assert_batches_equal(a: StepBatch, b: StepBatch, ctx: str):
+    a, b = a.to_numpy(), b.to_numpy()
+    for f in BATCH_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype and x.shape == y.shape, (ctx, f)
+        assert (x == y).all(), f"{ctx}: batch field {f} differs"
+
+
+def _assert_states_equal(a, b, ctx: str):
+    for f, x, y in zip(STATE_FIELDS, a, b):
+        x, y = np.asarray(x), np.asarray(y)
+        assert (x == y).all(), f"{ctx}: state field {f} differs"
+
+
+def _run_chunked(eng: Engine, cfg: MarketConfig, chunking):
+    sess = eng.open(cfg)
+    parts = [sess.run(k) for k in chunking]
+    batch = StepBatch(*(np.concatenate([np.asarray(g) for g in field], axis=1)
+                        for field in zip(*(p.to_numpy() for p in parts))))
+    return sess, batch
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_chunked_bitwise_identical(backend):
+    """run(S) == any chunking of S: batches and final books, bitwise."""
+    eng = _engine(backend)
+    whole_sess = eng.open(CFG)
+    whole = whole_sess.run(CFG.num_steps)
+    for chunking in ((1,) * CFG.num_steps, (5, 4, 3), (11, 1)):
+        sess, batch = _run_chunked(eng, CFG, chunking)
+        ctx = f"{backend} chunking={chunking}"
+        _assert_batches_equal(whole, batch, ctx)
+        _assert_states_equal(whole_sess.state, sess.state, ctx)
+
+
+@pytest.mark.parametrize("backend", FAMILY_BACKENDS)
+def test_flash_crash_shock_straddles_chunk_boundary(backend):
+    """The scenario overlay keys on the *absolute* step, so a shock placed
+    right at / next to a chunk boundary is chunking-invariant."""
+    cfg = scenario_config("flash-crash", num_markets=4, num_agents=16,
+                          num_levels=16, num_steps=14, shock_step=7, seed=5)
+    eng = _engine(backend)
+    whole_sess = eng.open(cfg)
+    whole = whole_sess.run(14)
+    # boundary exactly at the shock, one step before, and one after
+    for chunking in ((7, 7), (6, 8), (8, 6), (3, 4, 7)):
+        sess, batch = _run_chunked(eng, cfg, chunking)
+        ctx = f"{backend} shock chunking={chunking}"
+        _assert_batches_equal(whole, batch, ctx)
+        _assert_states_equal(whole_sess.state, sess.state, ctx)
+    # sanity: the shock actually bit (price drops at shock_step)
+    p = whole.to_numpy().price
+    assert p[:, 7].mean() < p[:, 6].mean()
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_session_matches_one_shot_simulate(backend):
+    """The compat wrapper and a manual session produce identical results."""
+    r = engine.simulate(CFG, backend=backend).to_numpy()
+    sess = _engine(backend).open(CFG)
+    s = sess.run_to_result(CFG.num_steps).to_numpy()
+    for f in r._fields:
+        assert (getattr(r, f) == getattr(s, f)).all(), (backend, f)
+
+
+@pytest.mark.parametrize("backend", ["jax-scan", "jax-per-step",
+                                     "pallas-naive", "pallas-kinetic"])
+def test_warm_session_never_retraces(backend):
+    """Repeated runs, fresh sessions, different step counts and different
+    num_steps totals all reuse one compiled chunk executable."""
+    eng = Engine(backend)  # fresh engine: count traces from zero
+    sess = eng.open(CFG)
+    sess.run(12)
+    assert eng.trace_count == 1
+    sess.run(12)        # warm re-run
+    sess.run(5)         # partial chunk: n_valid gating, same trace
+    other = eng.open(CFG)               # second session, same semantics
+    other.run(12)
+    # num_steps is not part of the executable key (same explicit chunk)
+    longer = eng.open(dataclasses.replace(CFG, num_steps=24), chunk_size=12)
+    longer.run(24)
+    assert eng.trace_count == 1
+    # The gym-style hook uses its own single-step executable — exactly one
+    # more trace, then warm forever.
+    sess.step()
+    sess.step(ExternalOrders(side_buy=True, price=3, qty=2.0))
+    other.step()
+    assert eng.trace_count == 2
+
+
+@pytest.mark.parametrize("backend", FAMILY_BACKENDS)
+def test_snapshot_restore_roundtrip(backend):
+    """restore(snapshot()) resumes the exact stream — books, cursor, RNG."""
+    eng = _engine(backend)
+    sess = eng.open(CFG)
+    sess.run(5)
+    snap = sess.snapshot()
+    first = sess.run(7)
+    final_first = [np.asarray(x) for x in sess.state]
+    sess.restore(snap)
+    assert sess.step_count == 5
+    second = sess.run(7)
+    _assert_batches_equal(first, second, f"{backend} snapshot/restore")
+    _assert_states_equal(final_first, sess.state, f"{backend} snapshot/restore")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "numpy-pcg64", "pallas-kinetic"])
+def test_checkpoint_manager_roundtrip(backend, tmp_path):
+    """Session state survives a CheckpointManager disk round-trip exactly
+    (incl. PCG64's 128-bit generator state via the JSON meta leaf)."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    eng = _engine(backend)
+    sess = eng.open(CFG)
+    sess.run(5)
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    step = sess.save_checkpoint(mgr)
+    assert step == 5
+    ref = sess.run(7)
+
+    fresh = eng.open(CFG)
+    assert fresh.restore_checkpoint(mgr) == 5
+    got = fresh.run(7)
+    _assert_batches_equal(ref, got, f"{backend} checkpoint")
+    _assert_states_equal(sess.state, fresh.state, f"{backend} checkpoint")
+
+
+@pytest.mark.parametrize("backend", FAMILY_BACKENDS)
+def test_step_none_is_bitwise_invisible(backend):
+    """run(4) + step() + run(7) == run(12): the hook shares the stream."""
+    eng = _engine(backend)
+    whole = eng.open(CFG).run(12)
+    sess = eng.open(CFG)
+    parts = [sess.run(4), sess.step(), sess.run(7)]
+    mix = StepBatch(*(np.concatenate([np.asarray(g) for g in field], axis=1)
+                      for field in zip(*(p.to_numpy() for p in parts))))
+    _assert_batches_equal(whole, mix, f"{backend} step-interleave")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax-scan", "pallas-kinetic"])
+def test_step_actions_inject_external_orders(backend):
+    """A marketable external buy prints a trade a no-action twin does not."""
+    quiet = dataclasses.replace(CFG, p_marketable=0.0, alpha_maker=0.0,
+                                alpha_momentum=0.0)
+    eng = _engine(backend)
+    with eng.open(quiet) as active, eng.open(quiet) as control:
+        L = quiet.num_levels
+        obs = active.step(ExternalOrders(side_buy=True, price=L - 1,
+                                         qty=100.0)).to_numpy()
+        base = control.step().to_numpy()
+        assert obs.volume.sum() > base.volume.sum()
+        assert active.step_count == control.step_count == 1
+        # the dict spelling is accepted too
+        active.step({"side_buy": False, "price": 0, "qty": 1.0})
+
+
+def test_step_batch_shapes_and_stream():
+    eng = _engine("numpy")
+    sess = eng.open(CFG)
+    chunks = list(sess.stream(12))
+    assert sum(c.num_steps for c in chunks) == 12
+    assert all(c.price.shape[0] == CFG.num_markets for c in chunks)
+    empty = sess.run(0)
+    assert empty.num_steps == 0
+    sess.close()
+    with pytest.raises(RuntimeError):
+        sess.run(1)
+
+
+def test_default_chunk_bounds():
+    big = dataclasses.replace(CFG, num_steps=10 * DEFAULT_CHUNK)
+    eng = Engine("numpy")
+    assert eng.open(big)._runner.chunk == DEFAULT_CHUNK
+    assert eng.open(CFG)._runner.chunk == CFG.num_steps
+
+
+# ---- satellite: backend availability introspection ----
+
+def test_backend_available():
+    assert engine.backend_available("numpy") is True
+    assert engine.backend_available("jax-scan") is True
+    assert engine.backend_available("no-such-backend") is False
+
+
+def test_unknown_backend_error_lists_registry():
+    with pytest.raises(KeyError, match="no-such-backend"):
+        engine.simulate(CFG, backend="no-such-backend")
+
+
+def test_failed_backend_reason_surfaced(monkeypatch):
+    """A recorded registration failure shows up in backend_available and in
+    the KeyError raised for the failed backend."""
+    from repro.core import session
+
+    monkeypatch.setitem(session._FAILED, "pallas-broken",
+                        "ImportError: no module named 'jax.experimental'")
+    avail = engine.backend_available("pallas-broken")
+    assert isinstance(avail, str) and "ImportError" in avail
+    with pytest.raises(KeyError, match="failed to register"):
+        Engine("pallas-broken")
+
+
+def test_simulate_scenario_accepts_none_overrides():
+    import inspect
+
+    sig = inspect.signature(engine.simulate_scenario)
+    assert sig.parameters["config_overrides"].default is None
+    r = engine.simulate_scenario(
+        "flash-crash", backend="numpy",
+        config_overrides={"num_markets": 4, "num_agents": 16,
+                          "num_levels": 16, "num_steps": 8})
+    assert np.asarray(r.price_path).shape == (4, 8)
