@@ -3,46 +3,157 @@
 Throughput = M*A*S / wall_time (agent-events/s), per backend, with
 KineticSim speedups vs each baseline — the paper's exact report structure
 at CPU-tractable scale (see common.FULL).
+
+Beyond the paper's single-device table this sweep also records the *sharded*
+regime: when the process has >= 2 devices (real TPUs, or CPU hosts forced
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), the Pallas
+engines re-run with the ensemble sharded over all devices at equal
+per-device M (weak scaling), reporting per-device events/s and the
+weak-scaling efficiency vs the unsharded baseline.
+
+    PYTHONPATH=src python -m benchmarks.throughput_sweep \
+        --backends numpy,jax-scan,pallas-kinetic --markets 16,64 \
+        --json bench/BENCH_throughput.json
+
+``--json`` writes the machine-readable ``BENCH_throughput.json`` artifact
+uploaded by CI next to ``BENCH_latency.json`` (the perf trajectory record).
 """
 from __future__ import annotations
 
+import argparse
+from typing import List, Optional
+
 from benchmarks.common import (AGENT_SWEEP, FIXED_A, FIXED_M, MARKET_SWEEP,
-                               STEPS, emit, events_per_s, time_call)
-from repro.core import engine
+                               STEPS, Row, emit, events_per_s, time_call)
 from repro.core.config import MarketConfig
+from repro.core.session import Engine
 
 BACKENDS = ["numpy", "jax-per-step", "jax-scan", "pallas-naive",
             "pallas-kinetic"]
+SHARDABLE = ("pallas-kinetic", "pallas-naive")
 
 
-def _sweep(tag, configs) -> list:
-    rows = []
+def _device_count() -> int:
+    import jax
+
+    return len(jax.devices())
+
+
+def _time_session_run(eng: Engine, cfg: MarketConfig, trials: int) -> float:
+    """Median wall time of a full warm-engine session run (compile excluded
+    by the warmup call; re-opening a session reuses cached executables)."""
+
+    def once():
+        with eng.open(cfg) as sess:
+            return sess.run(cfg.num_steps)
+
+    t, _ = time_call(once, trials=trials, warmup=1)
+    return t
+
+
+def _sweep(tag: str, configs, backends, engines, trials: int) -> List[Row]:
+    rows: List[Row] = []
     for cfg in configs:
         per_backend = {}
-        for b in BACKENDS:
-            t, _ = time_call(engine.simulate, cfg, backend=b, trials=3,
-                             warmup=1)
+        for b in backends:
+            t = _time_session_run(engines[b], cfg, trials)
             per_backend[b] = t
             rows.append((
                 f"tableIII/{tag}/M{cfg.num_markets}_A{cfg.num_agents}/{b}",
                 t * 1e6,
                 f"events_per_s={events_per_s(cfg, t):.4g}"))
-        k = per_backend["pallas-kinetic"]
-        rows.append((
-            f"tableIII/{tag}/M{cfg.num_markets}_A{cfg.num_agents}/speedups",
-            k * 1e6,
-            ";".join(f"vs_{b}={per_backend[b] / k:.2f}x"
-                     for b in BACKENDS if b != "pallas-kinetic")))
+        if "pallas-kinetic" in per_backend and len(per_backend) > 1:
+            k = per_backend["pallas-kinetic"]
+            rows.append((
+                f"tableIII/{tag}/M{cfg.num_markets}_A{cfg.num_agents}/speedups",
+                k * 1e6,
+                ";".join(f"vs_{b}={per_backend[b] / k:.2f}x"
+                         for b in per_backend if b != "pallas-kinetic")))
     return rows
 
 
-def run() -> list:
+def _sharded_sweep(markets, backends, engines, trials: int,
+                   stats_only: bool) -> List[Row]:
+    """Weak scaling: D devices at equal per-device M (total M scales by D).
+
+    Reports per-device events/s for both layouts; ``weak_scaling=`` is the
+    sharded per-device rate over the unsharded rate (1.0 = perfect). On
+    CPU runners with forced host devices the "devices" share physical
+    cores, so treat those numbers as plumbing checks, not speedups.
+    """
+    devices = _device_count()
+    if devices < 2:
+        return [("tableIII/sharded/skipped", 0.0,
+                 "reason=single_device;hint=XLA_FLAGS="
+                 "--xla_force_host_platform_device_count=N")]
+    rows: List[Row] = []
+    opts = {"stats_only": True} if stats_only else {}
+    mode = "stats_only" if stats_only else "paths"
+    for b in backends:
+        if b not in SHARDABLE:
+            continue
+        # Default mode reuses the warm engines _sweep already compiled;
+        # stats_only runners need their own executables.
+        single_eng = Engine(b, **opts) if stats_only else engines[b]
+        sharded_eng = Engine(b, devices=devices, **opts)
+        for m in markets:
+            base = MarketConfig(num_markets=m, num_agents=FIXED_A,
+                                num_steps=STEPS)
+            total = MarketConfig(num_markets=m * devices, num_agents=FIXED_A,
+                                 num_steps=STEPS)
+            t1 = _time_session_run(single_eng, base, trials)
+            td = _time_session_run(sharded_eng, total, trials)
+            per_dev_single = events_per_s(base, t1)
+            per_dev_sharded = events_per_s(total, td) / devices
+            rows.append((
+                f"tableIII/sharded/M{m}xD{devices}_A{FIXED_A}/{b}/{mode}",
+                td * 1e6,
+                f"events_per_s={events_per_s(total, td):.4g};"
+                f"per_device_events_per_s={per_dev_sharded:.4g};"
+                f"single_device_events_per_s={per_dev_single:.4g};"
+                f"weak_scaling={per_dev_sharded / per_dev_single:.3f};"
+                f"devices={devices}"))
+    return rows
+
+
+def run(backends=BACKENDS, markets: Optional[List[int]] = None,
+        agents: Optional[List[int]] = None, trials: int = 3,
+        stats_only: bool = False) -> List[Row]:
+    markets = MARKET_SWEEP if markets is None else markets
+    agents = AGENT_SWEEP if agents is None else agents
+    engines = {b: Engine(b) for b in backends}
     market_cfgs = [MarketConfig(num_markets=m, num_agents=FIXED_A,
-                                num_steps=STEPS) for m in MARKET_SWEEP]
+                                num_steps=STEPS) for m in markets]
     agent_cfgs = [MarketConfig(num_markets=FIXED_M, num_agents=a,
-                               num_steps=STEPS) for a in AGENT_SWEEP]
-    return (_sweep("markets", market_cfgs) + _sweep("agents", agent_cfgs))
+                               num_steps=STEPS) for a in agents]
+    return (_sweep("markets", market_cfgs, backends, engines, trials)
+            + _sweep("agents", agent_cfgs, backends, engines, trials)
+            + _sharded_sweep(markets, backends, engines, trials, stats_only))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default=",".join(BACKENDS),
+                    help="comma-separated backend list")
+    ap.add_argument("--markets", default=None,
+                    help="comma-separated M sweep (default: common.MARKET_SWEEP)")
+    ap.add_argument("--agents", default=None,
+                    help="comma-separated A sweep (default: common.AGENT_SWEEP)")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--stats-only", action="store_true",
+                    help="run the sharded section in stats_only mode "
+                         "(Θ(M) output traffic)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact "
+                         "(BENCH_throughput.json)")
+    args = ap.parse_args()
+    parse_ints = lambda s: [int(x) for x in s.split(",") if x] if s else None
+    rows = run(backends=[b for b in args.backends.split(",") if b],
+               markets=parse_ints(args.markets),
+               agents=parse_ints(args.agents),
+               trials=args.trials, stats_only=args.stats_only)
+    emit(rows, json_path=args.json, benchmark="throughput")
 
 
 if __name__ == "__main__":
-    emit(run())
+    main()

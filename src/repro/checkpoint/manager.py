@@ -37,22 +37,29 @@ _SESSION_ARRAY_FIELDS = ("bid", "ask", "last_price", "prev_mid")
 def session_tree(snapshot: Dict[str, Any]) -> Dict[str, Any]:
     """Pack a ``Session.snapshot()`` dict into a checkpointable pytree.
 
-    Array leaves (the book state) go in as-is; non-array metadata — the step
-    cursor and any stateful-RNG payload (PCG64 state holds 128-bit ints that
-    numpy cannot represent) — is JSON-encoded into a unicode scalar leaf.
+    Array leaves (the book state, and the ``stats_only`` accumulators when
+    present) go in as-is; non-array metadata — the step cursor and any
+    stateful-RNG payload (PCG64 state holds 128-bit ints that numpy cannot
+    represent) — is JSON-encoded into a unicode scalar leaf.
     """
     meta = {k: v for k, v in snapshot.items()
-            if k not in _SESSION_ARRAY_FIELDS}
-    return {
+            if k not in _SESSION_ARRAY_FIELDS and k != "stats"}
+    tree = {
         "state": {k: np.asarray(snapshot[k]) for k in _SESSION_ARRAY_FIELDS},
         "meta": np.asarray(json.dumps(meta)),
     }
+    if snapshot.get("stats") is not None:
+        tree["stats"] = {k: np.asarray(v)
+                         for k, v in snapshot["stats"].items()}
+    return tree
 
 
 def snapshot_from_tree(tree: Dict[str, Any]) -> Dict[str, Any]:
     """Inverse of :func:`session_tree` (for ``Session.restore``)."""
     snap: Dict[str, Any] = dict(tree["state"])
     snap.update(json.loads(str(tree["meta"])))
+    if "stats" in tree:
+        snap["stats"] = dict(tree["stats"])
     return snap
 
 

@@ -31,6 +31,7 @@ from repro.core.session import (  # noqa: F401 (re-exported API)
     backend_available,
     register_backend,
 )
+from repro.core.stats import MarketStats  # noqa: F401 (re-exported API)
 from repro.core import session as _session
 
 # Warm engines shared by the compatibility wrappers, keyed by

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import session
+from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.result import SimResult
 from repro.core.step import MarketState, simulate_step
@@ -54,13 +55,14 @@ class JaxChunkRunner(session.ChunkRunner):
     xp = jnp
 
     def __init__(self, cfg: MarketConfig, chunk: int, mode: str,
-                 binning: str, scan: str):
+                 binning: str, scan: str, stats_only: bool = False):
         super().__init__()
         if mode not in ("scan", "per-step"):
             raise ValueError(f"unknown mode {mode!r}")
         self.cfg = cfg
         self.chunk = int(chunk)
         self.mode = mode
+        self.stats_only = bool(stats_only)
         M, L = cfg.num_markets, cfg.num_levels
         market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
         bin_orders = _make_bin_orders(cfg, binning)
@@ -68,11 +70,12 @@ class JaxChunkRunner(session.ChunkRunner):
                           jnp.zeros((M, L), jnp.float32))
 
         if mode == "scan":
-            def chunk_fn(state, step0, n_valid, ext_buy, ext_ask):
+            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
                 self._trace_count += 1  # python side effect: trace-time only
                 zeros_ext = jnp.zeros_like(ext_buy)
 
-                def body(st, s):
+                def body(carry, s):
+                    st, acc = carry
                     eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
                     ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
                     new_st, out = simulate_step(
@@ -83,14 +86,21 @@ class JaxChunkRunner(session.ChunkRunner):
                     active = s < n_valid
                     st = MarketState(*(jnp.where(active, new, old)
                                        for new, old in zip(new_st, st)))
-                    return st, (out.price[:, 0], out.volume[:, 0],
-                                out.mid[:, 0])
+                    if self.stats_only:
+                        acc = stats_mod.accumulate(acc, out.mid, out.volume,
+                                                   active, jnp)
+                        return (st, acc), None
+                    return (st, acc), (out.price[:, 0], out.volume[:, 0],
+                                       out.mid[:, 0])
 
                 steps = jnp.arange(self.chunk, dtype=jnp.int32)
-                final, (pp, vp, mp) = jax.lax.scan(body, state, steps)
-                return final, pp.T, vp.T, mp.T
+                (final, acc), ys = jax.lax.scan(body, (state, stats), steps)
+                if self.stats_only:
+                    return final, acc, None
+                pp, vp, mp = ys
+                return final, None, (pp.T, vp.T, mp.T)
 
-            self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0,))
+            self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
             def step_fn(state, s, ext_buy, ext_ask):
                 self._trace_count += 1
@@ -100,15 +110,28 @@ class JaxChunkRunner(session.ChunkRunner):
                 )
 
             self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+            # stats_only accumulation between dispatches stays on device.
+            self._acc_fn = jax.jit(
+                lambda acc, mid, vol: stats_mod.accumulate(
+                    acc, mid, vol, True, jnp),
+                donate_argnums=(0,))
 
-    def run(self, state: MarketState, aux, step0: int, n: int,
-            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+    def _empty_batch(self) -> session.StepBatch:
+        empty = jnp.zeros((self.cfg.num_markets, 0), jnp.float32)
+        return session.StepBatch(price=empty, volume=empty, mid=empty)
+
+    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+            stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
         eb, ea = self._zero_ext if ext is None else ext
         if self.mode == "scan":
-            state, pp, vp, mp = self._chunk_fn(
-                state, jnp.int32(step0), jnp.int32(n), eb, ea)
+            state, stats, paths = self._chunk_fn(
+                state, stats if self.stats_only else None,
+                jnp.int32(step0), jnp.int32(n), eb, ea)
+            if self.stats_only:
+                return state, aux, self._empty_batch(), stats
+            pp, vp, mp = paths
             return state, aux, session.StepBatch(
-                price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n])
+                price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n]), None
 
         # Launch-per-step regime: one jitted dispatch per step, outputs
         # materialized on host each step (the deliberate device round-trip).
@@ -119,22 +142,29 @@ class JaxChunkRunner(session.ChunkRunner):
             state, out = self._step_fn(
                 state, jnp.int32(step0 + k),
                 eb if keep else zeros, ea if keep else zeros)
-            prices.append(jax.device_get(out.price))
-            volumes.append(jax.device_get(out.volume))
-            mids.append(jax.device_get(out.mid))
+            if self.stats_only:
+                stats = self._acc_fn(stats, out.mid, out.volume)
+            else:
+                prices.append(jax.device_get(out.price))
+                volumes.append(jax.device_get(out.volume))
+                mids.append(jax.device_get(out.mid))
+        if self.stats_only:
+            return state, aux, self._empty_batch(), stats
         batch = session.StepBatch(
             price=jnp.asarray(np.concatenate(prices, axis=1)),
             volume=jnp.asarray(np.concatenate(volumes, axis=1)),
             mid=jnp.asarray(np.concatenate(mids, axis=1)),
         )
-        return state, aux, batch
+        return state, aux, batch, None
 
 
 def open_chunk_runner(cfg: MarketConfig, chunk: int, mode: str = "scan",
                       binning: str = "onehot",
-                      scan: str = "cumsum") -> JaxChunkRunner:
+                      scan: str = "cumsum",
+                      stats_only: bool = False) -> JaxChunkRunner:
     """Session factory for the JAX framework baselines."""
-    return JaxChunkRunner(cfg, chunk, mode=mode, binning=binning, scan=scan)
+    return JaxChunkRunner(cfg, chunk, mode=mode, binning=binning, scan=scan,
+                          stats_only=stats_only)
 
 
 def simulate(cfg: MarketConfig, mode: str = "scan", binning: str = "onehot",

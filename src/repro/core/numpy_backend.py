@@ -26,6 +26,7 @@ from typing import Any, Optional, Tuple
 import numpy as np
 
 from repro.core import rng, session
+from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.step import MarketState, simulate_step
 from repro.core.result import SimResult
@@ -48,7 +49,7 @@ class NumpyChunkRunner(session.ChunkRunner):
     xp = np
 
     def __init__(self, cfg: MarketConfig, chunk: int, rng_mode: str,
-                 scan: str):
+                 scan: str, stats_only: bool = False):
         super().__init__()
         if rng_mode not in ("kinetic", "splitmix64", "pcg64"):
             raise ValueError(f"unknown rng_mode {rng_mode!r}")
@@ -56,6 +57,7 @@ class NumpyChunkRunner(session.ChunkRunner):
         self.chunk = int(chunk)
         self.rng_mode = rng_mode
         self.scan = scan
+        self.stats_only = bool(stats_only)
         M, L = cfg.num_markets, cfg.num_levels
         self._market_ids = np.arange(M, dtype=np.int32)[:, None]
         self._bin = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
@@ -90,14 +92,15 @@ class NumpyChunkRunner(session.ChunkRunner):
             return aux.random(size=gid.shape, dtype=np.float32)
         return uniform_fn
 
-    def run(self, state: MarketState, aux, step0: int, n: int,
-            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+            stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
         cfg = self.cfg
         M = cfg.num_markets
         uniform_fn = self._uniform_fn(aux)
-        pp = np.zeros((M, n), dtype=np.float32)
-        vp = np.zeros((M, n), dtype=np.float32)
-        mp = np.zeros((M, n), dtype=np.float32)
+        width = 0 if self.stats_only else n
+        pp = np.zeros((M, width), dtype=np.float32)
+        vp = np.zeros((M, width), dtype=np.float32)
+        mp = np.zeros((M, width), dtype=np.float32)
         for k in range(n):
             eb, ea = ext if (k == 0 and ext is not None) else (None, None)
             state, out = simulate_step(
@@ -105,17 +108,24 @@ class NumpyChunkRunner(session.ChunkRunner):
                 bin_orders=self._bin, scan=self.scan, uniform_fn=uniform_fn,
                 ext_buy=eb, ext_ask=ea,
             )
-            pp[:, k] = out.price[:, 0]
-            vp[:, k] = out.volume[:, 0]
-            mp[:, k] = out.mid[:, 0]
-        return state, aux, session.StepBatch(price=pp, volume=vp, mid=mp)
+            if self.stats_only:
+                stats = stats_mod.accumulate(stats, out.mid, out.volume,
+                                             True, np)
+            else:
+                pp[:, k] = out.price[:, 0]
+                vp[:, k] = out.volume[:, 0]
+                mp[:, k] = out.mid[:, 0]
+        return (state, aux, session.StepBatch(price=pp, volume=vp, mid=mp),
+                stats)
 
 
 def open_chunk_runner(cfg: MarketConfig, chunk: int,
                       rng_mode: str = "kinetic",
-                      scan: str = "cumsum") -> NumpyChunkRunner:
+                      scan: str = "cumsum",
+                      stats_only: bool = False) -> NumpyChunkRunner:
     """Session factory for the CPU reference backend."""
-    return NumpyChunkRunner(cfg, chunk, rng_mode=rng_mode, scan=scan)
+    return NumpyChunkRunner(cfg, chunk, rng_mode=rng_mode, scan=scan,
+                            stats_only=stats_only)
 
 
 def simulate(cfg: MarketConfig, rng_mode: str = "kinetic",

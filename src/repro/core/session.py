@@ -30,9 +30,16 @@ Design:
     gym-style hook for future RL workloads; ``actions=None`` is a bitwise
     no-op relative to :meth:`Session.run`.
   * :meth:`Session.snapshot` / :meth:`Session.restore` round-trip the full
-    session state (books, step cursor, stateful RNG) exactly, and wire into
+    session state (books, step cursor, stateful RNG, and any ``stats_only``
+    accumulators) exactly, and wire into
     :class:`repro.checkpoint.manager.CheckpointManager` via
     :meth:`Session.save_checkpoint` / :meth:`Session.restore_checkpoint`.
+  * Sessions are device-layout transparent: a runner may shard the market
+    axis over a ``("markets",)`` mesh (``Engine(backend, devices=N)``) and
+    every advancement/snapshot API behaves identically — bitwise — to the
+    single-device session. In ``stats_only`` mode the per-step paths are
+    replaced by carried per-market aggregates (:attr:`Session.stats`),
+    making session output traffic Θ(M) independent of horizon.
 
 ``engine.simulate()`` / ``engine.simulate_scenario()`` remain as thin
 compatibility wrappers over a one-session run.
@@ -47,6 +54,7 @@ import numpy as np
 
 from repro.core.config import MarketConfig
 from repro.core.result import SimResult
+from repro.core.stats import MarketStats, init_stats
 from repro.core.step import MarketState, initial_state
 
 #: Default compiled chunk length (steps per device call) for streaming runs.
@@ -103,6 +111,9 @@ class ChunkRunner:
 
     chunk: int = 1
     xp: Any = np
+    #: Runners opened with ``stats_only=True`` replace per-step path outputs
+    #: with carried :class:`repro.core.stats.MarketStats` accumulators.
+    stats_only: bool = False
 
     def __init__(self) -> None:
         self._trace_count = 0
@@ -119,6 +130,17 @@ class ChunkRunner:
         return MarketState(*(self.xp.asarray(np.asarray(x), dtype=self.xp.float32)
                              for x in state))
 
+    # ---- stats_only accumulators (None unless the runner enables them) ----
+    def init_stats(self, cfg: MarketConfig) -> Optional[MarketStats]:
+        if not self.stats_only:
+            return None
+        return init_stats(cfg.num_markets, self.xp)
+
+    def stats_to_device(self, stats: MarketStats) -> MarketStats:
+        return MarketStats(*(self.xp.asarray(np.asarray(x),
+                                             dtype=self.xp.float32)
+                             for x in stats))
+
     # ---- stateful-RNG hooks (identity for counter-based backends) ----
     def init_aux(self, cfg: MarketConfig) -> Any:
         return None
@@ -131,12 +153,18 @@ class ChunkRunner:
         return None
 
     def run(self, state: MarketState, aux: Any, step0: int, n: int,
-            ext: Optional[Tuple[Any, Any]]) -> Tuple[MarketState, Any, StepBatch]:
+            ext: Optional[Tuple[Any, Any]],
+            stats: Optional[MarketStats] = None,
+            ) -> Tuple[MarketState, Any, StepBatch, Optional[MarketStats]]:
         """Advance ``n <= self.chunk`` steps from absolute step ``step0``.
 
         ``ext`` is an optional ``(ext_buy, ext_ask)`` float32[M, L] pair
         injected at the first step of the chunk. Returns the new state, new
-        aux, and a :class:`StepBatch` whose paths have exactly ``n`` columns.
+        aux, a :class:`StepBatch` whose paths have exactly ``n`` columns,
+        and the updated stats accumulators. In ``stats_only`` mode the
+        carried ``stats`` must be threaded through every call (the batch
+        comes back with zero-width paths); otherwise ``stats`` is ignored
+        and returned as ``None``.
         """
         raise NotImplementedError
 
@@ -224,12 +252,19 @@ def _semantic_key(cfg: MarketConfig) -> Tuple[Any, ...]:
 def run_runner_to_result(runner: ChunkRunner, cfg: MarketConfig) -> SimResult:
     """One-session run over ``cfg.num_steps`` on a bare runner — the shared
     body of every backend's ``simulate()`` compatibility wrapper."""
+    if runner.stats_only:
+        # A SimResult has nowhere to carry the accumulators — returning
+        # zero-width paths would silently lose every output.
+        raise ValueError(
+            "stats_only is a Session-API mode: open a session and read "
+            "Session.stats instead of using the one-shot simulate() wrappers")
     state = runner.init_state(cfg)
     aux = runner.init_aux(cfg)
+    stats = runner.init_stats(cfg)
     batches, t = [], 0
     while t < cfg.num_steps:
         n = min(runner.chunk, cfg.num_steps - t)
-        state, aux, batch = runner.run(state, aux, t, n, None)
+        state, aux, batch, stats = runner.run(state, aux, t, n, None, stats)
         batches.append(batch)
         t += n
     if batches:
@@ -246,7 +281,10 @@ class Engine:
     """Compiled-executable cache + session factory for one backend.
 
     ``backend_opts`` are backend-specific knobs (``scan=``, ``mb=``,
-    ``interpret=``, ``binning=``) folded into every runner this engine
+    ``interpret=``, ``binning=``, and for the Pallas engines the scaling
+    knobs ``devices=``/``mesh=`` market-axis sharding, ``stats_only=``
+    in-kernel statistics, ``autotune=``/``agent_chunk=`` tile selection —
+    see ``repro.kernels.ops``) folded into every runner this engine
     builds. Executables are cached per (config-semantics, chunk-length) and
     shared across sessions: re-opening the same shape never recompiles.
     ``cfg.num_steps`` itself is not part of the key, but it does cap the
@@ -306,6 +344,7 @@ class Session:
         self._step_runner: Optional[ChunkRunner] = None
         self._state = runner.init_state(cfg)
         self._aux = runner.init_aux(cfg)
+        self._stats = runner.init_stats(cfg)
         self._t = 0
         self._closed = False
 
@@ -320,6 +359,7 @@ class Session:
         """Release the device-resident state (the executables stay cached)."""
         self._state = None
         self._aux = None
+        self._stats = None
         self._closed = True
 
     def _check_open(self) -> None:
@@ -339,6 +379,19 @@ class Session:
         """Absolute number of steps advanced since open/restore."""
         return self._t
 
+    @property
+    def stats(self) -> Optional[MarketStats]:
+        """Running per-market statistics (``stats_only`` sessions; else None).
+
+        The accumulators are device-resident and carried through every chunk
+        call — reading them here materializes a host copy. Use
+        ``stats.mean_mid()`` / ``stats.var_mid()`` for the derived moments.
+        """
+        self._check_open()
+        if self._stats is None:
+            return None
+        return self._stats.to_numpy()
+
     # ---- advancement ----
     def stream(self, n_steps: Optional[int] = None) -> Iterator[StepBatch]:
         """Advance ``n_steps`` (default ``cfg.num_steps``), yielding one
@@ -347,8 +400,8 @@ class Session:
         remaining = self.cfg.num_steps if n_steps is None else int(n_steps)
         while remaining > 0:
             n = min(self._runner.chunk, remaining)
-            self._state, self._aux, batch = self._runner.run(
-                self._state, self._aux, self._t, n, None)
+            self._state, self._aux, batch, self._stats = self._runner.run(
+                self._state, self._aux, self._t, n, None, self._stats)
             self._t += n
             remaining -= n
             yield batch
@@ -380,8 +433,8 @@ class Session:
         if self._step_runner is None:
             self._step_runner = self._engine._runner(self.cfg, 1)
         ext = self._build_ext(actions)
-        self._state, self._aux, batch = self._step_runner.run(
-            self._state, self._aux, self._t, 1, ext)
+        self._state, self._aux, batch, self._stats = self._step_runner.run(
+            self._state, self._aux, self._t, 1, ext, self._stats)
         self._t += 1
         return batch
 
@@ -412,6 +465,12 @@ class Session:
         """Assemble a terminal :class:`SimResult` from the final books plus a
         streamed batch — the one-shot ``simulate()`` compatibility shape."""
         self._check_open()
+        if self._runner.stats_only:
+            # A SimResult has nowhere to carry the accumulators — returning
+            # zero-width paths would silently lose every output.
+            raise ValueError(
+                "stats_only sessions have no path outputs: read "
+                "Session.stats instead of the one-shot SimResult shape")
         s = self._state
         return SimResult(bid=s.bid, ask=s.ask, last_price=s.last_price,
                          prev_mid=s.prev_mid, price_path=batch.price,
@@ -430,10 +489,20 @@ class Session:
         }
         snap["t"] = self._t
         snap["rng"] = self._runner.aux_state(self._aux)
+        if self._stats is not None:
+            snap["stats"] = {
+                field: np.asarray(value)
+                for field, value in zip(MarketStats._fields, self._stats)
+            }
         return snap
 
     def restore(self, snap: Dict[str, Any]) -> None:
-        """Restore from :meth:`snapshot` — resumes the exact stream."""
+        """Restore from :meth:`snapshot` — resumes the exact stream.
+
+        Snapshots are device-layout agnostic: a snapshot taken on a
+        single-device session restores into a sharded one (and vice versa)
+        bitwise, because the runner re-places state/stats on restore.
+        """
         self._check_open()
         self._state = self._runner.to_device(
             MarketState(*(snap[f] for f in MarketState._fields)))
@@ -442,6 +511,11 @@ class Session:
         self._aux = (self._runner.restore_aux(rng) if rng is not None
                      else self._runner.init_aux(self.cfg)
                      if self._aux is not None else None)
+        if self._runner.stats_only:
+            stats = snap.get("stats")
+            self._stats = (self._runner.stats_to_device(
+                MarketStats(*(stats[f] for f in MarketStats._fields)))
+                if stats is not None else self._runner.init_stats(self.cfg))
 
     def save_checkpoint(self, manager, step: Optional[int] = None) -> int:
         """Persist the session through a ``CheckpointManager``; returns the

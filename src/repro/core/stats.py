@@ -1,0 +1,94 @@
+"""In-stream ensemble statistics — the Θ(M) output-traffic regime.
+
+The paper's traffic model (HBM bytes independent of step count) holds for
+the *books*, but the per-step path outputs (``price_path``/``volume_path``)
+still leak Θ(M·S) HBM + host traffic. ``stats_only`` mode replaces them with
+per-market running aggregates accumulated *inside* the step loop — in the
+persistent kernel's ``fori_loop`` for ``pallas-kinetic`` — so a session's
+output traffic is Θ(M) regardless of horizon:
+
+  * running moments of the pre-clearing mid (count, sum, sum of squares),
+  * extremes of the mid (min / max), and
+  * total cleared volume.
+
+Every backend accumulates through :func:`accumulate` with the same f32 op
+sequence, so the statistics inherit the engine-parity and chunk-invariance
+guarantees of the paths themselves: any chunking of S steps produces the
+bitwise-identical :class:`MarketStats` as one S-step call, because the
+accumulators are *carried through* each chunk call rather than merged
+after the fact.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+
+class MarketStats(NamedTuple):
+    """Per-market running aggregates; every field is float32[M, 1].
+
+    ``count`` is an exact integer in f32 (steps accumulated so far);
+    ``min_mid``/``max_mid`` start at ±inf so the first step always wins.
+    """
+
+    count: Any      # f32[M, 1] number of steps accumulated
+    sum_mid: Any    # f32[M, 1] Σ mid
+    sumsq_mid: Any  # f32[M, 1] Σ mid²
+    min_mid: Any    # f32[M, 1]
+    max_mid: Any    # f32[M, 1]
+    sum_volume: Any # f32[M, 1] total cleared volume
+
+    def to_numpy(self) -> "MarketStats":
+        return MarketStats(*(np.asarray(x) for x in self))
+
+    # ---- derived moments (host-side; f64 division for the read-out) ----
+    def mean_mid(self) -> np.ndarray:
+        s = self.to_numpy()
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.asarray(s.sum_mid, np.float64) / s.count
+
+    def var_mid(self) -> np.ndarray:
+        """Population variance of the mid (clamped at 0 against f32 noise)."""
+        s = self.to_numpy()
+        mean = self.mean_mid()
+        with np.errstate(invalid="ignore", divide="ignore"):
+            raw = np.asarray(s.sumsq_mid, np.float64) / s.count - mean ** 2
+        return np.maximum(raw, 0.0)
+
+
+def init_stats(num_markets: int, xp) -> MarketStats:
+    """Fresh accumulators for ``num_markets`` markets in module ``xp``.
+
+    Each field is a *distinct* buffer (never aliased) so runners can donate
+    the whole accumulator tuple back to their chunk executable.
+    """
+    def zeros():
+        return xp.zeros((num_markets, 1), dtype=xp.float32)
+
+    return MarketStats(count=zeros(), sum_mid=zeros(), sumsq_mid=zeros(),
+                       min_mid=zeros() + xp.float32(np.inf),
+                       max_mid=zeros() - xp.float32(np.inf),
+                       sum_volume=zeros())
+
+
+def accumulate(stats: MarketStats, mid, volume, active, xp) -> MarketStats:
+    """One masked, branch-free accumulation step (shared by all backends).
+
+    ``active`` is a boolean (scalar or broadcastable) gating the update —
+    inactive steps (the padded tail of a partial chunk) leave every
+    accumulator bitwise untouched, mirroring the gated state carry.
+    """
+    f32 = xp.float32
+    act = xp.asarray(active)
+    one = xp.where(act, f32(1.0), f32(0.0))
+    mid = xp.asarray(mid, dtype=xp.float32)
+    vol = xp.asarray(volume, dtype=xp.float32)
+    return MarketStats(
+        count=stats.count + one,
+        sum_mid=stats.sum_mid + xp.where(act, mid, f32(0.0)),
+        sumsq_mid=stats.sumsq_mid + xp.where(act, mid * mid, f32(0.0)),
+        min_mid=xp.where(act, xp.minimum(stats.min_mid, mid), stats.min_mid),
+        max_mid=xp.where(act, xp.maximum(stats.max_mid, mid), stats.max_mid),
+        sum_volume=stats.sum_volume + xp.where(act, vol, f32(0.0)),
+    )

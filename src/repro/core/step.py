@@ -39,7 +39,7 @@ def initial_state(cfg: MarketConfig, xp, market_offset: int = 0) -> MarketState:
     return MarketState(bid=bid, ask=ask, last_price=ones * m0, prev_mid=ones * m0)
 
 
-def bin_orders_onehot(side_buy, price, qty, L, xp):
+def bin_orders_onehot(side_buy, price, qty, L, xp, agent_chunk=None):
     """Order aggregation as a one-hot contraction (TPU/MXU idiom).
 
     BUY[m, l] = sum_a qty[m, a] * [price[m, a] == l & side_buy[m, a]]
@@ -47,13 +47,28 @@ def bin_orders_onehot(side_buy, price, qty, L, xp):
     This is the TPU-native replacement for the paper's shared-memory
     atomicAdd histogram; exact-integer f32 adds keep it bitwise-identical to
     scatter-based binning.
+
+    ``agent_chunk`` bounds the [M, Ac, L] one-hot intermediate (the dominant
+    VMEM term inside the persistent kernel) by accumulating the contraction
+    over static slices of the agent axis. Because every partial sum is an
+    exact integer in f32, the result is bitwise-identical for any chunking.
     """
     levels = xp.arange(L, dtype=xp.int32)
-    onehot = (price[..., None] == levels).astype(xp.float32)  # [M, A, L]
     qb = qty * side_buy.astype(xp.float32)
     qs = qty * (~side_buy).astype(xp.float32)
-    buy = xp.einsum("ma,mal->ml", qb, onehot)
-    sell = xp.einsum("ma,mal->ml", qs, onehot)
+    A = price.shape[-1]
+    if not agent_chunk or agent_chunk >= A:
+        onehot = (price[..., None] == levels).astype(xp.float32)  # [M, A, L]
+        return (xp.einsum("ma,mal->ml", qb, onehot),
+                xp.einsum("ma,mal->ml", qs, onehot))
+    M = price.shape[0]
+    buy = xp.zeros((M, L), dtype=xp.float32)
+    sell = xp.zeros((M, L), dtype=xp.float32)
+    for a0 in range(0, A, agent_chunk):
+        sl = slice(a0, min(a0 + agent_chunk, A))
+        onehot = (price[:, sl, None] == levels).astype(xp.float32)
+        buy = buy + xp.einsum("ma,mal->ml", qb[:, sl], onehot)
+        sell = sell + xp.einsum("ma,mal->ml", qs[:, sl], onehot)
     return buy, sell
 
 
@@ -86,6 +101,7 @@ def simulate_step(
     uniform_fn: Callable = None,
     ext_buy=None,
     ext_ask=None,
+    agent_chunk=None,
 ):
     """Advance all markets one step. Returns (MarketState, StepOutput).
 
@@ -95,9 +111,13 @@ def simulate_step(
     one extra agent had quoted them this step. Zero arrays are a bitwise
     no-op (exact-integer f32 adds), so gated injection never perturbs the
     stream; ``None`` keeps pre-session traces byte-identical.
+
+    ``agent_chunk`` is forwarded to the default one-hot binning (a pure
+    VMEM-footprint knob — bitwise-invisible; see :func:`bin_orders_onehot`).
     """
     if bin_orders is None:
-        bin_orders = lambda s, p, q: bin_orders_onehot(s, p, q, cfg.num_levels, xp)
+        bin_orders = lambda s, p, q: bin_orders_onehot(
+            s, p, q, cfg.num_levels, xp, agent_chunk=agent_chunk)
     f32 = xp.float32
 
     # Scenario overlay (before quoting: the withdrawal moves the mid too).

@@ -13,21 +13,35 @@ replacement for shared-memory atomics); clearing runs the same xp-polymorphic
 ``auction.clear`` / ``agents.decide`` code as every other backend, so results
 are bitwise identical.
 
-Block/tile layout: markets on sublanes (MB multiple of 8), price ticks on
-lanes (L multiple of 128 native; smaller L still correct, just padded by the
-compiler). VMEM working set ≈ (7·MB·L + MB·A·L_onehot-chunk + 2·MB·S) f32 —
-see EXPERIMENTS.md §Perf for the measured budget.
+Block/tile layout: markets on sublanes (MB a multiple of 8 — the chunk
+entries *pad* the market axis to a tile multiple instead of shrinking MB, so
+prime/odd M keeps full sublane tiles; see :mod:`repro.kernels.autotune`),
+price ticks on lanes (L multiple of 128 native; smaller L still correct,
+just padded by the compiler). VMEM working set per grid cell ≈
+``7·MB·L + MB·Ac·L (one-hot binning, Ac = agent_chunk ≤ A) + 2·MB·S`` f32
+for path outputs — padding adds only whole-tile rows, so the padded-tile
+term is the same ``MB·(...)`` budget with ``grid = ceil(M/MB)`` cells. In
+``stats_only`` mode the ``2·MB·S`` path term is replaced by a constant
+``6·MB`` statistics-accumulator term (count/Σmid/Σmid²/min/max/Σvolume),
+making both the VMEM footprint and the HBM output traffic independent of
+the chunk length — see EXPERIMENTS.md §Perf for the measured budget.
 
 Scenario engine: archetype mixtures and scenario overlays (flash-crash
 shock, volatility regimes, book seeding) are static ``cfg`` fields dispatched
 branch-free inside ``simulate_step`` — every scenario traces to the same
 fully fused persistent kernel, and baseline configs trace the identical
 graph as before the scenario engine existed.
+
+Sharding: the chunk entry takes an explicit per-row ``market_ids`` operand
+(instead of deriving ids from the grid index), so a ``shard_map`` caller can
+hand each device its true *global* market coordinates — the RNG stream is a
+pure function of (seed, market id, step), which is what makes a sharded run
+bitwise-identical to the single-device run. See ``repro.kernels.ops``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +52,10 @@ try:  # TPU compiler params are optional on CPU/interpret
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.step import MarketState, simulate_step
+from repro.kernels.autotune import pad_to_multiple
 
 
 def _kernel_body(
@@ -88,19 +104,36 @@ def _kernel_body(
 
 
 def pick_tile(num_markets: int, target: int = 8) -> int:
-    """Largest divisor of M that is <= target (sublane-aligned when possible)."""
+    """Largest divisor of M that is <= target (sublane-aligned when possible).
+
+    Legacy policy for the exact-grid one-shot entries (`kinetic_clearing`,
+    `naive_clearing`): prime/odd M degrades to MB=1. The session chunk
+    entries instead pad the market axis and keep full sublane tiles — see
+    :func:`repro.kernels.autotune.auto_tile`.
+    """
     mb = min(target, num_markets)
     while num_markets % mb:
         mb -= 1
     return mb
 
 
+def _pad_rows(x, m_padded: int):
+    """Append zero rows up to ``m_padded`` (markets are row-independent, so
+    benign zero-book pad rows never perturb real rows — branch-free mask by
+    construction; the wrapper slices them off every output)."""
+    pad = m_padded - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
 def _chunk_kernel_body(
-    step0_ref, nvalid_ref,
+    step0_ref, nvalid_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
-    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
-    price_path_ref, volume_path_ref, mid_path_ref,
-    *, cfg: MarketConfig, mb: int, chunk: int, scan: str,
+    *refs,
+    cfg: MarketConfig, mb: int, chunk: int, scan: str,
+    agent_chunk: Optional[int], stats_only: bool,
 ):
     """Session variant of the persistent scheduler: a fixed ``chunk``-length
     trace that serves *any* requested step count.
@@ -111,10 +144,24 @@ def _chunk_kernel_body(
     advances exactly ``n_valid`` steps without retracing. External orders
     (``ext_buy``/``ext_ask``, the RL stepping hook's reserved slot) are
     injected at the first local step only; zero arrays are bitwise no-ops.
+
+    ``mids_ref`` carries the per-row *global* market ids (sharded callers
+    pass each device's true coordinates). In ``stats_only`` mode the per-step
+    path outputs are replaced by six [mb, 1] running accumulators carried
+    through the ``fori_loop`` — the kernel's HBM writes become Θ(MB·L) books
+    plus Θ(MB) statistics, independent of ``chunk``.
     """
-    i = pl.program_id(0)
     step0 = step0_ref[0, 0]
     n_valid = nvalid_ref[0, 0]
+
+    if stats_only:
+        (cnt_ref, smid_ref, ssq_ref, mn_ref, mx_ref, svol_ref,
+         out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+         out_cnt_ref, out_smid_ref, out_ssq_ref, out_mn_ref, out_mx_ref,
+         out_svol_ref) = refs
+    else:
+        (out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+         price_path_ref, volume_path_ref, mid_path_ref) = refs
 
     bid = bid_ref[...]
     ask = ask_ref[...]
@@ -124,43 +171,68 @@ def _chunk_kernel_body(
     ext_a = ext_ask_ref[...]
     zeros_ext = jnp.zeros_like(ext_b)
 
-    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+    market_ids = mids_ref[...]
 
-    def body(s, carry):
-        bid, ask, last, pmid, pp, vp, mp = carry
+    def advance(s, bid, ask, last, pmid):
         state = MarketState(bid=bid, ask=ask, last_price=last, prev_mid=pmid)
         eb = jnp.where(s == jnp.int32(0), ext_b, zeros_ext)
         ea = jnp.where(s == jnp.int32(0), ext_a, zeros_ext)
         new_state, out = simulate_step(
             cfg, state, step0 + s, market_ids, jnp, bin_orders=None,
-            scan=scan, ext_buy=eb, ext_ask=ea,
+            scan=scan, ext_buy=eb, ext_ask=ea, agent_chunk=agent_chunk,
         )
         # Steps past n_valid are computed but discarded — the carried state
-        # only advances while active, and the caller slices the paths.
+        # only advances while active.
         active = s < n_valid
         bid = jnp.where(active, new_state.bid, bid)
         ask = jnp.where(active, new_state.ask, ask)
         last = jnp.where(active, new_state.last_price, last)
         pmid = jnp.where(active, new_state.prev_mid, pmid)
-        pp = jax.lax.dynamic_update_slice(pp, out.price, (0, s))
-        vp = jax.lax.dynamic_update_slice(vp, out.volume, (0, s))
-        mp = jax.lax.dynamic_update_slice(mp, out.mid, (0, s))
-        return bid, ask, last, pmid, pp, vp, mp
+        return active, bid, ask, last, pmid, out
 
-    pp0 = jnp.zeros((mb, chunk), jnp.float32)
-    vp0 = jnp.zeros((mb, chunk), jnp.float32)
-    mp0 = jnp.zeros((mb, chunk), jnp.float32)
-    bid, ask, last, pmid, pp, vp, mp = jax.lax.fori_loop(
-        0, chunk, body, (bid, ask, last, pmid, pp0, vp0, mp0)
-    )
+    if stats_only:
+        st0 = stats_mod.MarketStats(
+            count=cnt_ref[...], sum_mid=smid_ref[...], sumsq_mid=ssq_ref[...],
+            min_mid=mn_ref[...], max_mid=mx_ref[...], sum_volume=svol_ref[...])
+
+        def body(s, carry):
+            bid, ask, last, pmid, st = carry
+            active, bid, ask, last, pmid, out = advance(s, bid, ask, last, pmid)
+            st = stats_mod.accumulate(st, out.mid, out.volume, active, jnp)
+            return bid, ask, last, pmid, st
+
+        bid, ask, last, pmid, st = jax.lax.fori_loop(
+            0, chunk, body, (bid, ask, last, pmid, st0))
+        out_cnt_ref[...] = st.count
+        out_smid_ref[...] = st.sum_mid
+        out_ssq_ref[...] = st.sumsq_mid
+        out_mn_ref[...] = st.min_mid
+        out_mx_ref[...] = st.max_mid
+        out_svol_ref[...] = st.sum_volume
+    else:
+        def body(s, carry):
+            bid, ask, last, pmid, pp, vp, mp = carry
+            _, bid, ask, last, pmid, out = advance(s, bid, ask, last, pmid)
+            # Caller slices the paths to the first n_valid columns.
+            pp = jax.lax.dynamic_update_slice(pp, out.price, (0, s))
+            vp = jax.lax.dynamic_update_slice(vp, out.volume, (0, s))
+            mp = jax.lax.dynamic_update_slice(mp, out.mid, (0, s))
+            return bid, ask, last, pmid, pp, vp, mp
+
+        pp0 = jnp.zeros((mb, chunk), jnp.float32)
+        vp0 = jnp.zeros((mb, chunk), jnp.float32)
+        mp0 = jnp.zeros((mb, chunk), jnp.float32)
+        bid, ask, last, pmid, pp, vp, mp = jax.lax.fori_loop(
+            0, chunk, body, (bid, ask, last, pmid, pp0, vp0, mp0)
+        )
+        price_path_ref[...] = pp
+        volume_path_ref[...] = vp
+        mid_path_ref[...] = mp
 
     out_bid_ref[...] = bid
     out_ask_ref[...] = ask
     out_last_ref[...] = last
     out_pmid_ref[...] = pmid
-    price_path_ref[...] = pp
-    volume_path_ref[...] = vp
-    mid_path_ref[...] = mp
 
 
 def kinetic_clearing_chunk(
@@ -168,7 +240,9 @@ def kinetic_clearing_chunk(
     step0: jax.Array, n_valid: jax.Array,
     ext_buy: jax.Array, ext_ask: jax.Array,
     *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
-    interpret: bool = False,
+    interpret: bool = False, market_ids: Optional[jax.Array] = None,
+    agent_chunk: Optional[int] = None,
+    stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """``num_steps``-parametrized persistent entry for the Session API.
 
@@ -177,14 +251,31 @@ def kinetic_clearing_chunk(
     Deliberately *not* jitted here — the session runner owns the ``jax.jit``
     wrapper so it can donate the state buffers and count traces.
 
+    The market axis is padded to a multiple of ``mb`` with benign zero rows
+    (and sliced back), so any M — prime, odd, tiny — runs full sublane-
+    aligned tiles. ``market_ids`` (optional int32[M] / [M, 1]) carries each
+    row's global coordinate for sharded callers; it defaults to ``arange(M)``.
+
     Returns ``(bid, ask, last, pmid, price_path[M, chunk],
-    volume_path[M, chunk], mid_path[M, chunk])``; only the first ``n_valid``
-    path columns are meaningful.
+    volume_path[M, chunk], mid_path[M, chunk])``, or with
+    ``stats_only=True`` (which requires the carried ``stats`` accumulators)
+    ``(bid, ask, last, pmid, MarketStats)`` — no per-step outputs ever
+    reach HBM in that mode; only the first ``n_valid`` path columns are
+    meaningful otherwise.
     """
     M, L = bid.shape
-    if M % mb:
-        raise ValueError(f"M={M} not divisible by tile mb={mb}")
-    grid = (M // mb,)
+    m_padded = pad_to_multiple(M, mb)
+    grid = (m_padded // mb,)
+
+    if market_ids is None:
+        market_ids = jnp.arange(M, dtype=jnp.int32)
+    mids = jnp.reshape(jnp.asarray(market_ids, dtype=jnp.int32), (M, 1))
+    if m_padded != M:
+        pad_ids = jnp.arange(M, m_padded, dtype=jnp.int32)[:, None]
+        mids = jnp.concatenate([mids, pad_ids], axis=0)
+    bid, ask, last, pmid, ext_buy, ext_ask = (
+        _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
+                                         ext_ask))
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
@@ -197,27 +288,51 @@ def kinetic_clearing_chunk(
             dimension_semantics=("parallel",),
         )
 
-    out_shapes = (
-        jax.ShapeDtypeStruct((M, L), jnp.float32),
-        jax.ShapeDtypeStruct((M, L), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
-        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
-        jax.ShapeDtypeStruct((M, chunk), jnp.float32),
+    state_shapes = (
+        jax.ShapeDtypeStruct((m_padded, L), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, L), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
     )
-    return pl.pallas_call(
+    in_specs = [step_spec, step_spec, scalar_spec, book_spec, book_spec,
+                scalar_spec, scalar_spec, book_spec, book_spec]
+    operands = [step0, n_valid, mids, bid, ask, last, pmid, ext_buy, ext_ask]
+
+    if stats_only:
+        if stats is None:
+            raise ValueError("stats_only=True requires the carried `stats` "
+                             "accumulators (see repro.core.stats.init_stats)")
+        stats = stats_mod.MarketStats(
+            *(_pad_rows(jnp.asarray(x, dtype=jnp.float32), m_padded)
+              for x in stats))
+        stats_shape = jax.ShapeDtypeStruct((m_padded, 1), jnp.float32)
+        in_specs += [scalar_spec] * 6
+        operands += list(stats)
+        out_specs = ((book_spec, book_spec, scalar_spec, scalar_spec)
+                     + (scalar_spec,) * 6)
+        out_shapes = state_shapes + (stats_shape,) * 6
+    else:
+        out_specs = (book_spec, book_spec, scalar_spec, scalar_spec,
+                     path_spec, path_spec, path_spec)
+        out_shapes = state_shapes + (
+            jax.ShapeDtypeStruct((m_padded, chunk), jnp.float32),) * 3
+
+    out = pl.pallas_call(
         functools.partial(_chunk_kernel_body, cfg=cfg, mb=mb, chunk=chunk,
-                          scan=scan),
+                          scan=scan, agent_chunk=agent_chunk,
+                          stats_only=stats_only),
         grid=grid,
-        in_specs=[step_spec, step_spec, book_spec, book_spec, scalar_spec,
-                  scalar_spec, book_spec, book_spec],
-        out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
-                   path_spec, path_spec, path_spec),
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
         **kwargs,
-    )(step0, n_valid, bid, ask, last, pmid, ext_buy, ext_ask)
+    )(*operands)
+
+    out = tuple(x[:M] for x in out)
+    if stats_only:
+        return out[:4] + (stats_mod.MarketStats(*out[4:]),)
+    return out
 
 
 @functools.partial(

@@ -18,19 +18,27 @@ Scenario configs (archetype mixtures, flash-crash shocks, regimes) dispatch
 branch-free inside the shared ``simulate_step``, so this ablation stays
 bitwise comparable to the persistent kernel on every scenario — the basis of
 the parity matrix in tests/test_parity_matrix.py.
+
+The chunk entry mirrors :func:`kinetic_clearing_chunk`'s full contract —
+padded sublane tiles, explicit global ``market_ids`` for sharded callers,
+and a ``stats_only`` mode (accumulated in the host scan carry here, since
+per-step launches are this ablation's point) — so the Session/shard layers
+treat both engines uniformly.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.step import MarketState, simulate_step
-from repro.kernels.kinetic_clearing import pick_tile
+from repro.kernels.autotune import pad_to_multiple
+from repro.kernels.kinetic_clearing import _pad_rows, pick_tile
 
 
 def _step_kernel_body(
@@ -107,16 +115,19 @@ def naive_clearing(
 
 
 def _chunk_step_kernel_body(
-    step_ref,
+    step_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
     out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
     price_ref, volume_ref, mid_ref,
-    *, cfg: MarketConfig, mb: int, scan: str,
+    *, cfg: MarketConfig, mb: int, scan: str, agent_chunk: Optional[int],
 ):
-    """Per-step kernel with external-order inputs (Session API variant)."""
-    i = pl.program_id(0)
+    """Per-step kernel with external-order inputs (Session API variant).
+
+    ``mids_ref`` carries the per-row global market ids (see the kinetic
+    chunk kernel) so padded/sharded callers keep exact RNG coordinates.
+    """
     s = step_ref[0, 0]
-    market_ids = (i * mb + jnp.arange(mb, dtype=jnp.int32))[:, None]
+    market_ids = mids_ref[...]
     state = MarketState(
         bid=bid_ref[...], ask=ask_ref[...],
         last_price=last_ref[...], prev_mid=pmid_ref[...],
@@ -124,6 +135,7 @@ def _chunk_step_kernel_body(
     new_state, out = simulate_step(
         cfg, state, s, market_ids, jnp, scan=scan,
         ext_buy=ext_buy_ref[...], ext_ask=ext_ask_ref[...],
+        agent_chunk=agent_chunk,
     )
     out_bid_ref[...] = new_state.bid
     out_ask_ref[...] = new_state.ask
@@ -139,40 +151,54 @@ def naive_clearing_chunk(
     step0: jax.Array, n_valid: jax.Array,
     ext_buy: jax.Array, ext_ask: jax.Array,
     *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
-    interpret: bool = False,
+    interpret: bool = False, market_ids: Optional[jax.Array] = None,
+    agent_chunk: Optional[int] = None,
+    stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """Session entry for the launch-per-step regime: ``chunk`` kernel
     launches per call, state round-tripping HBM between launches.
 
     Mirrors :func:`kinetic_clearing_chunk`'s contract — ``step0``/``n_valid``
     int32[1, 1] runtime scalars, external orders injected at the first local
-    step, gated state so a partial tail advances exactly ``n_valid`` steps —
+    step, gated state so a partial tail advances exactly ``n_valid`` steps,
+    padded sublane tiles with explicit global ``market_ids``, and a
+    ``stats_only`` mode (accumulated in the scan carry between launches) —
     but keeps the Θ(chunk) dispatches and Θ(chunk·M·L) HBM traffic that this
     ablation exists to exhibit. Not jitted here; the session runner owns jit.
     """
     M, L = bid.shape
-    if M % mb:
-        raise ValueError(f"M={M} not divisible by tile mb={mb}")
-    grid = (M // mb,)
+    m_padded = pad_to_multiple(M, mb)
+    grid = (m_padded // mb,)
+
+    if market_ids is None:
+        market_ids = jnp.arange(M, dtype=jnp.int32)
+    mids = jnp.reshape(jnp.asarray(market_ids, dtype=jnp.int32), (M, 1))
+    if m_padded != M:
+        pad_ids = jnp.arange(M, m_padded, dtype=jnp.int32)[:, None]
+        mids = jnp.concatenate([mids, pad_ids], axis=0)
+    bid, ask, last, pmid, ext_buy, ext_ask = (
+        _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
+                                         ext_ask))
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
     step_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
 
     out_shapes = (
-        jax.ShapeDtypeStruct((M, L), jnp.float32),
-        jax.ShapeDtypeStruct((M, L), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
-        jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, L), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, L), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
+        jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
     )
     step_call = pl.pallas_call(
-        functools.partial(_chunk_step_kernel_body, cfg=cfg, mb=mb, scan=scan),
+        functools.partial(_chunk_step_kernel_body, cfg=cfg, mb=mb, scan=scan,
+                          agent_chunk=agent_chunk),
         grid=grid,
-        in_specs=[step_spec, book_spec, book_spec, scalar_spec, scalar_spec,
-                  book_spec, book_spec],
+        in_specs=[step_spec, scalar_spec, book_spec, book_spec, scalar_spec,
+                  scalar_spec, book_spec, book_spec],
         out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
                    scalar_spec, scalar_spec, scalar_spec),
         out_shape=out_shapes,
@@ -183,23 +209,45 @@ def naive_clearing_chunk(
     n_valid_s = n_valid[0, 0]
     zeros_ext = jnp.zeros_like(ext_buy)
 
+    if stats_only and stats is None:
+        raise ValueError("stats_only=True requires the carried `stats` "
+                         "accumulators (see repro.core.stats.init_stats)")
+    st0 = None
+    if stats_only:
+        st0 = stats_mod.MarketStats(
+            *(_pad_rows(jnp.asarray(x, dtype=jnp.float32), m_padded)
+              for x in stats))
+
     def host_step(carry, s):
-        bid, ask, last, pmid = carry
+        if stats_only:
+            bid, ask, last, pmid, st = carry
+        else:
+            bid, ask, last, pmid = carry
         eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
         ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
         step_arr = jnp.full((1, 1), step0_s + s, dtype=jnp.int32)
         nbid, nask, nlast, npmid, price, volume, mid = step_call(
-            step_arr, bid, ask, last, pmid, eb, ea
+            step_arr, mids, bid, ask, last, pmid, eb, ea
         )
         active = s < n_valid_s
         bid = jnp.where(active, nbid, bid)
         ask = jnp.where(active, nask, ask)
         last = jnp.where(active, nlast, last)
         pmid = jnp.where(active, npmid, pmid)
+        if stats_only:
+            st = stats_mod.accumulate(st, mid, volume, active, jnp)
+            return (bid, ask, last, pmid, st), None
         return (bid, ask, last, pmid), (price[:, 0], volume[:, 0], mid[:, 0])
 
     steps = jnp.arange(chunk, dtype=jnp.int32)
+    if stats_only:
+        (bid, ask, last, pmid, st), _ = jax.lax.scan(
+            host_step, (bid, ask, last, pmid, st0), steps
+        )
+        return (bid[:M], ask[:M], last[:M], pmid[:M],
+                stats_mod.MarketStats(*(x[:M] for x in st)))
     (bid, ask, last, pmid), (pp, vp, mp) = jax.lax.scan(
         host_step, (bid, ask, last, pmid), steps
     )
-    return bid, ask, last, pmid, pp.T, vp.T, mp.T
+    return (bid[:M], ask[:M], last[:M], pmid[:M],
+            pp.T[:M], vp.T[:M], mp.T[:M])

@@ -11,6 +11,25 @@ Both Pallas families are plumbed through the Session API: the chunk entries
 any requested step count; the runner jits them with donated state buffers.
 ``simulate_kinetic``/``simulate_naive`` remain one-session compatibility
 wrappers registered behind ``engine.simulate``.
+
+Scaling knobs (Engine backend_opts, all composable):
+
+  * ``devices=N`` / ``mesh=`` — shard the market axis across a 1-D
+    ``("markets",)`` device mesh with ``shard_map`` over the chunk kernel.
+    Each shard receives its rows' true *global* market ids, so a sharded
+    run is bitwise-identical to the single-device run; state stays
+    device-resident and donated, sharded row-wise (uneven M is padded to a
+    whole tile per shard and sliced back).
+  * ``stats_only=True`` — replace the per-step path outputs with in-kernel
+    running statistics (see :mod:`repro.core.stats`): the kernel's HBM
+    output traffic drops from Θ(M·chunk) to Θ(M), independent of horizon.
+  * ``mb=`` / ``agent_chunk=`` / ``autotune=`` — tile selection. By default
+    the market axis is padded to sublane-aligned MB=8 tiles
+    (:func:`repro.kernels.autotune.auto_tile`); ``autotune=True`` (or
+    ``"auto"``, which sweeps only when lowering via Mosaic on real TPU)
+    times (MB, agent-chunk) candidates on first compile and caches the
+    winner per ``(device-kind, L, A, chunk)`` for every engine in the
+    process.
 """
 from __future__ import annotations
 
@@ -18,13 +37,21 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import session
+from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.result import SimResult
-from repro.core.step import MarketState
-from repro.kernels.kinetic_clearing import kinetic_clearing_chunk, pick_tile
+from repro.core.step import MarketState, initial_state
+from repro.kernels import autotune as tune
+from repro.kernels.kinetic_clearing import (_pad_rows, kinetic_clearing_chunk,
+                                            pick_tile)
 from repro.kernels.naive_clearing import naive_clearing_chunk
+from repro.launch.mesh import make_markets_mesh
+from repro.launch.sharding import market_sharding, replicated_sharding
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -33,62 +60,233 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return interpret
 
 
+def _resolve_mesh(mesh, devices):
+    if mesh is not None:
+        return mesh
+    if devices is not None:
+        return make_markets_mesh(devices)
+    return None
+
+
 class PallasChunkRunner(session.ChunkRunner):
-    """jit wrapper around a chunk-parametrized Pallas entry point."""
+    """jit wrapper around a chunk-parametrized Pallas entry point.
+
+    Optionally shards the market axis over a ``("markets",)`` mesh and/or
+    runs in ``stats_only`` mode; see the module docstring for the knobs.
+    """
 
     xp = jnp
 
     def __init__(self, kernel_chunk_fn, cfg: MarketConfig, chunk: int,
-                 mb: Optional[int], scan: str, interpret: Optional[bool]):
+                 mb: Optional[int], scan: str, interpret: Optional[bool],
+                 stats_only: bool = False,
+                 agent_chunk: Optional[int] = None,
+                 devices: Optional[int] = None, mesh=None,
+                 autotune="auto"):
         super().__init__()
         self.cfg = cfg
         self.chunk = int(chunk)
-        mb = pick_tile(cfg.num_markets) if mb is None else mb
+        self.stats_only = bool(stats_only)
         interpret = _auto_interpret(interpret)
+        self._mesh = _resolve_mesh(mesh, devices)
         M, L = cfg.num_markets, cfg.num_levels
+
+        # Per-shard market count: tiles are chosen for (and padding applied
+        # to) each shard's local slice.
+        n_shards = self._mesh.devices.size if self._mesh is not None else 1
+        m_local = -(-M // n_shards)
+        self.tile = self._resolve_tile(kernel_chunk_fn, cfg, m_local, mb,
+                                       agent_chunk, scan, interpret, autotune)
+
         self._zero_ext = (jnp.zeros((M, L), jnp.float32),
                           jnp.zeros((M, L), jnp.float32))
+        kernel_kwargs = dict(cfg=cfg, chunk=self.chunk, mb=self.tile.mb,
+                             scan=scan, interpret=interpret,
+                             agent_chunk=self.tile.agent_chunk,
+                             stats_only=self.stats_only)
 
-        def chunk_fn(state, step0, n_valid, ext_buy, ext_ask):
-            self._trace_count += 1  # python side effect: trace-time only
-            return kernel_chunk_fn(
-                state.bid, state.ask, state.last_price, state.prev_mid,
-                step0, n_valid, ext_buy, ext_ask,
-                cfg=cfg, chunk=self.chunk, mb=mb, scan=scan,
-                interpret=interpret,
-            )
+        if self._mesh is None:
+            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
+                self._trace_count += 1  # python side effect: trace-time only
+                return self._split(kernel_chunk_fn(
+                    state.bid, state.ask, state.last_price, state.prev_mid,
+                    step0, n_valid, ext_buy, ext_ask, stats=stats,
+                    **kernel_kwargs))
 
-        self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0,))
+            self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
+        else:
+            mesh_ = self._mesh
+            mb = self.tile.mb
+            m_shard = tune.pad_to_multiple(m_local, mb)
+            m_padded = n_shards * m_shard
+            self._row_sharding = market_sharding(mesh_)
+            rep = replicated_sharding(mesh_)
+            row = self._row_sharding
 
-    def run(self, state: MarketState, aux, step0: int, n: int,
-            ext) -> Tuple[MarketState, Any, session.StepBatch]:
+            def shard_body(step0, n_valid, mids, bid, ask, last, pmid,
+                           ext_buy, ext_ask, stats):
+                return kernel_chunk_fn(
+                    bid, ask, last, pmid, step0, n_valid, ext_buy, ext_ask,
+                    market_ids=mids, stats=stats, **kernel_kwargs)
+
+            sharded_call = shard_map(
+                shard_body, mesh=mesh_,
+                in_specs=(P(), P(), P("markets", None), P("markets", None),
+                          P("markets", None), P("markets", None),
+                          P("markets", None), P("markets", None),
+                          P("markets", None),
+                          P("markets", None) if self.stats_only else None),
+                out_specs=P("markets", None), check_rep=False)
+
+            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
+                self._trace_count += 1
+                # Pad/slice every call rather than carrying padded state:
+                # Θ(M·L) per chunk vs the kernel's Θ(chunk·A·L) work, and it
+                # keeps session state — and therefore snapshots — in the
+                # canonical [M, ...] layout on every device topology.
+                padded = [_pad_rows(x, m_padded) for x in state]
+                eb = _pad_rows(ext_buy, m_padded)
+                ea = _pad_rows(ext_ask, m_padded)
+                # Global row coordinates: rows < M are real markets, pad rows
+                # get distinct ids >= M whose streams are discarded.
+                mids = jnp.arange(m_padded, dtype=jnp.int32)[:, None]
+                st = None
+                if self.stats_only:
+                    st = stats_mod.MarketStats(
+                        *(_pad_rows(x, m_padded) for x in stats))
+                out = sharded_call(step0, n_valid, mids, *padded, eb, ea, st)
+                return self._split(
+                    tuple(x[:M] for x in jax.tree_util.tree_leaves(out)))
+
+            state_sh = MarketState(row, row, row, row)
+            stats_sh = (stats_mod.MarketStats(*(row,) * 6)
+                        if self.stats_only else None)
+            out_sh = ((state_sh, stats_sh) if self.stats_only
+                      else (state_sh, (row, row, row)))
+            self._chunk_fn = jax.jit(
+                chunk_fn, donate_argnums=(0, 1),
+                in_shardings=(state_sh, stats_sh, rep, rep, row, row),
+                out_shardings=out_sh)
+
+    # ---- tile selection ----
+    def _resolve_tile(self, kernel_chunk_fn, cfg, m_local, mb, agent_chunk,
+                      scan, interpret, autotune) -> tune.TileChoice:
+        if mb is not None:
+            return tune.TileChoice(
+                mb=mb, m_padded=tune.pad_to_multiple(m_local, mb),
+                agent_chunk=(agent_chunk if agent_chunk is not None
+                             else tune.default_agent_chunk(cfg.num_agents)))
+        sweep = autotune is True or (autotune == "auto" and not interpret)
+        heuristic = tune.auto_tile(m_local, cfg.num_agents)
+        if agent_chunk is not None:
+            heuristic = heuristic._replace(agent_chunk=agent_chunk)
+        if not sweep:
+            return heuristic
+
+        def time_candidate(choice: tune.TileChoice) -> float:
+            M, L = m_local, cfg.num_levels
+            m0 = jnp.float32(cfg.mid0)
+            bid = jnp.zeros((M, L), jnp.float32)
+            scalars = jnp.ones((M, 1), jnp.float32) * m0
+            step0 = jnp.zeros((1, 1), jnp.int32)
+            nv = jnp.full((1, 1), self.chunk, jnp.int32)
+            st = (stats_mod.init_stats(M, jnp) if self.stats_only else None)
+
+            @jax.jit
+            def fn():
+                return kernel_chunk_fn(
+                    bid, bid, scalars, scalars, step0, nv, bid, bid,
+                    cfg=cfg, chunk=self.chunk, mb=choice.mb, scan=scan,
+                    interpret=interpret, agent_chunk=choice.agent_chunk,
+                    stats=st, stats_only=self.stats_only)
+
+            return tune.time_call(fn, jax.block_until_ready)
+
+        # An explicitly pinned agent_chunk is never swept away, and distinct
+        # kernel configurations (family / scan / stats mode) never share a
+        # measured winner.
+        key = tune.tune_key(
+            cfg.num_levels, cfg.num_agents, self.chunk,
+            kernel=kernel_chunk_fn.__name__, scan=scan,
+            stats_only=self.stats_only, agent_chunk=agent_chunk)
+        cands = tune.candidate_tiles(
+            m_local, cfg.num_agents,
+            agent_chunk=agent_chunk if agent_chunk is not None else ...)
+        return tune.autotune_tile(key, time_candidate, cands,
+                                  fallback=heuristic, num_markets=m_local)
+
+    # ---- placement hooks (sharded state stays sharded across snapshots) ----
+    def init_state(self, cfg: MarketConfig) -> MarketState:
+        return self.to_device(initial_state(cfg, np))
+
+    def to_device(self, state: MarketState) -> MarketState:
+        state = super().to_device(state)
+        if self._mesh is None:
+            return state
+        return MarketState(*(jax.device_put(x, self._row_sharding)
+                             for x in state))
+
+    def init_stats(self, cfg: MarketConfig):
+        stats = super().init_stats(cfg)
+        if stats is None or self._mesh is None:
+            return stats
+        return self.stats_to_device(stats)
+
+    def stats_to_device(self, stats):
+        stats = super().stats_to_device(stats)
+        if self._mesh is None:
+            return stats
+        return stats_mod.MarketStats(
+            *(jax.device_put(x, self._row_sharding) for x in stats))
+
+    # ---- execution ----
+    def _split(self, out):
+        """Kernel output tuple -> (MarketState, payload)."""
+        state = MarketState(bid=out[0], ask=out[1], last_price=out[2],
+                            prev_mid=out[3])
+        if self.stats_only:
+            rest = out[4]
+            if not isinstance(rest, stats_mod.MarketStats):
+                rest = stats_mod.MarketStats(*out[4:])
+            return state, rest
+        return state, tuple(out[4:])
+
+    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+            stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
         eb, ea = self._zero_ext if ext is None else ext
         step0_arr = jnp.full((1, 1), step0, dtype=jnp.int32)
         nvalid_arr = jnp.full((1, 1), n, dtype=jnp.int32)
-        bid, ask, last, pmid, pp, vp, mp = self._chunk_fn(
-            state, step0_arr, nvalid_arr, eb, ea)
-        new_state = MarketState(bid=bid, ask=ask, last_price=last,
-                                prev_mid=pmid)
+        new_state, payload = self._chunk_fn(
+            state, stats if self.stats_only else None,
+            step0_arr, nvalid_arr, jnp.asarray(eb), jnp.asarray(ea))
+        if self.stats_only:
+            empty = jnp.zeros((self.cfg.num_markets, 0), jnp.float32)
+            return (new_state, aux,
+                    session.StepBatch(price=empty, volume=empty, mid=empty),
+                    payload)
+        pp, vp, mp = payload
         return new_state, aux, session.StepBatch(
-            price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n])
+            price=pp[:, :n], volume=vp[:, :n], mid=mp[:, :n]), None
 
 
 @session.register_backend("pallas-kinetic")
 def open_kinetic_runner(cfg: MarketConfig, chunk: int, mb=None,
                         scan: str = "cumsum",
-                        interpret: Optional[bool] = None) -> PallasChunkRunner:
+                        interpret: Optional[bool] = None,
+                        **opts: Any) -> PallasChunkRunner:
     """The paper's engine: persistent, VMEM-resident, one launch per chunk."""
     return PallasChunkRunner(kinetic_clearing_chunk, cfg, chunk, mb=mb,
-                             scan=scan, interpret=interpret)
+                             scan=scan, interpret=interpret, **opts)
 
 
 @session.register_backend("pallas-naive")
 def open_naive_runner(cfg: MarketConfig, chunk: int, mb=None,
                       scan: str = "cumsum",
-                      interpret: Optional[bool] = None) -> PallasChunkRunner:
+                      interpret: Optional[bool] = None,
+                      **opts: Any) -> PallasChunkRunner:
     """Ablation: per-step kernel launches, HBM-resident book."""
     return PallasChunkRunner(naive_clearing_chunk, cfg, chunk, mb=mb,
-                             scan=scan, interpret=interpret)
+                             scan=scan, interpret=interpret, **opts)
 
 
 def _simulate_with(factory, cfg: MarketConfig, **opts: Any) -> SimResult:
@@ -97,14 +295,16 @@ def _simulate_with(factory, cfg: MarketConfig, **opts: Any) -> SimResult:
 
 
 def simulate_kinetic(cfg: MarketConfig, mb=None, scan: str = "cumsum",
-                     interpret: Optional[bool] = None) -> SimResult:
+                     interpret: Optional[bool] = None,
+                     **opts: Any) -> SimResult:
     """Compatibility wrapper: one-session run of the persistent engine."""
     return _simulate_with(open_kinetic_runner, cfg, mb=mb, scan=scan,
-                          interpret=interpret)
+                          interpret=interpret, **opts)
 
 
 def simulate_naive(cfg: MarketConfig, mb=None, scan: str = "cumsum",
-                   interpret: Optional[bool] = None) -> SimResult:
+                   interpret: Optional[bool] = None,
+                   **opts: Any) -> SimResult:
     """Compatibility wrapper: one-session run of the per-step ablation."""
     return _simulate_with(open_naive_runner, cfg, mb=mb, scan=scan,
-                          interpret=interpret)
+                          interpret=interpret, **opts)

@@ -36,6 +36,27 @@ def make_host_mesh():
     return make_mesh_compat((1, 1), ("data", "model"))
 
 
+def make_markets_mesh(devices=None):
+    """1-D mesh over the market (ensemble) axis for sharded simulation runs.
+
+    ``devices`` selects how many local devices to span (default: all). The
+    simulator's market axis is embarrassingly parallel — independent markets,
+    no collectives — so a plain 1-D ``("markets",)`` mesh is the whole
+    topology. Works identically on real TPU slices and on CPU runners forced
+    to N host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+    """
+    avail = jax.devices()
+    if devices is None:
+        devices = len(avail)
+    n = int(devices)
+    if not (1 <= n <= len(avail)):
+        raise ValueError(
+            f"requested {n} devices; have {len(avail)} "
+            "(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "forces N host devices on CPU)")
+    return make_mesh_compat((n,), ("markets",), devices=avail[:n])
+
+
 # TPU v5e hardware model used by the roofline analysis (EXPERIMENTS.md §Roofline)
 HW = {
     "peak_flops_bf16": 197e12,   # per chip

@@ -46,6 +46,23 @@ def _axes(mesh: Mesh, logical: Optional[str], layout: str = "tp"):
     return ax
 
 
+# ---------------------------------------------------------------------------
+# Market-axis sharding (simulation ensembles; see repro.launch.mesh
+# .make_markets_mesh). Per-market arrays are [M, ...] row-major, so one
+# NamedSharding over the leading axis covers books, scalars and statistics.
+# ---------------------------------------------------------------------------
+def market_sharding(mesh: Mesh) -> NamedSharding:
+    """Row-sharding for [M, ...] per-market arrays on a ``markets`` mesh."""
+    if "markets" not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh} has no 'markets' axis")
+    return NamedSharding(mesh, P("markets"))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement (runtime scalars like step0/n_valid)."""
+    return NamedSharding(mesh, P())
+
+
 @contextlib.contextmanager
 def activate(mesh: Mesh, layout: str = "tp"):
     """Enable activation constraints for model code traced inside."""

@@ -1,5 +1,6 @@
 """Order binning: one-hot MXU contraction vs scatter reference (bitwise),
-plus ``pick_tile`` edge cases.
+plus tile-selection edge cases (legacy ``pick_tile`` divisors and the
+padded ``auto_tile`` policy that replaced them for the session entries).
 
 The one-hot contraction is the TPU-native replacement for the paper's
 shared-memory atomicAdd histogram; because quantities are exact small
@@ -10,6 +11,8 @@ import numpy as np
 import pytest
 
 from repro.core.step import bin_orders_onehot
+from repro.kernels.autotune import (auto_tile, candidate_tiles,
+                                    default_agent_chunk, pad_to_multiple)
 from repro.kernels.kinetic_clearing import pick_tile
 
 
@@ -91,3 +94,95 @@ class TestPickTile:
         assert pick_tile(64, target=16) == 16
         assert pick_tile(24, target=16) == 12
         assert pick_tile(17, target=16) == 1
+
+
+class TestAutoTile:
+    """The padded tile policy: prime/odd M must never degrade to MB=1."""
+
+    def test_prime_matches_even_tile_shape(self):
+        # The seed's pick_tile pathology: M=63 ran MB=1. The padded policy
+        # must give M=63 the exact tile shape (and grid) of M=64.
+        assert auto_tile(63) == auto_tile(64)
+        assert auto_tile(63).mb == 8
+        assert auto_tile(63).m_padded == 64
+        assert auto_tile(63).grid == 8
+
+    def test_never_degrades(self):
+        for m in (1, 3, 7, 11, 13, 63, 97, 8191):
+            choice = auto_tile(m)
+            assert choice.mb == 8, m
+            assert choice.m_padded % choice.mb == 0, m
+            assert choice.m_padded >= m, m
+            assert choice.m_padded - m < choice.mb, m
+
+    def test_agent_chunk_heuristic(self):
+        assert default_agent_chunk(64) is None
+        assert default_agent_chunk(128) is None
+        assert default_agent_chunk(256) == 128
+        assert auto_tile(16, num_agents=256).agent_chunk == 128
+
+    def test_pad_to_multiple(self):
+        assert pad_to_multiple(63, 8) == 64
+        assert pad_to_multiple(64, 8) == 64
+        assert pad_to_multiple(1, 8) == 8
+
+    def test_candidates_cover_sublane_tiles(self):
+        cands = candidate_tiles(63, 256)
+        assert len(cands) == len(set(cands))
+        assert all(c.mb % 8 == 0 for c in cands)
+        assert all(c.m_padded % c.mb == 0 for c in cands)
+        assert {c.mb for c in cands} == {8, 16}
+
+    def test_candidates_honor_pinned_agent_chunk(self):
+        # An explicit agent_chunk (a caller's VMEM bound) is never swept.
+        assert all(c.agent_chunk == 32
+                   for c in candidate_tiles(63, 256, agent_chunk=32))
+        assert all(c.agent_chunk is None
+                   for c in candidate_tiles(63, 256, agent_chunk=None))
+
+    def test_sweep_winner_repadded_per_ensemble_size(self):
+        from repro.kernels import autotune as tune
+
+        tune.clear_tune_cache()
+        try:
+            key = tune.tune_key(32, 16, 4, kernel="k")
+            fb = auto_tile(63, 16)
+            first = tune.autotune_tile(key, lambda c: 1.0,
+                                       candidate_tiles(63, 16),
+                                       fallback=fb, num_markets=63)
+            # cache hit for a different M reuses (mb, agent_chunk) but must
+            # re-derive m_padded for the caller's ensemble size
+            again = tune.autotune_tile(key, lambda c: 1.0, [],
+                                       fallback=fb, num_markets=200)
+            assert again.mb == first.mb
+            assert again.m_padded == pad_to_multiple(200, first.mb)
+        finally:
+            tune.clear_tune_cache()
+
+    def test_sweep_all_failed_falls_back_to_heuristic(self):
+        from repro.kernels import autotune as tune
+
+        tune.clear_tune_cache()
+        try:
+            def boom(choice):
+                raise RuntimeError("tile rejected")
+
+            fb = auto_tile(63, 256)  # keeps the A-derived agent_chunk
+            got = tune.autotune_tile(tune.tune_key(32, 256, 4, kernel="k"),
+                                     boom, candidate_tiles(63, 256),
+                                     fallback=fb, num_markets=63)
+            assert got == fb
+        finally:
+            tune.clear_tune_cache()
+
+
+@pytest.mark.parametrize("agent_chunk", [1, 3, 16, 200])
+def test_onehot_agent_chunking_bitwise(agent_chunk):
+    """The VMEM-bounding agent chunking must be bitwise-invisible."""
+    rng = np.random.default_rng(17)
+    side_buy, price, qty = _random_orders(rng, 5, 48, 32)
+    want = bin_orders_onehot(side_buy, price, qty, 32, np)
+    got = bin_orders_onehot(side_buy, price, qty, 32, np,
+                            agent_chunk=agent_chunk)
+    assert (got[0] == want[0]).all()
+    assert (got[1] == want[1]).all()

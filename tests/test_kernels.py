@@ -89,3 +89,28 @@ def test_pick_tile():
     assert pick_tile(6) == 6
     assert pick_tile(7) == 7
     assert pick_tile(12, target=8) == 6
+
+
+@pytest.mark.parametrize("kernel", ["pallas-kinetic", "pallas-naive"])
+def test_padded_tile_prime_m_regression(kernel):
+    """pick_tile pathology regression: M=63 must run the *same* padded tile
+    shape as M=64 (MB=8, 8 grid cells) instead of degrading to MB=1, and the
+    padded run must stay bitwise-identical to the unpadded oracle."""
+    from repro.core.session import Engine
+
+    eng = Engine(kernel)
+    cfg63 = MarketConfig(num_markets=63, num_agents=16, num_levels=32,
+                         num_steps=6, seed=11)
+    cfg64 = dataclasses.replace(cfg63, num_markets=64)
+    r63 = eng._runner(cfg63, 6)
+    r64 = eng._runner(cfg64, 6)
+    assert r63.tile.mb == 8 and r63.tile.m_padded == 64
+    assert (r63.tile.mb, r63.tile.m_padded) == (r64.tile.mb,
+                                                r64.tile.m_padded)
+
+    oracle = ref.simulate_reference(cfg63).to_numpy()
+    got = eng.open(cfg63).run_to_result(6).to_numpy()
+    for f in ("bid", "ask", "last_price", "prev_mid", "price_path",
+              "volume_path"):
+        assert (np.asarray(getattr(got, f))
+                == np.asarray(getattr(oracle, f))).all(), f
