@@ -1,27 +1,11 @@
-"""Roofline report: reads the dry-run result cache and emits the per-cell
-three-term roofline table (EXPERIMENTS.md §Roofline), plus the analytical
-TPU roofline of the KineticSim clearing kernel itself.
-"""
+"""Analytical TPU roofline of the KineticSim clearing kernel
+(EXPERIMENTS.md §Roofline)."""
 from __future__ import annotations
 
-import json
 import math
-from pathlib import Path
 
 from benchmarks.common import emit
 from repro.launch.mesh import HW
-
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
-
-
-def load_records():
-    recs = []
-    for f in sorted(RESULTS.glob("*.json")):
-        try:
-            recs.append(json.loads(f.read_text()))
-        except Exception:
-            pass
-    return recs
 
 
 def kinetic_kernel_roofline(M=16384, A=256, L=128, S=500, mb=8) -> dict:
@@ -53,28 +37,10 @@ def run() -> list:
                  f"intensity={k['arithmetic_intensity']:.0f}flops_per_byte;"
                  f"bound={k['bound']};"
                  f"events_per_s_bound={k['events_per_s_bound']:.3g}"))
-    naive = kinetic_kernel_roofline()
     naive_bytes = 2 * 2 * 16384 * 128 * 4 * 500  # Theta(S*M*L)
     rows.append(("roofline/naive_kernel_traffic", 0.0,
                  f"bytes={naive_bytes:.3g};"
                  f"memory_s={naive_bytes / HW['hbm_bw']:.3f}"))
-
-    for r in load_records():
-        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
-        if r["status"] == "SKIP":
-            rows.append((name, 0.0, f"SKIP({r['reason'][:40]})"))
-            continue
-        if r["status"] != "OK":
-            rows.append((name, 0.0, "ERROR"))
-            continue
-        rf = r["roofline"]
-        mdl = r["model"]
-        rows.append((name, rf["step_time_bound_s"] * 1e6,
-                     f"compute_s={rf['compute_s']:.4f};"
-                     f"memory_s={rf['memory_s']:.4f};"
-                     f"collective_s={rf['collective_s']:.4f};"
-                     f"dominant={rf['dominant']};"
-                     f"useful={mdl['useful_fraction']:.3f}"))
     return rows
 
 

@@ -1,23 +1,29 @@
-"""Scenario-engine throughput: events/s per scenario preset and mixture.
+"""Scenario-sweep throughput: one `EnsembleSpec` launch vs a per-config loop.
 
-Every scenario compiles to the same fully fused persistent kernel (overlays
-are branch-free ``where`` selects on static config fields), so the paper's
-headline throughput should be *scenario-invariant* — this sweep measures
-exactly that, plus the cost of richer archetype mixtures. One warm Engine
-per backend is shared across the whole sweep: each (scenario, mixture)
-compiles once during warmup and every timed trial reuses the cached
-executable through a fresh session.
+The seed benchmark ran every (scenario, mixture) configuration as its own
+engine run — N compiles, N launch streams. The ensemble-first API folds the
+whole sweep into one heterogeneous `EnsembleSpec`: every scenario parameter
+is a per-market device operand, so the entire mixture costs **one compile**
+and **one kernel launch per chunk**. This benchmark measures both paths on
+the same workload and reports compiles, launches, wall time, and events/s —
+the regression CI checks that the ensemble path's compile count stays at 1.
+
+    PYTHONPATH=src python -m benchmarks.scenario_sweep \
+        [--backends numpy,jax-scan,pallas-kinetic] [--markets 16]
+        [--agents 64] [--steps 50] [--trials 3] [--json BENCH_scenario.json]
 """
 from __future__ import annotations
 
-from typing import List
+import argparse
+from typing import List, Optional
 
 from benchmarks.common import (FIXED_A, FIXED_M, STEPS, Row, emit,
-                               events_per_s, time_call)
+                               time_call, write_json)
 from repro.core.config import scenario_config, scenario_names
+from repro.core.params import EnsembleSpec
 from repro.core.session import Engine
 
-BACKENDS = ["numpy", "jax-scan", "pallas-kinetic"]
+DEFAULT_BACKENDS = ["numpy", "jax-scan", "pallas-kinetic"]
 
 MIXTURES = {
     "paper": dict(alpha_maker=0.15, alpha_momentum=0.15),
@@ -26,36 +32,89 @@ MIXTURES = {
 }
 
 
-def run() -> List[Row]:
-    engines = {b: Engine(b) for b in BACKENDS}
-    rows = []
-    for scenario in scenario_names():
-        for mix_name, mix in MIXTURES.items():
-            cfg = scenario_config(
-                scenario, num_markets=FIXED_M, num_agents=FIXED_A,
-                num_steps=STEPS, **mix)
-            per_backend = {}
-            for b in BACKENDS:
-                eng = engines[b]
+def _sweep_configs(markets: int, agents: int, steps: int):
+    """The (scenario × mixture) grid, one config per cell."""
+    return [
+        scenario_config(scenario, num_markets=markets, num_agents=agents,
+                        num_steps=steps, **mix)
+        for scenario in scenario_names()
+        for mix in MIXTURES.values()
+    ]
 
-                def run_once():
-                    with eng.open(cfg) as sess:
-                        return sess.run(cfg.num_steps)
 
-                t, _ = time_call(run_once, trials=3, warmup=1)
-                per_backend[b] = t
-                rows.append((
-                    f"scenarios/{scenario}/{mix_name}/{b}",
-                    t * 1e6,
-                    f"events_per_s={events_per_s(cfg, t):.4g}"))
-            k = per_backend["pallas-kinetic"]
-            rows.append((
-                f"scenarios/{scenario}/{mix_name}/speedups",
-                k * 1e6,
-                ";".join(f"vs_{b}={per_backend[b] / k:.2f}x"
-                         for b in BACKENDS if b != "pallas-kinetic")))
+def run(backends: Optional[List[str]] = None, markets: Optional[int] = None,
+        agents: Optional[int] = None, steps: Optional[int] = None,
+        trials: int = 3) -> List[Row]:
+    backends = backends or DEFAULT_BACKENDS
+    markets = FIXED_M // 4 if markets is None else markets
+    agents = FIXED_A if agents is None else agents
+    steps = STEPS if steps is None else steps
+    cfgs = _sweep_configs(markets, agents, steps)
+    spec = EnsembleSpec.from_scenarios(cfgs)
+    n_cfg = len(cfgs)
+    chunk = min(64, steps)
+    launches_per_run = -(-steps // chunk)
+    total_events = spec.events()
+
+    rows: List[Row] = []
+    for b in backends:
+        # --- per-config loop: the pre-ensemble regime -------------------
+        loop_eng = Engine(b, chunk_size=chunk)
+
+        # Closures return the device results so time_call's block() actually
+        # synchronizes — otherwise async dispatch would be all we time.
+        def run_loop():
+            out = []
+            for cfg in cfgs:
+                with loop_eng.open(cfg) as sess:
+                    out.append(sess.run(cfg.num_steps))
+            return out
+
+        t_loop, _ = time_call(run_loop, trials=trials, warmup=1)
+        # All sweep configs share one static shape, so even the loop path
+        # compiles once under the new cache — the launch count (and the
+        # Θ(n_cfg) host dispatch/open overhead) is what the ensemble
+        # eliminates. `trace_count` records the measured compiles.
+        rows.append((
+            f"scenarios/loop/{b}", t_loop * 1e6,
+            f"events_per_s={total_events / t_loop:.4g};"
+            f"compiles={loop_eng.trace_count};"
+            f"launches={n_cfg * launches_per_run};configs={n_cfg}"))
+
+        # --- ensemble path: one spec, one compile, one launch per chunk -
+        ens_eng = Engine(b, chunk_size=chunk)
+
+        def run_ensemble():
+            with ens_eng.open(spec) as sess:
+                return sess.run(spec.num_steps)
+
+        t_ens, _ = time_call(run_ensemble, trials=trials, warmup=1)
+        rows.append((
+            f"scenarios/ensemble/{b}", t_ens * 1e6,
+            f"events_per_s={total_events / t_ens:.4g};"
+            f"compiles={ens_eng.trace_count};"
+            f"launches={launches_per_run};markets={spec.num_markets};"
+            f"speedup_vs_loop={t_loop / t_ens:.2f}x"))
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS))
+    ap.add_argument("--markets", type=int, default=None,
+                    help="markets per (scenario, mixture) cell")
+    ap.add_argument("--agents", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--json", default=None, metavar="BENCH_scenario.json",
+                    help="also write a machine-readable artifact")
+    args = ap.parse_args()
+    rows = run(backends=args.backends.split(","), markets=args.markets,
+               agents=args.agents, steps=args.steps, trials=args.trials)
+    emit(rows)
+    if args.json:
+        write_json(rows, args.json, "scenario_sweep")
+
+
 if __name__ == "__main__":
-    emit(run(), benchmark="scenario_sweep")
+    main()

@@ -32,25 +32,29 @@ import numpy as np
 
 # MarketState leaf names packed by session_tree / snapshot_from_tree.
 _SESSION_ARRAY_FIELDS = ("bid", "ask", "last_price", "prev_mid")
+# Snapshot keys holding dicts of arrays (packed as subtrees, not JSON meta).
+_SESSION_ARRAY_SUBTREES = ("params", "stats", "init")
 
 
 def session_tree(snapshot: Dict[str, Any]) -> Dict[str, Any]:
     """Pack a ``Session.snapshot()`` dict into a checkpointable pytree.
 
-    Array leaves (the book state, and the ``stats_only`` accumulators when
-    present) go in as-is; non-array metadata — the step cursor and any
-    stateful-RNG payload (PCG64 state holds 128-bit ints that numpy cannot
-    represent) — is JSON-encoded into a unicode scalar leaf.
+    Array leaves (the book state, the per-market parameter operands, and
+    the ``stats_only`` accumulators when present) go in as-is; non-array
+    metadata — the step cursor and any stateful-RNG payload (PCG64 state
+    holds 128-bit ints that numpy cannot represent) — is JSON-encoded into
+    a unicode scalar leaf.
     """
     meta = {k: v for k, v in snapshot.items()
-            if k not in _SESSION_ARRAY_FIELDS and k != "stats"}
+            if k not in _SESSION_ARRAY_FIELDS
+            and k not in _SESSION_ARRAY_SUBTREES}
     tree = {
         "state": {k: np.asarray(snapshot[k]) for k in _SESSION_ARRAY_FIELDS},
         "meta": np.asarray(json.dumps(meta)),
     }
-    if snapshot.get("stats") is not None:
-        tree["stats"] = {k: np.asarray(v)
-                         for k, v in snapshot["stats"].items()}
+    for sub in _SESSION_ARRAY_SUBTREES:
+        if snapshot.get(sub) is not None:
+            tree[sub] = {k: np.asarray(v) for k, v in snapshot[sub].items()}
     return tree
 
 
@@ -58,8 +62,9 @@ def snapshot_from_tree(tree: Dict[str, Any]) -> Dict[str, Any]:
     """Inverse of :func:`session_tree` (for ``Session.restore``)."""
     snap: Dict[str, Any] = dict(tree["state"])
     snap.update(json.loads(str(tree["meta"])))
-    if "stats" in tree:
-        snap["stats"] = dict(tree["stats"])
+    for sub in _SESSION_ARRAY_SUBTREES:
+        if sub in tree:
+            snap[sub] = dict(tree[sub])
     return snap
 
 

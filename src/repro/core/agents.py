@@ -7,10 +7,23 @@ experiments meaningful.
 
 Archetypes are registered per strategy-class id; ``decide`` evaluates every
 registered archetype on the full [M, A] lattice and selects per-agent with
-``where`` masks derived from the static mixture in :class:`MarketConfig`.
-The dispatch is branch-free by construction — no data-dependent control
-flow — so the same code fuses inside the persistent Pallas clearing kernel,
-lax.scan, and the NumPy host loop without specialization.
+``where`` masks derived from the **per-market** population counts in
+:class:`repro.core.params.MarketParams`. The dispatch is branch-free by
+construction — no data-dependent control flow — so the same code fuses
+inside the persistent Pallas clearing kernel, lax.scan, and the NumPy host
+loop without specialization, and one compiled trace serves *any* scenario
+mixture: every scenario-varying knob (noise width, maker spread,
+fundamentalist target/strength, marketable-flow probability, quantity cap,
+flash-crash schedule, archetype counts) is a ``[M, 1]`` runtime operand
+broadcast over the agent axis.
+
+All five RNG channels are drawn every step, for every market. For the
+counter-based generators this is free of semantic weight (channels are
+independent pure functions of the coordinate, and inactive draws are masked
+off), and it is what keeps the *stateful* PCG64 reference per-market
+decomposable: the draw schedule no longer depends on which scenario a
+market runs, so market ``m`` of a mixed ensemble consumes exactly the rows
+the homogeneous run consumed.
 
 All float math is float32 with explicit casts so NumPy (which would otherwise
 promote to float64) and JAX produce identical bit patterns.
@@ -19,6 +32,9 @@ from __future__ import annotations
 
 from typing import Callable, Dict, NamedTuple, Tuple
 
+import numpy as np
+
+from repro.core import params as params_mod
 from repro.core import rng
 from repro.core.config import (
     CH_MKT,
@@ -30,14 +46,14 @@ from repro.core.config import (
     MAKER,
     MOMENTUM,
     NOISE,
-    MarketConfig,
 )
+from repro.core.params import MarketParams
 
 
 class ArchetypeContext(NamedTuple):
     """Per-step inputs every archetype sees (all already [M, A]-broadcastable)."""
 
-    cfg: MarketConfig
+    params: MarketParams  # per-market [M, 1] scenario parameters
     xp: "module"
     mid: "array"        # float32[M, 1] current mid price
     prev_mid: "array"   # float32[M, 1] previous step's mid price
@@ -64,10 +80,11 @@ def archetype_names() -> Dict[int, str]:
 
 @register_archetype(NOISE, "noise")
 def _noise(ctx: ArchetypeContext):
-    """Random side; price = mid + U[-Δ, Δ]."""
+    """Random side; price = mid + U[-Δ, Δ] with per-market Δ."""
     f32 = ctx.xp.float32
     side_buy = ctx.u_side < f32(0.5)
-    eta = (ctx.u_price * f32(2.0) - f32(1.0)) * f32(ctx.cfg.noise_delta)
+    delta = ctx.xp.asarray(ctx.params.noise_delta, dtype=f32)
+    eta = (ctx.u_price * f32(2.0) - f32(1.0)) * delta
     return side_buy, ctx.mid + eta
 
 
@@ -84,36 +101,43 @@ def _momentum(ctx: ArchetypeContext):
 
 @register_archetype(MAKER, "maker")
 def _maker(ctx: ArchetypeContext):
-    """Market maker: alternate on parity of (a + s); fixed half-spread offset."""
+    """Market maker: alternate on parity of (a + s); per-market half-spread."""
     xp, f32 = ctx.xp, ctx.xp.float32
     side_buy = ((ctx.agent_ids + ctx.step_i) % xp.int32(2)) == xp.int32(0)
-    half = f32(ctx.cfg.maker_half_spread)
+    half = xp.asarray(ctx.params.maker_half_spread, dtype=f32)
     price_f = xp.where(side_buy, ctx.mid - half, ctx.mid + half)
     return side_buy, price_f
 
 
 @register_archetype(FUNDAMENTALIST, "fundamentalist")
 def _fundamentalist(ctx: ArchetypeContext):
-    """Mean reversion toward the fundamental price F.
+    """Mean reversion toward the per-market fundamental price F.
 
     Buys when mid < F (random side at the fixed point), quoting part-way back
-    toward F (strength kappa) with a unit jitter so fundamentalists do not
-    collapse onto a single tick.
+    toward F (per-market strength kappa) with a unit jitter so
+    fundamentalists do not collapse onto a single tick.
     """
     xp, f32 = ctx.xp, ctx.xp.float32
-    dev = f32(ctx.cfg.fundamental) - ctx.mid  # float32[M, 1]
+    fundamental = xp.asarray(ctx.params.fundamental, dtype=f32)
+    dev = fundamental - ctx.mid               # float32[M, 1]
     dev = dev + xp.zeros_like(ctx.u_side)     # broadcast [M, A]
     side_buy = xp.where(dev != f32(0.0), dev > f32(0.0), ctx.u_side < f32(0.5))
     jitter = ctx.u_price * f32(2.0) - f32(1.0)
-    price_f = ctx.mid + dev * f32(ctx.cfg.fundamentalist_kappa) + jitter
+    kappa = xp.asarray(ctx.params.fundamentalist_kappa, dtype=f32)
+    price_f = ctx.mid + dev * kappa + jitter
     return side_buy, price_f
 
 
-def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
-           uniform_fn=None):
+def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
+           agent_ids, xp, uniform_fn=None, atype=None):
     """Vectorized agent decisions for one step.
 
     Args:
+      cfg:        the static shape carrier (``MarketConfig`` or
+                  ``EnsembleSpec``) supplying ``num_agents``, ``num_levels``
+                  and the RNG ``seed`` — the only fields baked into traces.
+      params:     :class:`MarketParams` of per-market ``[M, 1]`` operands
+                  (``[1, 1]`` constants on the legacy scalar path).
       mid:        float32[M, 1] current mid price per market.
       prev_mid:   float32[M, 1] previous step's mid price.
       step:       int32 scalar (traced ok) step index.
@@ -122,6 +146,10 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
       uniform_fn: optional ``f(gid, step, channel) -> float32[M, A]`` RNG
         override (used by the statistical-equivalence reference backends);
         defaults to the production kinetic_hash32 stream.
+      atype:      optional precomputed per-market type lattice
+        (:func:`repro.core.params.agent_types`) — it is step-invariant, so
+        loop drivers hoist it out of the step loop; ``None`` recomputes it
+        here (value-identical).
 
     Returns:
       side_buy: bool[M, A], price: int32[M, A], qty: float32[M, A]
@@ -142,36 +170,60 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
         def u(channel):
             return uniform_fn(gid, step_u, channel)
 
+    # Fixed five-channel draw schedule — scenario-independent by design, so
+    # the sequential PCG64 reference stays per-market decomposable across
+    # ensemble mixtures (see module docstring). The one exception is the
+    # production counter stream (uniform_fn=None): its channels are pure
+    # functions of the coordinate, so when every market's shock intensity
+    # is a concrete host zero the CH_SHOCK draw is skipped outright —
+    # bitwise-invisible, and it spares the NumPy reference a full [M, A]
+    # hash channel per step on baseline runs.
     u_side = u(CH_SIDE)
     u_price = u(CH_PRICE)
     u_mkt = u(CH_MKT)
     u_qty = u(CH_QTY)
+    skip_shock = (uniform_fn is None
+                  and isinstance(params.shock_intensity, np.ndarray)
+                  and not params.shock_intensity.any())
+    u_shock = None if skip_shock else u(CH_SHOCK)
 
-    atype = cfg.agent_types(xp)[None, :]  # int32[1, A]
+    if atype is None:  # int32[M, A]-broadcastable per-market type lattice
+        atype = params_mod.agent_types(params, A, xp)
     mid = xp.asarray(mid, dtype=xp.float32)
     prev_mid = xp.asarray(prev_mid, dtype=xp.float32)
     step_i = xp.asarray(step).astype(xp.int32)
 
-    ctx = ArchetypeContext(cfg=cfg, xp=xp, mid=mid, prev_mid=prev_mid,
+    ctx = ArchetypeContext(params=params, xp=xp, mid=mid, prev_mid=prev_mid,
                            step_i=step_i, agent_ids=agent_ids,
                            u_side=u_side, u_price=u_price)
 
-    # Branch-free archetype dispatch: evaluate each populated archetype on
-    # the full lattice, select by the static per-agent type vector. Masks are
+    # Branch-free archetype dispatch: evaluate every registered archetype on
+    # the full lattice, select by the per-market type lattice. Masks are
     # disjoint, so the fold order only needs to be deterministic (ascending
-    # type id) for bitwise reproducibility. Archetypes whose static count is
-    # zero are skipped entirely — their mask would be all-False, so the
-    # result is value-identical while the NumPy host loop (which cannot
-    # constant-fold the dead select) skips the work.
+    # type id) for bitwise reproducibility; because the final value at each
+    # agent is exactly its own archetype's output, evaluating unpopulated
+    # archetypes is value-invisible — which is what lets one trace serve
+    # any population mixture. The NumPy host loop cannot constant-fold a
+    # dead select, so an archetype whose count column is a *concrete* host
+    # array of zeros is skipped outright (its mask would be all-False —
+    # value-identical); traced backends always see the full fold.
+    count_cols = {MAKER: params.num_makers, MOMENTUM: params.num_momentum,
+                  FUNDAMENTALIST: params.num_fundamentalists}
+
+    def concretely_empty(tid):
+        col = count_cols.get(tid)
+        return isinstance(col, np.ndarray) and not col.any()
+
     zero_f = xp.zeros_like(u_side)
     zero_b = zero_f > f32(0.0)  # all-False bool[M, A] broadcast template
-    counts = cfg.archetype_counts()
-    ids = [tid for tid in sorted(_ARCHETYPES) if counts.get(tid, 0) > 0]
+    ids = sorted(_ARCHETYPES)
     _, fn0 = _ARCHETYPES[ids[0]]
     side_buy, price_f = fn0(ctx)
     side_buy = side_buy | zero_b
     price_f = price_f + zero_f
     for tid in ids[1:]:
+        if concretely_empty(tid):
+            continue
         _, fn = _ARCHETYPES[tid]
         s, p = fn(ctx)
         mask = atype == xp.int32(tid)
@@ -181,20 +233,24 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
     is_maker = atype == MAKER
 
     # Marketable orders (never for makers): force to the grid boundary.
-    marketable = (u_mkt < f32(cfg.p_marketable)) & ~is_maker
+    p_mkt = xp.asarray(params.p_marketable, dtype=f32)
+    marketable = (u_mkt < p_mkt) & ~is_maker
     price_f = xp.where(
         marketable,
         xp.where(side_buy, f32(L - 1), f32(0.0)),
         price_f,
     )
 
-    # Scenario overlay: flash-crash panic (branch-free; the static python
-    # guard keeps baseline configs off the extra RNG channel entirely, so
-    # their streams are unchanged). Panicking non-makers sell marketably.
-    if cfg.shock_intensity > 0.0 and cfg.shock_step >= 0:
-        at_shock = step_i == xp.int32(cfg.shock_step)
-        panic = (u(CH_SHOCK) < f32(cfg.shock_intensity)) & ~is_maker
-        panic = panic & (at_shock | zero_b)
+    # Scenario overlay: flash-crash panic, keyed on the per-market shock
+    # schedule (branch-free; markets whose shock_step is < 0 or elsewhere
+    # see an all-False mask and an untouched stream). Panicking non-makers
+    # sell marketably. Skipped when the shock channel was concretely
+    # elided above — the panic mask would be all-False.
+    if u_shock is not None:
+        shock_step = xp.asarray(params.shock_step, dtype=xp.int32)
+        shock_int = xp.asarray(params.shock_intensity, dtype=f32)
+        at_shock = (step_i == shock_step) | zero_b
+        panic = (u_shock < shock_int) & ~is_maker & at_shock
         side_buy = xp.where(panic, zero_b, side_buy)
         price_f = xp.where(panic, f32(0.0) + zero_f, price_f)
 
@@ -204,5 +260,6 @@ def decide(cfg: MarketConfig, mid, prev_mid, step, market_ids, agent_ids, xp,
 
     # Integer quantity q = 1 + floor(u * q_max) in {1..q_max}, kept in f32
     # (exact-integer arithmetic => associative adds => bitwise reproducible).
-    qty = f32(1.0) + xp.floor(u_qty * f32(cfg.q_max))
+    q_max = xp.asarray(params.q_max, dtype=f32)
+    qty = f32(1.0) + xp.floor(u_qty * q_max)
     return side_buy, price, qty

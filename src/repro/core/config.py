@@ -12,6 +12,12 @@ of the scenario engine:
     volatility regimes, wide/thin opening books) expressed purely as config
     fields, so scenario dispatch compiles to branch-free ``where`` selects
     inside the fused step and never breaks the persistent kernel.
+
+A ``MarketConfig`` is the *scalar* surface: one value per field, uniform
+over the ensemble. The engine-facing generalization is
+:class:`repro.core.params.EnsembleSpec`, which stacks per-market values of
+every scenario-varying field into device operands — ``Engine.open(cfg)``
+coerces a config through ``EnsembleSpec.homogeneous`` bitwise-identically.
 """
 from __future__ import annotations
 
@@ -142,41 +148,74 @@ class MarketConfig:
     def agent_types(self, xp) -> "xp.ndarray":
         """int32[A] strategy class per agent index.
 
-        Assignment order: makers, momentum, fundamentalists, then noise —
-        a pure function of the static mixture weights, so every backend
-        derives the identical population without any device-side state.
+        Delegates to the single shared assignment rule
+        (:func:`assign_agent_types`) with this config's scalar counts, so
+        the scalar path and the per-market ensemble path
+        (``repro.core.params.agent_types``) can never drift apart.
         """
-        a = xp.arange(self.num_agents, dtype=xp.int32)
-        nm, nmo, nf = self.num_makers, self.num_momentum, self.num_fundamentalists
-        return xp.where(
-            a < nm,
-            xp.int32(MAKER),
-            xp.where(
-                a < nm + nmo,
-                xp.int32(MOMENTUM),
-                xp.where(a < nm + nmo + nf,
-                         xp.int32(FUNDAMENTALIST), xp.int32(NOISE)),
-            ),
-        )
+        return assign_agent_types(
+            xp, self.num_agents, self.num_makers, self.num_momentum,
+            self.num_fundamentalists)[0]
 
     def initial_books(self, xp) -> Tuple["xp.ndarray", "xp.ndarray"]:
         """(bid, ask) float32[M, L] opening books."""
-        M, L = self.num_markets, self.num_levels
-        bid = xp.zeros((M, L), dtype=xp.float32)
-        ask = xp.zeros((M, L), dtype=xp.float32)
-        half = self.initial_spread // 2 + self.initial_spread % 2
-        pb = L // 2 - half
-        pa = L // 2 + half
-        q = xp.float32(self.initial_quote_qty)
-        onehot_b = (xp.arange(L, dtype=xp.int32) == pb).astype(xp.float32) * q
-        onehot_a = (xp.arange(L, dtype=xp.int32) == pa).astype(xp.float32) * q
-        bid = bid + onehot_b[None, :]
-        ask = ask + onehot_a[None, :]
-        return bid, ask
+        M = self.num_markets
+        return seed_books(
+            xp, self.num_levels,
+            xp.full((M,), self.initial_quote_qty, dtype=xp.float32),
+            xp.full((M,), self.initial_spread, dtype=xp.int32))
 
     def events(self) -> int:
         """Total agent events M*A*S (paper's throughput denominator)."""
         return self.num_markets * self.num_agents * self.num_steps
+
+
+def assign_agent_types(xp, num_agents: int, num_makers, num_momentum,
+                       num_fundamentalists):
+    """int32 strategy-class lattice broadcastable to [M, A].
+
+    The single live copy of the deterministic assignment rule — makers
+    first, then momentum, then fundamentalists, then noise, by agent
+    index — shared by the scalar :meth:`MarketConfig.agent_types` (scalar
+    counts → one row) and the per-market ``repro.core.params.agent_types``
+    (``[M, 1]`` count columns → ``[M, A]``), so every backend derives the
+    identical population without any device-side state.
+    """
+    a = xp.arange(num_agents, dtype=xp.int32)[None, :]
+    nm = xp.asarray(num_makers, dtype=xp.int32)
+    nmo = xp.asarray(num_momentum, dtype=xp.int32)
+    nf = xp.asarray(num_fundamentalists, dtype=xp.int32)
+    return xp.where(
+        a < nm,
+        xp.int32(MAKER),
+        xp.where(
+            a < nm + nmo,
+            xp.int32(MOMENTUM),
+            xp.where(a < nm + nmo + nf,
+                     xp.int32(FUNDAMENTALIST), xp.int32(NOISE)),
+        ),
+    )
+
+
+def seed_books(xp, num_levels: int, quote_qty, spread) -> Tuple:
+    """(bid, ask) float32[M, L] opening books (paper Alg.1 line 3).
+
+    The single live copy of the book-seeding rule, vectorized over
+    per-market ``quote_qty`` (f32[M]) and ``spread`` (int32[M]) — quotes
+    straddle L/2 at ``ceil(spread / 2)`` ticks. Shared by the scalar
+    :meth:`MarketConfig.initial_books` and the per-market
+    ``EnsembleSpec.initial_books`` so the homogeneous path stays
+    bitwise-identical by construction.
+    """
+    L = num_levels
+    half = spread // 2 + spread % 2                      # int32[M]
+    pb = (xp.int32(L // 2) - half)[:, None]              # int32[M, 1]
+    pa = (xp.int32(L // 2) + half)[:, None]
+    q = xp.asarray(quote_qty, dtype=xp.float32)[:, None] # f32[M, 1]
+    levels = xp.arange(L, dtype=xp.int32)[None, :]
+    bid = (levels == pb).astype(xp.float32) * q
+    ask = (levels == pa).astype(xp.float32) * q
+    return bid, ask
 
 
 # ---------------------------------------------------------------------------

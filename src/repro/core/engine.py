@@ -2,11 +2,15 @@
 
 The stateful front door lives in :mod:`repro.core.session`:
 ``Engine(backend, **backend_opts)`` caches compiled chunk executables and
-``engine.open(cfg) -> Session`` holds a live device-resident market. This
-module keeps the historical one-shot surface — ``simulate(cfg, backend=...)``
-and ``simulate_scenario(name, backend=...)`` — as thin compatibility
-wrappers over a one-session run, sharing a module-level engine cache so
-repeated calls reuse warm executables.
+``engine.open(spec) -> Session`` holds a live device-resident market
+ensemble. ``spec`` is an :class:`repro.core.params.EnsembleSpec` — the
+ensemble-first surface, heterogeneous per-market scenario parameters as
+device operands — or a plain :class:`MarketConfig`, which coerces to a
+homogeneous spec bitwise-identically. This module keeps the historical
+one-shot surface — ``simulate(cfg, backend=...)`` and
+``simulate_scenario(name, backend=...)`` — as thin compatibility wrappers
+over a one-session run, sharing a module-level engine cache so repeated
+calls reuse warm executables.
 
 Backends (paper §IV's five engines):
   * ``numpy``             — CPU (NumPy) reference, kinetic RNG (bitwise-comparable)
@@ -22,6 +26,10 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.config import MarketConfig, scenario_config, scenario_names
+from repro.core.params import (  # noqa: F401 (re-exported API)
+    EnsembleSpec,
+    MarketParams,
+)
 from repro.core.result import SimResult
 from repro.core.session import (  # noqa: F401 (re-exported API)
     Engine,
@@ -63,11 +71,12 @@ def _compat_engine(backend: str, opts: Dict[str, Any]) -> Engine:
     return eng
 
 
-def simulate(cfg: MarketConfig, backend: str = "jax-scan",
+def simulate(cfg, backend: str = "jax-scan",
              **kwargs: Any) -> SimResult:
-    """One-shot compatibility wrapper: open a session, run ``cfg.num_steps``
+    """One-shot compatibility wrapper: open a session, run ``num_steps``
     steps, return the terminal :class:`SimResult`.
 
+    ``cfg`` may be a :class:`MarketConfig` or an :class:`EnsembleSpec`.
     Raises ``KeyError`` for unknown backends; if a backend failed to
     register (e.g. the Pallas kernels' import failed), the error carries the
     recorded reason — see :func:`backend_available`.

@@ -12,10 +12,12 @@ Two engines:
 
 Both reuse the shared step semantics in :mod:`repro.core.step`. The session
 entry point is :func:`open_chunk_runner`: the chunk length is static while
-``(step0, n_valid)`` are runtime scalars, so one trace serves any requested
-step count and repeated warm runs never retrace; the carried state buffers
-are donated back to the executable on every call. :func:`simulate` is a
-compatibility wrapper over a one-session run.
+``(step0, n_valid)`` — and every per-market scenario parameter, via the
+:class:`repro.core.params.MarketParams` operand — are runtime values, so one
+trace serves any requested step count *and any scenario mixture*, and
+repeated warm runs never retrace; the carried state buffers are donated back
+to the executable on every call (params are not — they persist across
+calls). :func:`simulate` is a compatibility wrapper over a one-session run.
 """
 from __future__ import annotations
 
@@ -25,9 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import params as params_mod
 from repro.core import session
 from repro.core import stats as stats_mod
-from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
 from repro.core.step import MarketState, simulate_step
 
@@ -42,8 +45,8 @@ def _bin_orders_scatter_jax(side_buy, price, qty, M, L):
     return buy, sell
 
 
-def _make_bin_orders(cfg: MarketConfig, binning: str):
-    M, L = cfg.num_markets, cfg.num_levels
+def _make_bin_orders(spec: EnsembleSpec, binning: str):
+    M, L = spec.num_markets, spec.num_levels
     if binning == "scatter":
         return lambda sb, p, q: _bin_orders_scatter_jax(sb, p, q, M, L)
     return None  # one-hot MXU default inside simulate_step
@@ -54,34 +57,37 @@ class JaxChunkRunner(session.ChunkRunner):
 
     xp = jnp
 
-    def __init__(self, cfg: MarketConfig, chunk: int, mode: str,
+    def __init__(self, spec: EnsembleSpec, chunk: int, mode: str,
                  binning: str, scan: str, stats_only: bool = False):
         super().__init__()
         if mode not in ("scan", "per-step"):
             raise ValueError(f"unknown mode {mode!r}")
-        self.cfg = cfg
+        self.spec = spec
         self.chunk = int(chunk)
         self.mode = mode
         self.stats_only = bool(stats_only)
-        M, L = cfg.num_markets, cfg.num_levels
+        M, L = spec.num_markets, spec.num_levels
         market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
-        bin_orders = _make_bin_orders(cfg, binning)
+        bin_orders = _make_bin_orders(spec, binning)
         self._zero_ext = (jnp.zeros((M, L), jnp.float32),
                           jnp.zeros((M, L), jnp.float32))
 
         if mode == "scan":
-            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
+            def chunk_fn(state, stats, params, step0, n_valid,
+                         ext_buy, ext_ask):
                 self._trace_count += 1  # python side effect: trace-time only
                 zeros_ext = jnp.zeros_like(ext_buy)
+                # Step-invariant type lattice, hoisted out of the scan.
+                atype = params_mod.agent_types(params, spec.num_agents, jnp)
 
                 def body(carry, s):
                     st, acc = carry
                     eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
                     ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
                     new_st, out = simulate_step(
-                        cfg, st, step0 + s, market_ids, jnp,
+                        spec, st, step0 + s, market_ids, jnp,
                         bin_orders=bin_orders, scan=scan,
-                        ext_buy=eb, ext_ask=ea,
+                        ext_buy=eb, ext_ask=ea, params=params, atype=atype,
                     )
                     active = s < n_valid
                     st = MarketState(*(jnp.where(active, new, old)
@@ -102,11 +108,12 @@ class JaxChunkRunner(session.ChunkRunner):
 
             self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
-            def step_fn(state, s, ext_buy, ext_ask):
+            def step_fn(state, params, s, ext_buy, ext_ask):
                 self._trace_count += 1
                 return simulate_step(
-                    cfg, state, s, market_ids, jnp, bin_orders=bin_orders,
+                    spec, state, s, market_ids, jnp, bin_orders=bin_orders,
                     scan=scan, ext_buy=ext_buy, ext_ask=ext_ask,
+                    params=params,
                 )
 
             self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
@@ -117,15 +124,16 @@ class JaxChunkRunner(session.ChunkRunner):
                 donate_argnums=(0,))
 
     def _empty_batch(self) -> session.StepBatch:
-        empty = jnp.zeros((self.cfg.num_markets, 0), jnp.float32)
+        empty = jnp.zeros((self.spec.num_markets, 0), jnp.float32)
         return session.StepBatch(price=empty, volume=empty, mid=empty)
 
-    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+    def run(self, state: MarketState, params: MarketParams, aux,
+            step0: int, n: int, ext,
             stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
         eb, ea = self._zero_ext if ext is None else ext
         if self.mode == "scan":
             state, stats, paths = self._chunk_fn(
-                state, stats if self.stats_only else None,
+                state, stats if self.stats_only else None, params,
                 jnp.int32(step0), jnp.int32(n), eb, ea)
             if self.stats_only:
                 return state, aux, self._empty_batch(), stats
@@ -140,7 +148,7 @@ class JaxChunkRunner(session.ChunkRunner):
         for k in range(n):
             keep = k == 0 and ext is not None
             state, out = self._step_fn(
-                state, jnp.int32(step0 + k),
+                state, params, jnp.int32(step0 + k),
                 eb if keep else zeros, ea if keep else zeros)
             if self.stats_only:
                 stats = self._acc_fn(stats, out.mid, out.volume)
@@ -158,19 +166,20 @@ class JaxChunkRunner(session.ChunkRunner):
         return state, aux, batch, None
 
 
-def open_chunk_runner(cfg: MarketConfig, chunk: int, mode: str = "scan",
+def open_chunk_runner(spec, chunk: int, mode: str = "scan",
                       binning: str = "onehot",
                       scan: str = "cumsum",
                       stats_only: bool = False) -> JaxChunkRunner:
     """Session factory for the JAX framework baselines."""
-    return JaxChunkRunner(cfg, chunk, mode=mode, binning=binning, scan=scan,
-                          stats_only=stats_only)
+    return JaxChunkRunner(EnsembleSpec.coerce(spec), chunk, mode=mode,
+                          binning=binning, scan=scan, stats_only=stats_only)
 
 
-def simulate(cfg: MarketConfig, mode: str = "scan", binning: str = "onehot",
+def simulate(cfg, mode: str = "scan", binning: str = "onehot",
              scan: str = "cumsum") -> SimResult:
-    """Compatibility wrapper: one-session run over ``cfg.num_steps``."""
+    """Compatibility wrapper: one-session run over ``num_steps``."""
+    spec = EnsembleSpec.coerce(cfg)
     runner = open_chunk_runner(
-        cfg, min(session.DEFAULT_CHUNK, cfg.num_steps),
+        spec, min(session.DEFAULT_CHUNK, spec.num_steps),
         mode=mode, binning=binning, scan=scan)
-    return session.run_runner_to_result(runner, cfg)
+    return session.run_runner_to_result(runner, spec)

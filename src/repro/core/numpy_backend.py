@@ -25,9 +25,10 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+from repro.core import params as params_mod
 from repro.core import rng, session
 from repro.core import stats as stats_mod
-from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.step import MarketState, simulate_step
 from repro.core.result import SimResult
 
@@ -48,24 +49,24 @@ class NumpyChunkRunner(session.ChunkRunner):
 
     xp = np
 
-    def __init__(self, cfg: MarketConfig, chunk: int, rng_mode: str,
+    def __init__(self, spec: EnsembleSpec, chunk: int, rng_mode: str,
                  scan: str, stats_only: bool = False):
         super().__init__()
         if rng_mode not in ("kinetic", "splitmix64", "pcg64"):
             raise ValueError(f"unknown rng_mode {rng_mode!r}")
-        self.cfg = cfg
+        self.spec = spec
         self.chunk = int(chunk)
         self.rng_mode = rng_mode
         self.scan = scan
         self.stats_only = bool(stats_only)
-        M, L = cfg.num_markets, cfg.num_levels
+        M, L = spec.num_markets, spec.num_levels
         self._market_ids = np.arange(M, dtype=np.int32)[:, None]
         self._bin = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
 
     # ---- stateful RNG (PCG64 only) ----
-    def init_aux(self, cfg: MarketConfig) -> Optional[np.random.Generator]:
+    def init_aux(self, spec: EnsembleSpec) -> Optional[np.random.Generator]:
         if self.rng_mode == "pcg64":
-            return np.random.Generator(np.random.PCG64(cfg.seed))
+            return np.random.Generator(np.random.PCG64(spec.seed))
         return None
 
     def aux_state(self, aux) -> Optional[dict]:
@@ -74,7 +75,7 @@ class NumpyChunkRunner(session.ChunkRunner):
     def restore_aux(self, payload) -> Optional[np.random.Generator]:
         if self.rng_mode != "pcg64":
             return None
-        gen = np.random.Generator(np.random.PCG64(self.cfg.seed))
+        gen = np.random.Generator(np.random.PCG64(self.spec.seed))
         gen.bit_generator.state = payload
         return gen
 
@@ -82,7 +83,7 @@ class NumpyChunkRunner(session.ChunkRunner):
         if self.rng_mode == "kinetic":
             return None
         if self.rng_mode == "splitmix64":
-            seed = self.cfg.seed
+            seed = self.spec.seed
 
             def uniform_fn(gid, step, channel):
                 return rng.splitmix64_uniform(seed, gid, step, channel)
@@ -92,11 +93,15 @@ class NumpyChunkRunner(session.ChunkRunner):
             return aux.random(size=gid.shape, dtype=np.float32)
         return uniform_fn
 
-    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+    def run(self, state: MarketState, params: MarketParams, aux,
+            step0: int, n: int, ext,
             stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
-        cfg = self.cfg
-        M = cfg.num_markets
+        spec = self.spec
+        M = spec.num_markets
         uniform_fn = self._uniform_fn(aux)
+        # The type lattice is step-invariant: build it once per chunk, not
+        # once per step of the host loop.
+        atype = params_mod.agent_types(params, spec.num_agents, np)
         width = 0 if self.stats_only else n
         pp = np.zeros((M, width), dtype=np.float32)
         vp = np.zeros((M, width), dtype=np.float32)
@@ -104,9 +109,9 @@ class NumpyChunkRunner(session.ChunkRunner):
         for k in range(n):
             eb, ea = ext if (k == 0 and ext is not None) else (None, None)
             state, out = simulate_step(
-                cfg, state, np.int32(step0 + k), self._market_ids, np,
+                spec, state, np.int32(step0 + k), self._market_ids, np,
                 bin_orders=self._bin, scan=self.scan, uniform_fn=uniform_fn,
-                ext_buy=eb, ext_ask=ea,
+                ext_buy=eb, ext_ask=ea, params=params, atype=atype,
             )
             if self.stats_only:
                 stats = stats_mod.accumulate(stats, out.mid, out.volume,
@@ -119,18 +124,21 @@ class NumpyChunkRunner(session.ChunkRunner):
                 stats)
 
 
-def open_chunk_runner(cfg: MarketConfig, chunk: int,
+def open_chunk_runner(spec, chunk: int,
                       rng_mode: str = "kinetic",
                       scan: str = "cumsum",
                       stats_only: bool = False) -> NumpyChunkRunner:
     """Session factory for the CPU reference backend."""
-    return NumpyChunkRunner(cfg, chunk, rng_mode=rng_mode, scan=scan,
+    return NumpyChunkRunner(EnsembleSpec.coerce(spec), chunk,
+                            rng_mode=rng_mode, scan=scan,
                             stats_only=stats_only)
 
 
-def simulate(cfg: MarketConfig, rng_mode: str = "kinetic",
+def simulate(cfg, rng_mode: str = "kinetic",
              scan: str = "cumsum") -> SimResult:
-    """Compatibility wrapper: one-session run over ``cfg.num_steps``."""
-    runner = open_chunk_runner(cfg, min(session.DEFAULT_CHUNK, cfg.num_steps),
+    """Compatibility wrapper: one-session run over ``num_steps``."""
+    spec = EnsembleSpec.coerce(cfg)
+    runner = open_chunk_runner(spec,
+                               min(session.DEFAULT_CHUNK, spec.num_steps),
                                rng_mode=rng_mode, scan=scan)
-    return session.run_runner_to_result(runner, cfg)
+    return session.run_runner_to_result(runner, spec)

@@ -6,22 +6,29 @@ independent of step count — is about *persistent state across step
 boundaries*. This module is the front door to that regime:
 
     eng = Engine("pallas-kinetic")
-    with eng.open(cfg) as sess:           # device-resident MarketState
+    with eng.open(spec) as sess:          # device-resident MarketState
         for batch in sess.stream(10_000): # chunked StepBatch slices
             consume(batch)
         obs = sess.step(actions)          # gym-style RL hook
 
 Design:
 
-  * :class:`Engine` caches compiled chunk executables per (config-semantics,
-    chunk-length) key, shared by every session it opens — opening a second
-    session with the same shape triggers **zero** retraces.
+  * :class:`Engine` opens sessions on an :class:`repro.core.params
+    .EnsembleSpec` — a heterogeneous per-market parameter ensemble — or on
+    a plain :class:`MarketConfig`, which coerces to a homogeneous spec
+    bitwise-identically. Compiled chunk executables are cached per
+    (static-shape, chunk-length) key — ``EnsembleSpec.static_key()``:
+    ``(M, A, L, seed)`` — so *any* scenario mixture, and any change of
+    parameter values, reuses one warm trace. Opening a second session with
+    the same shape triggers **zero** retraces.
   * Each backend supplies a :class:`ChunkRunner`: a fixed ``chunk``-length
-    compiled entry taking runtime ``(step0, n_valid)`` scalars, so one trace
-    serves any requested step count; partial tails are gated branch-free.
+    compiled entry taking runtime ``(step0, n_valid)`` scalars plus the
+    per-market :class:`MarketParams` operands, so one trace serves any
+    requested step count *and* any parameter values; partial tails are
+    gated branch-free.
   * State buffers are **donated** back to the executable on every chunk
-    (``jax.jit(..., donate_argnums=(0,))``), so a warm session updates its
-    books in place with no per-call re-init.
+    (``jax.jit(..., donate_argnums=(0,))``); the params operands are *not*
+    donated — they persist device-resident across the session's life.
   * Chunked execution is bitwise-identical to one-shot: the RNG is a pure
     function of the absolute step coordinate and the scenario overlay keys
     on the absolute step, so chunk boundaries are invisible to the stream.
@@ -30,29 +37,41 @@ Design:
     gym-style hook for future RL workloads; ``actions=None`` is a bitwise
     no-op relative to :meth:`Session.run`.
   * :meth:`Session.snapshot` / :meth:`Session.restore` round-trip the full
-    session state (books, step cursor, stateful RNG, and any ``stats_only``
-    accumulators) exactly, and wire into
-    :class:`repro.checkpoint.manager.CheckpointManager` via
+    session state (books, step cursor, stateful RNG, the per-market
+    parameter operands, and any ``stats_only`` accumulators) exactly, and
+    wire into :class:`repro.checkpoint.manager.CheckpointManager` via
     :meth:`Session.save_checkpoint` / :meth:`Session.restore_checkpoint`.
   * Sessions are device-layout transparent: a runner may shard the market
     axis over a ``("markets",)`` mesh (``Engine(backend, devices=N)``) and
     every advancement/snapshot API behaves identically — bitwise — to the
-    single-device session. In ``stats_only`` mode the per-step paths are
-    replaced by carried per-market aggregates (:attr:`Session.stats`),
-    making session output traffic Θ(M) independent of horizon.
+    single-device session; heterogeneous params shard row-wise with the
+    books. In ``stats_only`` mode the per-step paths are replaced by
+    carried per-market aggregates (:attr:`Session.stats`), making session
+    output traffic Θ(M) independent of horizon.
+
+Horizon semantics: ``num_steps`` is the session **horizon** — the default
+length of :meth:`Session.run` / :meth:`Session.stream` and the bound every
+scenario event is validated against (``shock_step < num_steps``). Advancing
+*past* the horizon with an explicit ``n_steps`` is permitted (the RNG and
+overlays key on the absolute step, so post-horizon steps are well defined;
+a shock that already fired never re-fires), but the default-length form
+``run()``/``stream()`` raises once the cursor has reached the horizon —
+running "the configured scenario" from there could never fire any of its
+events, which previously failed silently.
 
 ``engine.simulate()`` / ``engine.simulate_scenario()`` remain as thin
 compatibility wrappers over a one-session run.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple, Union
-
 import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
 from repro.core.stats import MarketStats, init_stats
 from repro.core.step import MarketState, initial_state
@@ -60,7 +79,7 @@ from repro.core.step import MarketState, initial_state
 #: Default compiled chunk length (steps per device call) for streaming runs.
 DEFAULT_CHUNK = 64
 
-# backend name -> factory(cfg, chunk, **backend_opts) -> ChunkRunner
+# backend name -> factory(spec, chunk, **backend_opts) -> ChunkRunner
 _FACTORIES: Dict[str, Callable[..., "ChunkRunner"]] = {}
 # backend name -> reason string for backends whose registration failed
 _FAILED: Dict[str, str] = {}
@@ -105,8 +124,9 @@ class ChunkRunner:
 
     Subclasses set ``chunk`` and ``xp`` and implement :meth:`run`; stateful
     RNG backends additionally override the ``aux`` hooks. A runner is
-    immutable and shared by every session opened with the same semantics —
-    all per-session mutable state lives in :class:`Session`.
+    immutable and shared by every session opened with the same *static
+    shape* — all per-session mutable state, including the per-market
+    :class:`MarketParams` operands, lives in :class:`Session`.
     """
 
     chunk: int = 1
@@ -123,18 +143,22 @@ class ChunkRunner:
         """Times the underlying executable was (re)traced; 0 for host loops."""
         return self._trace_count
 
-    def init_state(self, cfg: MarketConfig) -> MarketState:
-        return initial_state(cfg, self.xp)
+    def init_state(self, spec: EnsembleSpec) -> MarketState:
+        return initial_state(spec, self.xp)
 
     def to_device(self, state: MarketState) -> MarketState:
         return MarketState(*(self.xp.asarray(np.asarray(x), dtype=self.xp.float32)
                              for x in state))
 
+    def params_to_device(self, params: MarketParams) -> MarketParams:
+        """Place the per-market parameter operands (dtype-preserving)."""
+        return params.asarray(self.xp)
+
     # ---- stats_only accumulators (None unless the runner enables them) ----
-    def init_stats(self, cfg: MarketConfig) -> Optional[MarketStats]:
+    def init_stats(self, spec: EnsembleSpec) -> Optional[MarketStats]:
         if not self.stats_only:
             return None
-        return init_stats(cfg.num_markets, self.xp)
+        return init_stats(spec.num_markets, self.xp)
 
     def stats_to_device(self, stats: MarketStats) -> MarketStats:
         return MarketStats(*(self.xp.asarray(np.asarray(x),
@@ -142,7 +166,7 @@ class ChunkRunner:
                              for x in stats))
 
     # ---- stateful-RNG hooks (identity for counter-based backends) ----
-    def init_aux(self, cfg: MarketConfig) -> Any:
+    def init_aux(self, spec: EnsembleSpec) -> Any:
         return None
 
     def aux_state(self, aux: Any) -> Any:
@@ -152,25 +176,27 @@ class ChunkRunner:
     def restore_aux(self, payload: Any) -> Any:
         return None
 
-    def run(self, state: MarketState, aux: Any, step0: int, n: int,
-            ext: Optional[Tuple[Any, Any]],
+    def run(self, state: MarketState, params: MarketParams, aux: Any,
+            step0: int, n: int, ext: Optional[Tuple[Any, Any]],
             stats: Optional[MarketStats] = None,
             ) -> Tuple[MarketState, Any, StepBatch, Optional[MarketStats]]:
         """Advance ``n <= self.chunk`` steps from absolute step ``step0``.
 
-        ``ext`` is an optional ``(ext_buy, ext_ask)`` float32[M, L] pair
-        injected at the first step of the chunk. Returns the new state, new
-        aux, a :class:`StepBatch` whose paths have exactly ``n`` columns,
-        and the updated stats accumulators. In ``stats_only`` mode the
-        carried ``stats`` must be threaded through every call (the batch
-        comes back with zero-width paths); otherwise ``stats`` is ignored
-        and returned as ``None``.
+        ``params`` carries the session's per-market scenario operands
+        (placed via :meth:`params_to_device`; never donated). ``ext`` is an
+        optional ``(ext_buy, ext_ask)`` float32[M, L] pair injected at the
+        first step of the chunk. Returns the new state, new aux, a
+        :class:`StepBatch` whose paths have exactly ``n`` columns, and the
+        updated stats accumulators. In ``stats_only`` mode the carried
+        ``stats`` must be threaded through every call (the batch comes back
+        with zero-width paths); otherwise ``stats`` is ignored and returned
+        as ``None``.
         """
         raise NotImplementedError
 
 
 def register_backend(name: str):
-    """Register a session factory ``f(cfg, chunk, **opts) -> ChunkRunner``."""
+    """Register a session factory ``f(spec, chunk, **opts) -> ChunkRunner``."""
     def deco(fn):
         _FACTORIES[name] = fn
         _FAILED.pop(name, None)
@@ -199,19 +225,19 @@ def _ensure_builtin() -> None:
 
 
 def _numpy_factory(rng_mode: str):
-    def factory(cfg, chunk, **opts):
+    def factory(spec, chunk, **opts):
         from repro.core import numpy_backend
 
-        return numpy_backend.open_chunk_runner(cfg, chunk, rng_mode=rng_mode,
+        return numpy_backend.open_chunk_runner(spec, chunk, rng_mode=rng_mode,
                                                **opts)
     return factory
 
 
 def _jax_factory(mode: str):
-    def factory(cfg, chunk, **opts):
+    def factory(spec, chunk, **opts):
         from repro.core import jax_backend
 
-        return jax_backend.open_chunk_runner(cfg, chunk, mode=mode, **opts)
+        return jax_backend.open_chunk_runner(spec, chunk, mode=mode, **opts)
     return factory
 
 
@@ -238,19 +264,8 @@ def _unknown_backend_error(name: str) -> KeyError:
     return KeyError(f"unknown backend {name!r}; have {sorted(_FACTORIES)}")
 
 
-def _semantic_key(cfg: MarketConfig) -> Tuple[Any, ...]:
-    """Executable cache key: every config field except ``num_steps``.
-
-    ``num_steps`` never enters the per-step semantics — chunk runners are
-    parametrized by their static chunk length instead — so configs differing
-    only in total step count share one compiled executable.
-    """
-    return tuple(getattr(cfg, f.name) for f in dataclasses.fields(cfg)
-                 if f.name != "num_steps")
-
-
-def run_runner_to_result(runner: ChunkRunner, cfg: MarketConfig) -> SimResult:
-    """One-session run over ``cfg.num_steps`` on a bare runner — the shared
+def run_runner_to_result(runner: ChunkRunner, spec) -> SimResult:
+    """One-session run over ``spec.num_steps`` on a bare runner — the shared
     body of every backend's ``simulate()`` compatibility wrapper."""
     if runner.stats_only:
         # A SimResult has nowhere to carry the accumulators — returning
@@ -258,19 +273,22 @@ def run_runner_to_result(runner: ChunkRunner, cfg: MarketConfig) -> SimResult:
         raise ValueError(
             "stats_only is a Session-API mode: open a session and read "
             "Session.stats instead of using the one-shot simulate() wrappers")
-    state = runner.init_state(cfg)
-    aux = runner.init_aux(cfg)
-    stats = runner.init_stats(cfg)
+    spec = EnsembleSpec.coerce(spec)
+    state = runner.init_state(spec)
+    params = runner.params_to_device(spec.params)
+    aux = runner.init_aux(spec)
+    stats = runner.init_stats(spec)
     batches, t = [], 0
-    while t < cfg.num_steps:
-        n = min(runner.chunk, cfg.num_steps - t)
-        state, aux, batch, stats = runner.run(state, aux, t, n, None, stats)
+    while t < spec.num_steps:
+        n = min(runner.chunk, spec.num_steps - t)
+        state, aux, batch, stats = runner.run(state, params, aux, t, n, None,
+                                              stats)
         batches.append(batch)
         t += n
     if batches:
         batch = StepBatch.concatenate(batches, xp=runner.xp)
     else:
-        empty = runner.xp.zeros((cfg.num_markets, 0), runner.xp.float32)
+        empty = runner.xp.zeros((spec.num_markets, 0), runner.xp.float32)
         batch = StepBatch(empty, empty, empty)
     return SimResult(bid=state.bid, ask=state.ask,
                      last_price=state.last_price, prev_mid=state.prev_mid,
@@ -285,11 +303,14 @@ class Engine:
     knobs ``devices=``/``mesh=`` market-axis sharding, ``stats_only=``
     in-kernel statistics, ``autotune=``/``agent_chunk=`` tile selection —
     see ``repro.kernels.ops``) folded into every runner this engine
-    builds. Executables are cached per (config-semantics, chunk-length) and
-    shared across sessions: re-opening the same shape never recompiles.
-    ``cfg.num_steps`` itself is not part of the key, but it does cap the
+    builds. Executables are cached per (static-shape, chunk-length) —
+    :meth:`EnsembleSpec.static_key` + chunk — and shared across sessions:
+    re-opening the same shape never recompiles, *whatever* the scenario
+    parameter values, because every value-like field rides in the
+    :class:`MarketParams` operands rather than the trace.
+    ``num_steps`` itself is not part of the key, but it does cap the
     *default* chunk length at ``min(DEFAULT_CHUNK, num_steps)`` — pass an
-    explicit ``chunk_size`` to share one executable across configs whose
+    explicit ``chunk_size`` to share one executable across specs whose
     ``num_steps`` differ below ``DEFAULT_CHUNK``.
     """
 
@@ -309,23 +330,30 @@ class Engine:
         return sum(r.trace_count for r in self._runners.values())
 
     def clear_cache(self) -> None:
-        """Drop all cached executables (long-lived config-sweep processes)."""
+        """Drop all cached executables (long-lived shape-sweep processes)."""
         self._runners.clear()
 
-    def _runner(self, cfg: MarketConfig, chunk: int) -> ChunkRunner:
-        key = _semantic_key(cfg) + (chunk,)
+    def _runner(self, spec, chunk: int) -> ChunkRunner:
+        spec = EnsembleSpec.coerce(spec)
+        key = spec.static_key() + (chunk,)
         runner = self._runners.get(key)
         if runner is None:
-            runner = _FACTORIES[self.backend](cfg, chunk, **self.backend_opts)
+            runner = _FACTORIES[self.backend](spec, chunk, **self.backend_opts)
             self._runners[key] = runner
         return runner
 
-    def open(self, cfg: MarketConfig, *,
+    def open(self, spec: Union[EnsembleSpec, MarketConfig], *,
              chunk_size: Optional[int] = None) -> "Session":
-        """Open a live session holding a device-resident :class:`MarketState`."""
+        """Open a live session holding a device-resident :class:`MarketState`.
+
+        ``spec`` is an :class:`EnsembleSpec` or a :class:`MarketConfig`
+        (coerced through ``EnsembleSpec.homogeneous`` — bitwise-identical
+        to the historical scalar-config path).
+        """
+        spec = EnsembleSpec.coerce(spec)
         chunk = chunk_size or self.chunk_size \
-            or min(DEFAULT_CHUNK, cfg.num_steps)
-        return Session(self, cfg, self._runner(cfg, max(1, chunk)))
+            or min(DEFAULT_CHUNK, spec.num_steps)
+        return Session(self, spec, self._runner(spec, max(1, chunk)))
 
 
 class Session:
@@ -337,16 +365,23 @@ class Session:
     results — any chunking of S steps equals one ``run(S)`` call.
     """
 
-    def __init__(self, engine: Engine, cfg: MarketConfig, runner: ChunkRunner):
+    def __init__(self, engine: Engine, spec: EnsembleSpec,
+                 runner: ChunkRunner):
         self._engine = engine
-        self.cfg = cfg
+        self.spec = spec
         self._runner = runner
         self._step_runner: Optional[ChunkRunner] = None
-        self._state = runner.init_state(cfg)
-        self._aux = runner.init_aux(cfg)
-        self._stats = runner.init_stats(cfg)
+        self._state = runner.init_state(spec)
+        self._params = runner.params_to_device(spec.params)
+        self._aux = runner.init_aux(spec)
+        self._stats = runner.init_stats(spec)
         self._t = 0
         self._closed = False
+
+    @property
+    def cfg(self) -> EnsembleSpec:
+        """The session's ensemble spec (kept under the historical name)."""
+        return self.spec
 
     # ---- lifecycle ----
     def __enter__(self) -> "Session":
@@ -358,6 +393,7 @@ class Session:
     def close(self) -> None:
         """Release the device-resident state (the executables stay cached)."""
         self._state = None
+        self._params = None
         self._aux = None
         self._stats = None
         self._closed = True
@@ -375,9 +411,21 @@ class Session:
         return self._state
 
     @property
+    def params(self) -> MarketParams:
+        """Device-resident per-market scenario operands (never donated)."""
+        self._check_open()
+        return self._params
+
+    @property
     def step_count(self) -> int:
         """Absolute number of steps advanced since open/restore."""
         return self._t
+
+    @property
+    def horizon(self) -> int:
+        """The configured horizon ``spec.num_steps`` — the default run
+        length, and the bound every scenario event is validated against."""
+        return self.spec.num_steps
 
     @property
     def stats(self) -> Optional[MarketStats]:
@@ -393,27 +441,64 @@ class Session:
         return self._stats.to_numpy()
 
     # ---- advancement ----
+    def _resolve_steps(self, n_steps: Optional[int]) -> int:
+        """Horizon semantics for the default-length form (see module doc).
+
+        ``n_steps=None`` means "run the configured horizon" — which is only
+        meaningful while the cursor is still inside it. Advancing a session
+        that already reached ``num_steps`` would re-run a horizon's worth of
+        steps in which no configured scenario event (every ``shock_step`` is
+        validated ``< num_steps``) can ever fire — historically a silent
+        no-shock run. Pass an explicit ``n_steps`` to stream past the
+        horizon deliberately.
+        """
+        if n_steps is not None:
+            n = int(n_steps)
+            if n < 0:
+                raise ValueError(f"n_steps must be >= 0, got {n}")
+            return n
+        if self._t >= self.spec.num_steps:
+            raise ValueError(
+                f"session cursor is at step {self._t}, already past the "
+                f"configured horizon num_steps={self.spec.num_steps}: "
+                "run()/stream() with no argument means 'run the configured "
+                "horizon', and every scenario event lies inside it — pass "
+                "an explicit n_steps to advance past the horizon")
+        return self.spec.num_steps - self._t
+
     def stream(self, n_steps: Optional[int] = None) -> Iterator[StepBatch]:
-        """Advance ``n_steps`` (default ``cfg.num_steps``), yielding one
-        :class:`StepBatch` per compiled chunk as it completes."""
+        """Advance ``n_steps`` steps, yielding one :class:`StepBatch` per
+        compiled chunk as it completes.
+
+        ``n_steps=None`` runs to the configured horizon (``spec.num_steps``)
+        from the current cursor, and raises a clear error if the cursor is
+        already past it; an explicit ``n_steps`` may advance arbitrarily far
+        beyond the horizon (absolute-step RNG keeps post-horizon steps well
+        defined — scenario events simply lie behind the cursor). The step
+        count (and any horizon error) resolves at the *call*, not lazily at
+        first iteration, so the iterator's length is fixed when created.
+        """
         self._check_open()
-        remaining = self.cfg.num_steps if n_steps is None else int(n_steps)
+        return self._stream(self._resolve_steps(n_steps))
+
+    def _stream(self, remaining: int) -> Iterator[StepBatch]:
         while remaining > 0:
             n = min(self._runner.chunk, remaining)
             self._state, self._aux, batch, self._stats = self._runner.run(
-                self._state, self._aux, self._t, n, None, self._stats)
+                self._state, self._params, self._aux, self._t, n, None,
+                self._stats)
             self._t += n
             remaining -= n
             yield batch
 
     def run(self, n_steps: Optional[int] = None) -> StepBatch:
-        """Advance ``n_steps`` (default ``cfg.num_steps``) and return the
-        concatenated :class:`StepBatch` for exactly those steps."""
+        """Advance ``n_steps`` and return the concatenated
+        :class:`StepBatch` for exactly those steps. ``n_steps=None`` runs to
+        the configured horizon (see :meth:`stream` for the semantics)."""
         self._check_open()
-        n = self.cfg.num_steps if n_steps is None else int(n_steps)
-        batches = list(self.stream(n))
+        batches = list(self._stream(self._resolve_steps(n_steps)))
         if not batches:
-            M = self.cfg.num_markets
+            M = self.spec.num_markets
             empty = self._runner.xp.zeros((M, 0), self._runner.xp.float32)
             return StepBatch(empty, empty, empty)
         return StepBatch.concatenate(batches, xp=self._runner.xp)
@@ -431,10 +516,11 @@ class Session:
         """
         self._check_open()
         if self._step_runner is None:
-            self._step_runner = self._engine._runner(self.cfg, 1)
+            self._step_runner = self._engine._runner(self.spec, 1)
         ext = self._build_ext(actions)
         self._state, self._aux, batch, self._stats = self._step_runner.run(
-            self._state, self._aux, self._t, 1, ext, self._stats)
+            self._state, self._params, self._aux, self._t, 1, ext,
+            self._stats)
         self._t += 1
         return batch
 
@@ -445,7 +531,7 @@ class Session:
             actions = ExternalOrders(actions["side_buy"], actions["price"],
                                      actions["qty"])
         side_buy, price, qty = actions
-        M, L = self.cfg.num_markets, self.cfg.num_levels
+        M, L = self.spec.num_markets, self.spec.num_levels
         side = np.broadcast_to(np.asarray(side_buy, dtype=bool).reshape(-1),
                                (M,))
         tick = np.clip(
@@ -481,7 +567,9 @@ class Session:
 
     # ---- snapshot / restore ----
     def snapshot(self) -> Dict[str, Any]:
-        """Exact host-side capture: books, step cursor, stateful RNG."""
+        """Exact host-side capture: books, step cursor, stateful RNG, and
+        the per-market parameter operands (a snapshot is self-contained —
+        it restores the scenario mixture it was taken under)."""
         self._check_open()
         snap: Dict[str, Any] = {
             field: np.asarray(value)
@@ -489,6 +577,20 @@ class Session:
         }
         snap["t"] = self._t
         snap["rng"] = self._runner.aux_state(self._aux)
+        snap["seed"] = self.spec.seed
+        snap["num_agents"] = self.spec.num_agents
+        snap["num_steps"] = self.spec.num_steps
+        # Run-length encoded labels: O(blocks), not O(M), in the JSON meta.
+        snap["scenarios"] = [[name, len(list(group))] for name, group
+                             in itertools.groupby(self.spec.scenarios)]
+        snap["params"] = {
+            field: np.asarray(value)
+            for field, value in zip(MarketParams._fields, self._params)
+        }
+        snap["init"] = {
+            "quote_qty": np.asarray(self.spec.initial_quote_qty),
+            "spread": np.asarray(self.spec.initial_spread),
+        }
         if self._stats is not None:
             snap["stats"] = {
                 field: np.asarray(value)
@@ -497,25 +599,68 @@ class Session:
         return snap
 
     def restore(self, snap: Dict[str, Any]) -> None:
-        """Restore from :meth:`snapshot` — resumes the exact stream.
+        """Restore from :meth:`snapshot` — resumes the exact stream,
+        including the snapshot's per-market parameters and horizon, so
+        ``self.spec`` keeps describing the *live* mixture after a
+        cross-spec restore (pre-params snapshots keep the session's
+        current operands). Everything that can fail — placement, spec
+        validation — happens before any session field is touched, so a
+        failed restore leaves the session exactly as it was.
 
         Snapshots are device-layout agnostic: a snapshot taken on a
         single-device session restores into a sharded one (and vice versa)
-        bitwise, because the runner re-places state/stats on restore.
+        bitwise, because the runner re-places state/params/stats on restore.
         """
         self._check_open()
-        self._state = self._runner.to_device(
+        # seed and num_agents are baked into the compiled trace (they are
+        # in the static cache key) yet appear in no restored array's shape
+        # (params are [M, 1]; books are [M, L]), so a mismatch would
+        # silently resume on a different random stream — reject loudly.
+        for field, have in (("seed", self.spec.seed),
+                            ("num_agents", self.spec.num_agents)):
+            got = snap.get(field)
+            if got is not None and int(got) != have:
+                raise ValueError(
+                    f"snapshot was taken under {field}={int(got)} but this "
+                    f"session's executable is compiled for {field}={have}; "
+                    f"open the session on a spec with the snapshot's "
+                    f"{field} to resume its stream")
+        new_state = self._runner.to_device(
             MarketState(*(snap[f] for f in MarketState._fields)))
-        self._t = int(snap["t"])
+        new_t = int(snap["t"])
+        new_spec, new_params = self.spec, self._params
+        params = snap.get("params")
+        if params is not None:
+            host = MarketParams(*(np.asarray(params[f])
+                                  for f in MarketParams._fields))
+            labels = snap.get("scenarios")
+            if labels is not None:  # run-length encoded [name, count] pairs
+                labels = tuple(itertools.chain.from_iterable(
+                    (name,) * int(count) for name, count in labels))
+            init = snap.get("init")
+            new_spec = dataclasses.replace(
+                self.spec, params=host,
+                num_steps=int(snap.get("num_steps", self.spec.num_steps)),
+                scenarios=labels if labels is not None
+                else ("<restored>",) * self.spec.num_markets,
+                **({"initial_quote_qty":
+                        np.asarray(init["quote_qty"], np.float32),
+                    "initial_spread": np.asarray(init["spread"], np.int32)}
+                   if init is not None else {}))
+            new_params = self._runner.params_to_device(host)
         rng = snap.get("rng")
-        self._aux = (self._runner.restore_aux(rng) if rng is not None
-                     else self._runner.init_aux(self.cfg)
-                     if self._aux is not None else None)
+        new_aux = (self._runner.restore_aux(rng) if rng is not None
+                   else self._runner.init_aux(new_spec)
+                   if self._aux is not None else None)
+        new_stats = self._stats
         if self._runner.stats_only:
             stats = snap.get("stats")
-            self._stats = (self._runner.stats_to_device(
+            new_stats = (self._runner.stats_to_device(
                 MarketStats(*(stats[f] for f in MarketStats._fields)))
-                if stats is not None else self._runner.init_stats(self.cfg))
+                if stats is not None else self._runner.init_stats(new_spec))
+        self._state, self._t = new_state, new_t
+        self.spec, self._params = new_spec, new_params
+        self._aux, self._stats = new_aux, new_stats
 
     def save_checkpoint(self, manager, step: Optional[int] = None) -> int:
         """Persist the session through a ``CheckpointManager``; returns the

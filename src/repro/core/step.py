@@ -6,17 +6,27 @@ cooperative clearing -> residual book update. Backends differ only in *how*
 they bin orders (scatter vs one-hot matmul) and how they drive the S-step
 loop (host loop, lax.scan, or a persistent Pallas grid) — never in semantics.
 
-Scenario effects are selected by static config fields and applied with
-branch-free ``where`` masks on the traced step index, so a scenario config
-compiles to the same fused kernel as the baseline — no data-dependent
-control flow ever reaches the Pallas grid.
+Scenario effects are selected by per-market :class:`repro.core.params
+.MarketParams` operands and applied with branch-free ``where`` masks on the
+traced step index, so *every* scenario — and every per-market mixture of
+scenarios — compiles to the same fused kernel as the baseline: no
+data-dependent control flow ever reaches the Pallas grid, and no scenario
+value is baked into a trace. Legacy scalar-config callers (the one-shot
+kernels, the jitted oracle) omit ``params``; the constants are then derived
+from ``cfg`` inside the trace, bitwise-identical to the pre-ensemble code
+on every counter-RNG backend (the stateful ``numpy-pcg64`` reference —
+statistical-equivalence only — shifted by the fixed five-channel draw
+schedule; see :mod:`repro.core.agents`).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
 
 from repro.core import agents, auction
-from repro.core.config import MarketConfig
+from repro.core import params as params_mod
+from repro.core.params import MarketParams
 
 
 class MarketState(NamedTuple):
@@ -32,7 +42,9 @@ class StepOutput(NamedTuple):
     mid: "array"     # float32[M, 1] mid price used for decisions
 
 
-def initial_state(cfg: MarketConfig, xp, market_offset: int = 0) -> MarketState:
+def initial_state(cfg, xp) -> MarketState:
+    """Opening state for a ``MarketConfig`` or ``EnsembleSpec`` (both expose
+    per-market ``initial_books`` plus the static shape fields)."""
     bid, ask = cfg.initial_books(xp)
     m0 = xp.float32(cfg.mid0)
     ones = xp.ones((cfg.num_markets, 1), dtype=xp.float32)
@@ -72,26 +84,35 @@ def bin_orders_onehot(side_buy, price, qty, L, xp, agent_chunk=None):
     return buy, sell
 
 
-def apply_scenario_shock(cfg: MarketConfig, bid, step_idx, xp):
+def apply_scenario_shock(params: MarketParams, bid, step_idx, xp):
     """Flash-crash liquidity withdrawal (scenario overlay, branch-free).
 
-    At the shock step a static fraction ``shock_cancel`` of every resting bid
-    level is cancelled — buy-side support vanishes just as panicking agents
-    market-sell (see :func:`repro.core.agents.decide`). ``floor`` keeps the
-    book integer-valued in f32, preserving the exact-add bitwise-identity
-    argument (paper §IV-B). The static python guard means baseline configs
-    trace the identical graph as before.
+    At each market's shock step a per-market fraction ``shock_cancel`` of
+    every resting bid level is cancelled — buy-side support vanishes just as
+    panicking agents market-sell (see :func:`repro.core.agents.decide`).
+    ``floor`` keeps the book integer-valued in f32, preserving the
+    exact-add bitwise-identity argument (paper §IV-B). Markets with the
+    shock disabled (``shock_step < 0``) or scheduled elsewhere see an
+    all-False mask — and ``floor(bid * 0) == 0`` — so the overlay is a
+    bitwise no-op for them; the same trace serves every schedule. When the
+    cancel column is a *concrete* host array of zeros (the NumPy reference
+    on no-shock ensembles) the whole overlay is elided outright —
+    bitwise-identical, mirroring the ``skip_shock`` elision in
+    :func:`repro.core.agents.decide`.
     """
-    if cfg.shock_cancel <= 0.0 or cfg.shock_step < 0:
+    if (isinstance(params.shock_cancel, np.ndarray)
+            and not params.shock_cancel.any()):
         return bid
     f32 = xp.float32
-    at_shock = xp.asarray(step_idx).astype(xp.int32) == xp.int32(cfg.shock_step)
-    cancelled = xp.floor(bid * f32(cfg.shock_cancel))
+    shock_step = xp.asarray(params.shock_step, dtype=xp.int32)   # [M, 1]
+    shock_cancel = xp.asarray(params.shock_cancel, dtype=f32)    # [M, 1]
+    at_shock = xp.asarray(step_idx).astype(xp.int32) == shock_step
+    cancelled = xp.floor(bid * shock_cancel)
     return xp.where(at_shock, bid - cancelled, bid)
 
 
 def simulate_step(
-    cfg: MarketConfig,
+    cfg,
     state: MarketState,
     step_idx,
     market_ids,
@@ -102,8 +123,17 @@ def simulate_step(
     ext_buy=None,
     ext_ask=None,
     agent_chunk=None,
+    params: Optional[MarketParams] = None,
+    atype=None,
 ):
     """Advance all markets one step. Returns (MarketState, StepOutput).
+
+    ``cfg`` supplies only the static trace parameters (``num_agents``,
+    ``num_levels``, ``seed``) — a ``MarketConfig`` or an ``EnsembleSpec``.
+    ``params`` carries every scenario-varying value as per-market ``[M, 1]``
+    runtime operands; when omitted (legacy scalar-config callers) it is
+    derived from ``cfg`` as broadcastable ``[1, 1]`` constants inside the
+    trace, which folds to exactly the pre-ensemble computation.
 
     ``ext_buy``/``ext_ask`` (optional float32[M, L]) are externally injected
     order quantities — the session layer's reserved agent slot for RL-style
@@ -114,14 +144,23 @@ def simulate_step(
 
     ``agent_chunk`` is forwarded to the default one-hot binning (a pure
     VMEM-footprint knob — bitwise-invisible; see :func:`bin_orders_onehot`).
+    ``atype`` optionally carries the precomputed (step-invariant) per-market
+    agent-type lattice so loop drivers hoist it out of the step loop.
     """
+    if params is None:
+        # Built with xp, not host numpy: Pallas kernel bodies reject
+        # captured host-array constants, so the legacy traced entries embed
+        # xp constants (and keep the dead shock selects for XLA to chew
+        # on). The concrete-zero elisions fire where they pay — the NumPy
+        # host-loop backends, whose session params are host arrays.
+        params = params_mod.scalar_params(cfg, xp)
     if bin_orders is None:
         bin_orders = lambda s, p, q: bin_orders_onehot(
             s, p, q, cfg.num_levels, xp, agent_chunk=agent_chunk)
     f32 = xp.float32
 
     # Scenario overlay (before quoting: the withdrawal moves the mid too).
-    resting_bid = apply_scenario_shock(cfg, state.bid, step_idx, xp)
+    resting_bid = apply_scenario_shock(params, state.bid, step_idx, xp)
 
     # Phase 2: microstructure state estimation (paper Alg.1 lines 5-7)
     _, _, mid = auction.best_quotes(resting_bid, state.ask, state.last_price, xp)
@@ -129,8 +168,8 @@ def simulate_step(
     # Phase 3: agent decisions + order aggregation (lines 8-13)
     agent_ids = xp.arange(cfg.num_agents, dtype=xp.int32)
     side_buy, price, qty = agents.decide(
-        cfg, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp,
-        uniform_fn=uniform_fn,
+        cfg, params, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp,
+        uniform_fn=uniform_fn, atype=atype,
     )
     buy, sell = bin_orders(side_buy, price, qty)
 

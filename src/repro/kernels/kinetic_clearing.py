@@ -19,12 +19,15 @@ prime/odd M keeps full sublane tiles; see :mod:`repro.kernels.autotune`),
 price ticks on lanes (L multiple of 128 native; smaller L still correct,
 just padded by the compiler). VMEM working set per grid cell ≈
 ``7·MB·L + MB·Ac·L (one-hot binning, Ac = agent_chunk ≤ A) + 2·MB·S`` f32
-for path outputs — padding adds only whole-tile rows, so the padded-tile
-term is the same ``MB·(...)`` budget with ``grid = ceil(M/MB)`` cells. In
-``stats_only`` mode the ``2·MB·S`` path term is replaced by a constant
-``6·MB`` statistics-accumulator term (count/Σmid/Σmid²/min/max/Σvolume),
-making both the VMEM footprint and the HBM output traffic independent of
-the chunk length — see EXPERIMENTS.md §Perf for the measured budget.
+for path outputs, plus a negligible ``12·MB`` term for the per-market
+parameter columns (the :class:`repro.core.params.MarketParams` operands,
+one ``(MB, 1)`` block each) — padding adds only whole-tile rows, so the
+padded-tile term is the same ``MB·(...)`` budget with ``grid =
+ceil(M/MB)`` cells. In ``stats_only`` mode the ``2·MB·S`` path term is
+replaced by a constant ``6·MB`` statistics-accumulator term
+(count/Σmid/Σmid²/min/max/Σvolume), making both the VMEM footprint and the
+HBM output traffic independent of the chunk length — see EXPERIMENTS.md
+§Perf for the measured budget.
 
 Scenario engine: archetype mixtures and scenario overlays (flash-crash
 shock, volatility regimes, book seeding) are static ``cfg`` fields dispatched
@@ -37,6 +40,18 @@ Sharding: the chunk entry takes an explicit per-row ``market_ids`` operand
 hand each device its true *global* market coordinates — the RNG stream is a
 pure function of (seed, market id, step), which is what makes a sharded run
 bitwise-identical to the single-device run. See ``repro.kernels.ops``.
+
+Heterogeneous ensembles: every scenario-varying parameter — shock schedule
+and intensities, marketable-flow probability, quantity cap, archetype
+knobs, per-market population counts — enters the chunk entry as a
+:class:`repro.core.params.MarketParams` operand of ``[M, 1]`` columns.
+Each grid cell fetches its tile's rows (``(mb, 1)`` blocks on the sublane
+axis, exactly like the ``market_ids``/``last_price`` scalars), so a single
+compiled kernel serves any scenario mixture and any parameter values: only
+the static shape ``(M, A, L, chunk)`` and the RNG seed are baked into the
+trace. Scenario dispatch stays branch-free ``where`` selects inside
+``simulate_step`` — per-market heterogeneity costs no divergence, because
+there is none to diverge: the masks are just data.
 """
 from __future__ import annotations
 
@@ -52,10 +67,36 @@ try:  # TPU compiler params are optional on CPU/interpret
 except ImportError:  # pragma: no cover
     pltpu = None
 
+from repro.core import params as params_mod
 from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.step import MarketState, simulate_step
 from repro.kernels.autotune import pad_to_multiple
+
+#: Number of per-market parameter operands threaded into the chunk kernels.
+NUM_PARAM_OPERANDS = len(MarketParams._fields)
+
+
+def resolve_params(cfg, M: int, params: Optional[MarketParams],
+                   xp) -> MarketParams:
+    """The chunk entries' params operand: explicit > spec-owned > scalar
+    broadcast of a legacy ``MarketConfig`` (value-identical constants)."""
+    if params is not None:
+        return params
+    if isinstance(cfg, EnsembleSpec):
+        return cfg.params.asarray(xp)
+    return params_mod.params_from_config(cfg, M, xp)
+
+
+def pad_params(params: MarketParams, m_padded: int) -> MarketParams:
+    """Dtype-preserving zero-row padding of every parameter column (a pad
+    row is a zero-count, zero-intensity market whose outputs are sliced
+    off — see :func:`_pad_rows`)."""
+    return MarketParams(*(
+        _pad_rows(jnp.asarray(leaf, dtype=MarketParams.field_dtype(f)),
+                  m_padded)
+        for f, leaf in zip(MarketParams._fields, params)))
 
 
 def _kernel_body(
@@ -132,11 +173,11 @@ def _chunk_kernel_body(
     step0_ref, nvalid_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
     *refs,
-    cfg: MarketConfig, mb: int, chunk: int, scan: str,
+    cfg, mb: int, chunk: int, scan: str,
     agent_chunk: Optional[int], stats_only: bool,
 ):
     """Session variant of the persistent scheduler: a fixed ``chunk``-length
-    trace that serves *any* requested step count.
+    trace that serves *any* requested step count and *any* scenario mixture.
 
     ``step0`` (runtime scalar) offsets the RNG / scenario step coordinate so
     a warm session resumes mid-stream; ``n_valid`` (runtime scalar) gates the
@@ -146,13 +187,20 @@ def _chunk_kernel_body(
     injected at the first local step only; zero arrays are bitwise no-ops.
 
     ``mids_ref`` carries the per-row *global* market ids (sharded callers
-    pass each device's true coordinates). In ``stats_only`` mode the per-step
-    path outputs are replaced by six [mb, 1] running accumulators carried
-    through the ``fori_loop`` — the kernel's HBM writes become Θ(MB·L) books
-    plus Θ(MB) statistics, independent of ``chunk``.
+    pass each device's true coordinates). The first ``NUM_PARAM_OPERANDS``
+    of ``refs`` are the per-market :class:`MarketParams` columns — this
+    tile's ``(mb, 1)`` rows of every scenario-varying knob, loaded into
+    VMEM once and broadcast over the agent/level axes inside
+    ``simulate_step``. In ``stats_only`` mode the per-step path outputs are
+    replaced by six [mb, 1] running accumulators carried through the
+    ``fori_loop`` — the kernel's HBM writes become Θ(MB·L) books plus
+    Θ(MB) statistics, independent of ``chunk``.
     """
     step0 = step0_ref[0, 0]
     n_valid = nvalid_ref[0, 0]
+
+    params = MarketParams(*(r[...] for r in refs[:NUM_PARAM_OPERANDS]))
+    refs = refs[NUM_PARAM_OPERANDS:]
 
     if stats_only:
         (cnt_ref, smid_ref, ssq_ref, mn_ref, mx_ref, svol_ref,
@@ -172,6 +220,8 @@ def _chunk_kernel_body(
     zeros_ext = jnp.zeros_like(ext_b)
 
     market_ids = mids_ref[...]
+    # Step-invariant type lattice, hoisted out of the fori_loop.
+    atype = params_mod.agent_types(params, cfg.num_agents, jnp)
 
     def advance(s, bid, ask, last, pmid):
         state = MarketState(bid=bid, ask=ask, last_price=last, prev_mid=pmid)
@@ -180,6 +230,7 @@ def _chunk_kernel_body(
         new_state, out = simulate_step(
             cfg, state, step0 + s, market_ids, jnp, bin_orders=None,
             scan=scan, ext_buy=eb, ext_ask=ea, agent_chunk=agent_chunk,
+            params=params, atype=atype,
         )
         # Steps past n_valid are computed but discarded — the carried state
         # only advances while active.
@@ -239,22 +290,29 @@ def kinetic_clearing_chunk(
     bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
     step0: jax.Array, n_valid: jax.Array,
     ext_buy: jax.Array, ext_ask: jax.Array,
-    *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
+    *, cfg, chunk: int, mb: int = 8, scan: str = "cumsum",
     interpret: bool = False, market_ids: Optional[jax.Array] = None,
     agent_chunk: Optional[int] = None,
+    params: Optional[MarketParams] = None,
     stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """``num_steps``-parametrized persistent entry for the Session API.
 
     One trace (per static ``chunk`` length) serves every chunk of up to
-    ``chunk`` steps: ``step0``/``n_valid`` are int32[1, 1] runtime scalars.
+    ``chunk`` steps: ``step0``/``n_valid`` are int32[1, 1] runtime scalars,
+    and every scenario-varying parameter is a per-market ``[M, 1]`` operand
+    (``params``, a :class:`repro.core.params.MarketParams`; defaults to the
+    spec's own params, or to a broadcast of a legacy scalar config — the
+    scalar default is value-identical to the pre-ensemble constants).
     Deliberately *not* jitted here — the session runner owns the ``jax.jit``
     wrapper so it can donate the state buffers and count traces.
 
     The market axis is padded to a multiple of ``mb`` with benign zero rows
     (and sliced back), so any M — prime, odd, tiny — runs full sublane-
-    aligned tiles. ``market_ids`` (optional int32[M] / [M, 1]) carries each
-    row's global coordinate for sharded callers; it defaults to ``arange(M)``.
+    aligned tiles; parameter columns pad with zero rows too (a zero-count,
+    shock-at-0-with-zero-intensity market whose outputs are discarded).
+    ``market_ids`` (optional int32[M] / [M, 1]) carries each row's global
+    coordinate for sharded callers; it defaults to ``arange(M)``.
 
     Returns ``(bid, ask, last, pmid, price_path[M, chunk],
     volume_path[M, chunk], mid_path[M, chunk])``, or with
@@ -276,6 +334,7 @@ def kinetic_clearing_chunk(
     bid, ask, last, pmid, ext_buy, ext_ask = (
         _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
                                          ext_ask))
+    params = pad_params(resolve_params(cfg, M, params, jnp), m_padded)
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
@@ -295,8 +354,10 @@ def kinetic_clearing_chunk(
         jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
     )
     in_specs = [step_spec, step_spec, scalar_spec, book_spec, book_spec,
-                scalar_spec, scalar_spec, book_spec, book_spec]
-    operands = [step0, n_valid, mids, bid, ask, last, pmid, ext_buy, ext_ask]
+                scalar_spec, scalar_spec, book_spec, book_spec] \
+        + [scalar_spec] * NUM_PARAM_OPERANDS
+    operands = [step0, n_valid, mids, bid, ask, last, pmid, ext_buy,
+                ext_ask] + list(params)
 
     if stats_only:
         if stats is None:

@@ -21,9 +21,11 @@ the parity matrix in tests/test_parity_matrix.py.
 
 The chunk entry mirrors :func:`kinetic_clearing_chunk`'s full contract —
 padded sublane tiles, explicit global ``market_ids`` for sharded callers,
-and a ``stats_only`` mode (accumulated in the host scan carry here, since
-per-step launches are this ablation's point) — so the Session/shard layers
-treat both engines uniformly.
+per-market :class:`repro.core.params.MarketParams` operands (``(mb, 1)``
+columns fetched into each tile, so one compiled step kernel serves any
+scenario mixture), and a ``stats_only`` mode (accumulated in the host scan
+carry here, since per-step launches are this ablation's point) — so the
+Session/shard layers treat both engines uniformly.
 """
 from __future__ import annotations
 
@@ -36,9 +38,12 @@ from jax.experimental import pallas as pl
 
 from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
+from repro.core.params import MarketParams
 from repro.core.step import MarketState, simulate_step
 from repro.kernels.autotune import pad_to_multiple
-from repro.kernels.kinetic_clearing import _pad_rows, pick_tile
+from repro.kernels.kinetic_clearing import (NUM_PARAM_OPERANDS, _pad_rows,
+                                            pad_params, pick_tile,
+                                            resolve_params)
 
 
 def _step_kernel_body(
@@ -117,17 +122,21 @@ def naive_clearing(
 def _chunk_step_kernel_body(
     step_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
-    out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
-    price_ref, volume_ref, mid_ref,
-    *, cfg: MarketConfig, mb: int, scan: str, agent_chunk: Optional[int],
+    *refs,
+    cfg, mb: int, scan: str, agent_chunk: Optional[int],
 ):
     """Per-step kernel with external-order inputs (Session API variant).
 
     ``mids_ref`` carries the per-row global market ids (see the kinetic
-    chunk kernel) so padded/sharded callers keep exact RNG coordinates.
+    chunk kernel) so padded/sharded callers keep exact RNG coordinates; the
+    next ``NUM_PARAM_OPERANDS`` refs are this tile's per-market
+    :class:`MarketParams` columns.
     """
     s = step_ref[0, 0]
     market_ids = mids_ref[...]
+    params = MarketParams(*(r[...] for r in refs[:NUM_PARAM_OPERANDS]))
+    (out_bid_ref, out_ask_ref, out_last_ref, out_pmid_ref,
+     price_ref, volume_ref, mid_ref) = refs[NUM_PARAM_OPERANDS:]
     state = MarketState(
         bid=bid_ref[...], ask=ask_ref[...],
         last_price=last_ref[...], prev_mid=pmid_ref[...],
@@ -135,7 +144,7 @@ def _chunk_step_kernel_body(
     new_state, out = simulate_step(
         cfg, state, s, market_ids, jnp, scan=scan,
         ext_buy=ext_buy_ref[...], ext_ask=ext_ask_ref[...],
-        agent_chunk=agent_chunk,
+        agent_chunk=agent_chunk, params=params,
     )
     out_bid_ref[...] = new_state.bid
     out_ask_ref[...] = new_state.ask
@@ -150,18 +159,20 @@ def naive_clearing_chunk(
     bid: jax.Array, ask: jax.Array, last: jax.Array, pmid: jax.Array,
     step0: jax.Array, n_valid: jax.Array,
     ext_buy: jax.Array, ext_ask: jax.Array,
-    *, cfg: MarketConfig, chunk: int, mb: int = 8, scan: str = "cumsum",
+    *, cfg, chunk: int, mb: int = 8, scan: str = "cumsum",
     interpret: bool = False, market_ids: Optional[jax.Array] = None,
     agent_chunk: Optional[int] = None,
+    params: Optional[MarketParams] = None,
     stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """Session entry for the launch-per-step regime: ``chunk`` kernel
     launches per call, state round-tripping HBM between launches.
 
     Mirrors :func:`kinetic_clearing_chunk`'s contract — ``step0``/``n_valid``
-    int32[1, 1] runtime scalars, external orders injected at the first local
-    step, gated state so a partial tail advances exactly ``n_valid`` steps,
-    padded sublane tiles with explicit global ``market_ids``, and a
+    int32[1, 1] runtime scalars, per-market ``params`` operands (one trace
+    serves any scenario mixture), external orders injected at the first
+    local step, gated state so a partial tail advances exactly ``n_valid``
+    steps, padded sublane tiles with explicit global ``market_ids``, and a
     ``stats_only`` mode (accumulated in the scan carry between launches) —
     but keeps the Θ(chunk) dispatches and Θ(chunk·M·L) HBM traffic that this
     ablation exists to exhibit. Not jitted here; the session runner owns jit.
@@ -179,6 +190,7 @@ def naive_clearing_chunk(
     bid, ask, last, pmid, ext_buy, ext_ask = (
         _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
                                          ext_ask))
+    params = pad_params(resolve_params(cfg, M, params, jnp), m_padded)
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
@@ -198,7 +210,8 @@ def naive_clearing_chunk(
                           agent_chunk=agent_chunk),
         grid=grid,
         in_specs=[step_spec, scalar_spec, book_spec, book_spec, scalar_spec,
-                  scalar_spec, book_spec, book_spec],
+                  scalar_spec, book_spec, book_spec]
+        + [scalar_spec] * NUM_PARAM_OPERANDS,
         out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
                    scalar_spec, scalar_spec, scalar_spec),
         out_shape=out_shapes,
@@ -227,7 +240,7 @@ def naive_clearing_chunk(
         ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
         step_arr = jnp.full((1, 1), step0_s + s, dtype=jnp.int32)
         nbid, nask, nlast, npmid, price, volume, mid = step_call(
-            step_arr, mids, bid, ask, last, pmid, eb, ea
+            step_arr, mids, bid, ask, last, pmid, eb, ea, *params
         )
         active = s < n_valid_s
         bid = jnp.where(active, nbid, bid)

@@ -7,8 +7,11 @@ entry points lower via Mosaic. ``interpret=None`` auto-detects.
 Both Pallas families are plumbed through the Session API: the chunk entries
 (:func:`repro.kernels.kinetic_clearing.kinetic_clearing_chunk`,
 :func:`repro.kernels.naive_clearing.naive_clearing_chunk`) take runtime
-``(step0, n_valid)`` scalars over a static chunk length, so one trace serves
-any requested step count; the runner jits them with donated state buffers.
+``(step0, n_valid)`` scalars plus the per-market
+:class:`repro.core.params.MarketParams` operands over a static chunk
+length, so one trace serves any requested step count *and any scenario
+mixture*; the runner jits them with donated state buffers (params are
+never donated — a session's scenario operands persist device-resident).
 ``simulate_kinetic``/``simulate_naive`` remain one-session compatibility
 wrappers registered behind ``engine.simulate``.
 
@@ -16,8 +19,9 @@ Scaling knobs (Engine backend_opts, all composable):
 
   * ``devices=N`` / ``mesh=`` — shard the market axis across a 1-D
     ``("markets",)`` device mesh with ``shard_map`` over the chunk kernel.
-    Each shard receives its rows' true *global* market ids, so a sharded
-    run is bitwise-identical to the single-device run; state stays
+    Each shard receives its rows' true *global* market ids — and its rows
+    of every parameter column — so a sharded heterogeneous ensemble is
+    bitwise-identical to the single-device run; state stays
     device-resident and donated, sharded row-wise (uneven M is padded to a
     whole tile per shard and sliced back).
   * ``stats_only=True`` — replace the per-step path outputs with in-kernel
@@ -43,12 +47,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import session
 from repro.core import stats as stats_mod
-from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
 from repro.core.step import MarketState, initial_state
 from repro.kernels import autotune as tune
 from repro.kernels.kinetic_clearing import (_pad_rows, kinetic_clearing_chunk,
-                                            pick_tile)
+                                            pad_params, pick_tile)
 from repro.kernels.naive_clearing import naive_clearing_chunk
 from repro.launch.mesh import make_markets_mesh
 from repro.launch.sharding import market_sharding, replicated_sharding
@@ -68,6 +72,11 @@ def _resolve_mesh(mesh, devices):
     return None
 
 
+def _zero_params(num_markets: int) -> MarketParams:
+    """Valid all-zero parameter columns (autotune timing operands)."""
+    return MarketParams.zeros(num_markets, jnp)
+
+
 class PallasChunkRunner(session.ChunkRunner):
     """jit wrapper around a chunk-parametrized Pallas entry point.
 
@@ -77,41 +86,42 @@ class PallasChunkRunner(session.ChunkRunner):
 
     xp = jnp
 
-    def __init__(self, kernel_chunk_fn, cfg: MarketConfig, chunk: int,
+    def __init__(self, kernel_chunk_fn, spec: EnsembleSpec, chunk: int,
                  mb: Optional[int], scan: str, interpret: Optional[bool],
                  stats_only: bool = False,
                  agent_chunk: Optional[int] = None,
                  devices: Optional[int] = None, mesh=None,
                  autotune="auto"):
         super().__init__()
-        self.cfg = cfg
+        self.spec = spec
         self.chunk = int(chunk)
         self.stats_only = bool(stats_only)
         interpret = _auto_interpret(interpret)
         self._mesh = _resolve_mesh(mesh, devices)
-        M, L = cfg.num_markets, cfg.num_levels
+        M, L = spec.num_markets, spec.num_levels
 
         # Per-shard market count: tiles are chosen for (and padding applied
         # to) each shard's local slice.
         n_shards = self._mesh.devices.size if self._mesh is not None else 1
         m_local = -(-M // n_shards)
-        self.tile = self._resolve_tile(kernel_chunk_fn, cfg, m_local, mb,
+        self.tile = self._resolve_tile(kernel_chunk_fn, spec, m_local, mb,
                                        agent_chunk, scan, interpret, autotune)
 
         self._zero_ext = (jnp.zeros((M, L), jnp.float32),
                           jnp.zeros((M, L), jnp.float32))
-        kernel_kwargs = dict(cfg=cfg, chunk=self.chunk, mb=self.tile.mb,
+        kernel_kwargs = dict(cfg=spec, chunk=self.chunk, mb=self.tile.mb,
                              scan=scan, interpret=interpret,
                              agent_chunk=self.tile.agent_chunk,
                              stats_only=self.stats_only)
 
         if self._mesh is None:
-            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
+            def chunk_fn(state, stats, params, step0, n_valid,
+                         ext_buy, ext_ask):
                 self._trace_count += 1  # python side effect: trace-time only
                 return self._split(kernel_chunk_fn(
                     state.bid, state.ask, state.last_price, state.prev_mid,
-                    step0, n_valid, ext_buy, ext_ask, stats=stats,
-                    **kernel_kwargs))
+                    step0, n_valid, ext_buy, ext_ask, params=params,
+                    stats=stats, **kernel_kwargs))
 
             self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
@@ -124,21 +134,25 @@ class PallasChunkRunner(session.ChunkRunner):
             row = self._row_sharding
 
             def shard_body(step0, n_valid, mids, bid, ask, last, pmid,
-                           ext_buy, ext_ask, stats):
+                           ext_buy, ext_ask, params, stats):
                 return kernel_chunk_fn(
                     bid, ask, last, pmid, step0, n_valid, ext_buy, ext_ask,
-                    market_ids=mids, stats=stats, **kernel_kwargs)
+                    market_ids=mids, params=params, stats=stats,
+                    **kernel_kwargs)
 
+            row_params = MarketParams(*(P("markets", None),)
+                                      * len(MarketParams._fields))
             sharded_call = shard_map(
                 shard_body, mesh=mesh_,
                 in_specs=(P(), P(), P("markets", None), P("markets", None),
                           P("markets", None), P("markets", None),
                           P("markets", None), P("markets", None),
-                          P("markets", None),
+                          P("markets", None), row_params,
                           P("markets", None) if self.stats_only else None),
                 out_specs=P("markets", None), check_rep=False)
 
-            def chunk_fn(state, stats, step0, n_valid, ext_buy, ext_ask):
+            def chunk_fn(state, stats, params, step0, n_valid,
+                         ext_buy, ext_ask):
                 self._trace_count += 1
                 # Pad/slice every call rather than carrying padded state:
                 # Θ(M·L) per chunk vs the kernel's Θ(chunk·A·L) work, and it
@@ -147,6 +161,7 @@ class PallasChunkRunner(session.ChunkRunner):
                 padded = [_pad_rows(x, m_padded) for x in state]
                 eb = _pad_rows(ext_buy, m_padded)
                 ea = _pad_rows(ext_ask, m_padded)
+                pp = pad_params(params, m_padded)
                 # Global row coordinates: rows < M are real markets, pad rows
                 # get distinct ids >= M whose streams are discarded.
                 mids = jnp.arange(m_padded, dtype=jnp.int32)[:, None]
@@ -154,51 +169,55 @@ class PallasChunkRunner(session.ChunkRunner):
                 if self.stats_only:
                     st = stats_mod.MarketStats(
                         *(_pad_rows(x, m_padded) for x in stats))
-                out = sharded_call(step0, n_valid, mids, *padded, eb, ea, st)
+                out = sharded_call(step0, n_valid, mids, *padded, eb, ea,
+                                   pp, st)
                 return self._split(
                     tuple(x[:M] for x in jax.tree_util.tree_leaves(out)))
 
             state_sh = MarketState(row, row, row, row)
+            params_sh = MarketParams(*(row,) * len(MarketParams._fields))
             stats_sh = (stats_mod.MarketStats(*(row,) * 6)
                         if self.stats_only else None)
             out_sh = ((state_sh, stats_sh) if self.stats_only
                       else (state_sh, (row, row, row)))
             self._chunk_fn = jax.jit(
                 chunk_fn, donate_argnums=(0, 1),
-                in_shardings=(state_sh, stats_sh, rep, rep, row, row),
+                in_shardings=(state_sh, stats_sh, params_sh, rep, rep,
+                              row, row),
                 out_shardings=out_sh)
 
     # ---- tile selection ----
-    def _resolve_tile(self, kernel_chunk_fn, cfg, m_local, mb, agent_chunk,
+    def _resolve_tile(self, kernel_chunk_fn, spec, m_local, mb, agent_chunk,
                       scan, interpret, autotune) -> tune.TileChoice:
         if mb is not None:
             return tune.TileChoice(
                 mb=mb, m_padded=tune.pad_to_multiple(m_local, mb),
                 agent_chunk=(agent_chunk if agent_chunk is not None
-                             else tune.default_agent_chunk(cfg.num_agents)))
+                             else tune.default_agent_chunk(spec.num_agents)))
         sweep = autotune is True or (autotune == "auto" and not interpret)
-        heuristic = tune.auto_tile(m_local, cfg.num_agents)
+        heuristic = tune.auto_tile(m_local, spec.num_agents)
         if agent_chunk is not None:
             heuristic = heuristic._replace(agent_chunk=agent_chunk)
         if not sweep:
             return heuristic
 
         def time_candidate(choice: tune.TileChoice) -> float:
-            M, L = m_local, cfg.num_levels
-            m0 = jnp.float32(cfg.mid0)
+            M, L = m_local, spec.num_levels
+            m0 = jnp.float32(spec.mid0)
             bid = jnp.zeros((M, L), jnp.float32)
             scalars = jnp.ones((M, 1), jnp.float32) * m0
             step0 = jnp.zeros((1, 1), jnp.int32)
             nv = jnp.full((1, 1), self.chunk, jnp.int32)
+            zp = _zero_params(M)
             st = (stats_mod.init_stats(M, jnp) if self.stats_only else None)
 
             @jax.jit
             def fn():
                 return kernel_chunk_fn(
                     bid, bid, scalars, scalars, step0, nv, bid, bid,
-                    cfg=cfg, chunk=self.chunk, mb=choice.mb, scan=scan,
+                    cfg=spec, chunk=self.chunk, mb=choice.mb, scan=scan,
                     interpret=interpret, agent_chunk=choice.agent_chunk,
-                    stats=st, stats_only=self.stats_only)
+                    params=zp, stats=st, stats_only=self.stats_only)
 
             return tune.time_call(fn, jax.block_until_ready)
 
@@ -206,18 +225,18 @@ class PallasChunkRunner(session.ChunkRunner):
         # kernel configurations (family / scan / stats mode) never share a
         # measured winner.
         key = tune.tune_key(
-            cfg.num_levels, cfg.num_agents, self.chunk,
+            spec.num_levels, spec.num_agents, self.chunk,
             kernel=kernel_chunk_fn.__name__, scan=scan,
             stats_only=self.stats_only, agent_chunk=agent_chunk)
         cands = tune.candidate_tiles(
-            m_local, cfg.num_agents,
+            m_local, spec.num_agents,
             agent_chunk=agent_chunk if agent_chunk is not None else ...)
         return tune.autotune_tile(key, time_candidate, cands,
                                   fallback=heuristic, num_markets=m_local)
 
     # ---- placement hooks (sharded state stays sharded across snapshots) ----
-    def init_state(self, cfg: MarketConfig) -> MarketState:
-        return self.to_device(initial_state(cfg, np))
+    def init_state(self, spec: EnsembleSpec) -> MarketState:
+        return self.to_device(initial_state(spec, np))
 
     def to_device(self, state: MarketState) -> MarketState:
         state = super().to_device(state)
@@ -226,8 +245,15 @@ class PallasChunkRunner(session.ChunkRunner):
         return MarketState(*(jax.device_put(x, self._row_sharding)
                              for x in state))
 
-    def init_stats(self, cfg: MarketConfig):
-        stats = super().init_stats(cfg)
+    def params_to_device(self, params: MarketParams) -> MarketParams:
+        params = super().params_to_device(params)
+        if self._mesh is None:
+            return params
+        return MarketParams(*(jax.device_put(x, self._row_sharding)
+                              for x in params))
+
+    def init_stats(self, spec: EnsembleSpec):
+        stats = super().init_stats(spec)
         if stats is None or self._mesh is None:
             return stats
         return self.stats_to_device(stats)
@@ -251,16 +277,17 @@ class PallasChunkRunner(session.ChunkRunner):
             return state, rest
         return state, tuple(out[4:])
 
-    def run(self, state: MarketState, aux, step0: int, n: int, ext,
+    def run(self, state: MarketState, params: MarketParams, aux,
+            step0: int, n: int, ext,
             stats=None) -> Tuple[MarketState, Any, session.StepBatch, Any]:
         eb, ea = self._zero_ext if ext is None else ext
         step0_arr = jnp.full((1, 1), step0, dtype=jnp.int32)
         nvalid_arr = jnp.full((1, 1), n, dtype=jnp.int32)
         new_state, payload = self._chunk_fn(
-            state, stats if self.stats_only else None,
+            state, stats if self.stats_only else None, params,
             step0_arr, nvalid_arr, jnp.asarray(eb), jnp.asarray(ea))
         if self.stats_only:
-            empty = jnp.zeros((self.cfg.num_markets, 0), jnp.float32)
+            empty = jnp.zeros((self.spec.num_markets, 0), jnp.float32)
             return (new_state, aux,
                     session.StepBatch(price=empty, volume=empty, mid=empty),
                     payload)
@@ -270,31 +297,34 @@ class PallasChunkRunner(session.ChunkRunner):
 
 
 @session.register_backend("pallas-kinetic")
-def open_kinetic_runner(cfg: MarketConfig, chunk: int, mb=None,
+def open_kinetic_runner(spec, chunk: int, mb=None,
                         scan: str = "cumsum",
                         interpret: Optional[bool] = None,
                         **opts: Any) -> PallasChunkRunner:
     """The paper's engine: persistent, VMEM-resident, one launch per chunk."""
-    return PallasChunkRunner(kinetic_clearing_chunk, cfg, chunk, mb=mb,
-                             scan=scan, interpret=interpret, **opts)
+    return PallasChunkRunner(kinetic_clearing_chunk, EnsembleSpec.coerce(spec),
+                             chunk, mb=mb, scan=scan, interpret=interpret,
+                             **opts)
 
 
 @session.register_backend("pallas-naive")
-def open_naive_runner(cfg: MarketConfig, chunk: int, mb=None,
+def open_naive_runner(spec, chunk: int, mb=None,
                       scan: str = "cumsum",
                       interpret: Optional[bool] = None,
                       **opts: Any) -> PallasChunkRunner:
     """Ablation: per-step kernel launches, HBM-resident book."""
-    return PallasChunkRunner(naive_clearing_chunk, cfg, chunk, mb=mb,
-                             scan=scan, interpret=interpret, **opts)
+    return PallasChunkRunner(naive_clearing_chunk, EnsembleSpec.coerce(spec),
+                             chunk, mb=mb, scan=scan, interpret=interpret,
+                             **opts)
 
 
-def _simulate_with(factory, cfg: MarketConfig, **opts: Any) -> SimResult:
-    runner = factory(cfg, min(session.DEFAULT_CHUNK, cfg.num_steps), **opts)
-    return session.run_runner_to_result(runner, cfg)
+def _simulate_with(factory, cfg, **opts: Any) -> SimResult:
+    spec = EnsembleSpec.coerce(cfg)
+    runner = factory(spec, min(session.DEFAULT_CHUNK, spec.num_steps), **opts)
+    return session.run_runner_to_result(runner, spec)
 
 
-def simulate_kinetic(cfg: MarketConfig, mb=None, scan: str = "cumsum",
+def simulate_kinetic(cfg, mb=None, scan: str = "cumsum",
                      interpret: Optional[bool] = None,
                      **opts: Any) -> SimResult:
     """Compatibility wrapper: one-session run of the persistent engine."""
@@ -302,7 +332,7 @@ def simulate_kinetic(cfg: MarketConfig, mb=None, scan: str = "cumsum",
                           interpret=interpret, **opts)
 
 
-def simulate_naive(cfg: MarketConfig, mb=None, scan: str = "cumsum",
+def simulate_naive(cfg, mb=None, scan: str = "cumsum",
                    interpret: Optional[bool] = None,
                    **opts: Any) -> SimResult:
     """Compatibility wrapper: one-session run of the per-step ablation."""

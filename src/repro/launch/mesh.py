@@ -1,7 +1,7 @@
-"""Production mesh construction (multi-pod dry-run §0-1).
+"""Device mesh construction for ensemble sharding.
 
-``make_production_mesh`` is a function (not a module constant) so importing
-this module never touches jax device state.
+Meshes are built by functions (never module constants) so importing this
+module never touches jax device state.
 """
 from __future__ import annotations
 
@@ -23,17 +23,6 @@ def _axis_type_kwargs(num_axes: int) -> dict:
 def make_mesh_compat(shape, axes, **kwargs):
     """``jax.make_mesh`` with explicit-Auto axis types on jax >= 0.5."""
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)), **kwargs)
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh_compat(shape, axes)
-
-
-def make_host_mesh():
-    """Single-device mesh for CPU smoke runs (same axis names)."""
-    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def make_markets_mesh(devices=None):

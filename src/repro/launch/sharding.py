@@ -1,56 +1,18 @@
-"""Logical-axis sharding: mesh context + activation constraints + param rules.
+"""Market-axis sharding rules for simulation ensembles.
 
-Model code annotates activations with *logical* axes ("dp", "tp", "sp",
-"dp_sp") via :func:`constrain`; outside a mesh context these are no-ops, so
-the same model runs unsharded on one CPU device for smoke tests and fully
-sharded under the production mesh for the dry-run.
-
-Logical -> physical mapping:
-  dp     -> ("pod", "data") when the pod axis exists, else ("data",)
-  tp     -> ("model",)                        tensor/expert parallel
-  sp     -> ("model",)                        sequence parallel (norm regions)
-  dp_sp  -> dp + tp combined (MoE group dispatch spans every chip)
+The simulator's market axis is embarrassingly parallel — independent
+markets, no collectives — and every per-market array (books ``[M, L]``,
+scalars/statistics ``[M, 1]``, parameter columns ``[M, 1]``) is row-major
+over it, so one :class:`NamedSharding` over the leading axis covers the
+whole session state. See :func:`repro.launch.mesh.make_markets_mesh` for
+the 1-D ``("markets",)`` topology and ``repro.kernels.ops`` for the
+``shard_map`` plumbing over the persistent chunk kernels.
 """
 from __future__ import annotations
 
-import contextlib
-import threading
-from typing import Optional, Sequence
-
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-_state = threading.local()
 
-
-def _axes(mesh: Mesh, logical: Optional[str], layout: str = "tp"):
-    names = mesh.axis_names
-    dp = tuple(n for n in ("pod", "data") if n in names)
-    model = ("model",) if "model" in names else ()
-    # "ep" layout (MoE archs): batch spans every axis, attention/dense
-    # params are replicated+FSDP, only expert weights use the model axis.
-    table = {
-        None: None,
-        "dp": dp + model if layout == "ep" else dp,
-        "dp_data": dp,            # data axes only, regardless of layout
-        "vocab": (model or None) if layout == "tp" else None,
-        "tp": model or None,
-        "sp": model or None,
-        "dp_sp": dp + model,
-    }
-    if logical not in table:
-        raise KeyError(f"unknown logical axis {logical!r}")
-    ax = table[logical]
-    if ax == ():
-        return None
-    return ax
-
-
-# ---------------------------------------------------------------------------
-# Market-axis sharding (simulation ensembles; see repro.launch.mesh
-# .make_markets_mesh). Per-market arrays are [M, ...] row-major, so one
-# NamedSharding over the leading axis covers books, scalars and statistics.
-# ---------------------------------------------------------------------------
 def market_sharding(mesh: Mesh) -> NamedSharding:
     """Row-sharding for [M, ...] per-market arrays on a ``markets`` mesh."""
     if "markets" not in mesh.axis_names:
@@ -61,177 +23,3 @@ def market_sharding(mesh: Mesh) -> NamedSharding:
 def replicated_sharding(mesh: Mesh) -> NamedSharding:
     """Fully replicated placement (runtime scalars like step0/n_valid)."""
     return NamedSharding(mesh, P())
-
-
-@contextlib.contextmanager
-def activate(mesh: Mesh, layout: str = "tp"):
-    """Enable activation constraints for model code traced inside."""
-    prev = getattr(_state, "mesh", None), getattr(_state, "layout", "tp")
-    _state.mesh = mesh
-    _state.layout = layout
-    try:
-        yield
-    finally:
-        _state.mesh, _state.layout = prev
-
-
-def current_mesh() -> Optional[Mesh]:
-    return getattr(_state, "mesh", None)
-
-
-def constrain(x, *logical_axes):
-    """with_sharding_constraint by logical axis names; no-op without a mesh."""
-    mesh = current_mesh()
-    if mesh is None:
-        return x
-    layout = getattr(_state, "layout", "tp")
-    axes = [_axes(mesh, a, layout) for a in logical_axes]
-    # drop axes whose product doesn't divide the dim
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    clean = []
-    for dim, ax in enumerate(axes):
-        if ax is None:
-            clean.append(None)
-            continue
-        n = 1
-        for a in (ax if isinstance(ax, tuple) else (ax,)):
-            n *= sizes[a]
-        clean.append(ax if x.shape[dim] % n == 0 else None)
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, P(*clean)))
-
-
-def constrain_spec(x, spec_axes):
-    """Like :func:`constrain` but with an explicit per-dim tuple."""
-    return constrain(x, *spec_axes)
-
-
-def spec(mesh: Mesh, *logical_axes, layout: str = "tp") -> NamedSharding:
-    return NamedSharding(mesh, P(*(_axes(mesh, a, layout)
-                                   for a in logical_axes)))
-
-
-# ---------------------------------------------------------------------------
-# Parameter sharding rules
-# ---------------------------------------------------------------------------
-def _rule_for(path: str, arr_ndim: int, fsdp: bool, layout: str = "tp"):
-    """Map a parameter tree path to logical axes per dimension.
-
-    Conventions (see DESIGN.md §6): the contraction between "tp"-column and
-    "tp"-row weights is Megatron-style; expert dim is EP; embeddings are
-    vocab-parallel; norms/biases replicated (FSDP shards them on dim 0 when
-    large enough — biases stay replicated for simplicity).
-    """
-    leaf = path.split("/")[-1]
-    fs = "dp" if fsdp else None
-    if layout == "ep" and not leaf.startswith("we_"):
-        # replicate + (optional) FSDP for everything except expert weights
-        if leaf in ("table", "wq", "wk", "wv", "wo", "w_gate", "w_up",
-                    "w_out", "router", "in_proj", "out_proj", "x_proj",
-                    "dt_proj", "bc_proj", "dt_in"):
-            return (fs,) + (None,) * (arr_ndim - 1)
-
-    if leaf == "table":                       # embedding [V, D]
-        return ("tp", fs)
-    if leaf in ("wq", "wk", "wv"):            # [D, H*hd]
-        return (fs, "tp")
-    if leaf == "wo":                          # [H*hd, D]
-        return ("tp", fs)
-    if leaf in ("w_gate", "w_up"):            # MLP [D, F]
-        return (fs, "tp")
-    if leaf == "w_out":                       # MLP [F, D]
-        return ("tp", fs)
-    if leaf in ("we_gate", "we_up"):          # MoE experts [E, D, F]
-        return ("tp", fs, None)
-    if leaf == "we_out":                      # MoE [E, F, D]
-        return ("tp", fs, None)
-    if leaf == "router":                      # [D, E]
-        return (fs, None)
-    # --- SSM (mamba) ---
-    if leaf == "in_proj":                     # [D, 2*d_inner(+...)]
-        return (fs, "tp")
-    if leaf == "out_proj":                    # [d_inner, D]
-        return ("tp", fs)
-    if leaf in ("conv_w",):                   # [K, d_inner]
-        return (None, "tp")
-    if leaf in ("A_log", "D_skip", "dt_bias", "conv_b"):
-        return ("tp",) + (None,) * (arr_ndim - 1)
-    if leaf == "x_proj":                      # [d_inner, R+2N]
-        return ("tp", None)
-    if leaf == "dt_proj":                     # [R, d_inner]
-        return (None, "tp")
-    if leaf in ("bc_proj", "dt_in"):          # mamba2 [D, *]
-        return (fs, None)
-    # norms, biases, small vectors: replicated
-    return (None,) * arr_ndim
-
-
-def _tree_paths(tree, prefix=""):
-    out = []
-    if isinstance(tree, dict):
-        for k_, v in sorted(tree.items()):
-            out.extend(_tree_paths(v, f"{prefix}/{k_}" if prefix else str(k_)))
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out.extend(_tree_paths(v, f"{prefix}/{i}"))
-    else:
-        out.append((prefix, tree))
-    return out
-
-
-def param_shardings(mesh: Mesh, abstract_params, fsdp: bool = False,
-                    layout: str = "tp"):
-    """NamedSharding pytree for a parameter pytree of ShapeDtypeStructs.
-
-    Layer-stacked parameters (leading scan dim) are detected by ndim vs the
-    rule arity and the stacked dim is left unsharded.
-    """
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-
-    def _finalize(full, leaf):
-        # drop shardings on dims smaller than the axis size
-        clean = []
-        for dim, ax in enumerate(full):
-            phys = _axes(mesh, ax)
-            if phys is None:
-                clean.append(None)
-                continue
-            n = 1
-            for a in (phys if isinstance(phys, tuple) else (phys,)):
-                n *= sizes[a]
-            # jit in_shardings require exact divisibility; drop the axis
-            # otherwise (the param stays replicated — visible in roofline).
-            if leaf.shape[dim] % n != 0:
-                clean.append(None)
-            else:
-                clean.append(phys)
-        return NamedSharding(mesh, P(*clean))
-
-    def one(path, leaf):
-        ndim = leaf.ndim
-        # Adafactor factored stats live one level below the param name:
-        # ".../wq/vr". Derive their rule from the parent's.
-        parts = path.split("/")
-        if parts[-1] in ("vr", "vc", "v") and len(parts) >= 2:
-            parent = "/".join(parts[:-1])
-            if parts[-1] == "v":
-                return one(parent, leaf)
-            for stacked in (0, 1):
-                prule = _rule_for(parent, ndim + 1 - stacked, fsdp, layout)
-                if len(prule) == ndim + 1 - stacked:
-                    rule = (prule[:-1] if parts[-1] == "vr"
-                            else prule[:-2] + prule[-1:])
-                    return _finalize((None,) * stacked + rule, leaf)
-            return NamedSharding(mesh, P())
-        # try rule at both ndim and ndim-1 (scan-stacked)
-        for stacked in (0, 1):
-            rule = _rule_for(path, ndim - stacked, fsdp, layout)
-            if len(rule) == ndim - stacked:
-                return _finalize((None,) * stacked + rule, leaf)
-        return NamedSharding(mesh, P())
-
-    paths = _tree_paths(abstract_params)
-    flat, treedef = jax.tree_util.tree_flatten(abstract_params)
-    assert len(paths) == len(flat)
-    shardings = [one(p, l) for (p, _), l in zip(paths, flat)]
-    return jax.tree_util.tree_unflatten(treedef, shardings)

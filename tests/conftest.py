@@ -1,6 +1,6 @@
 import os
 import sys
 
-# Tests run on the single host device (the dry-run, and only the dry-run,
-# forces 512 devices in its own subprocess).
+# Tests run on the single host device (multi-device cases force N host
+# devices in their own subprocess, or are `distributed`-marked).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

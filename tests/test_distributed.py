@@ -1,5 +1,5 @@
 """Distribution machinery: market-axis ensemble sharding, sharding rules,
-HLO analyzer, mini dry-run.
+HLO analyzer.
 
 Two flavours of multi-device coverage:
 
@@ -10,7 +10,6 @@ Two flavours of multi-device coverage:
     process already has >= 2 devices — the CI `distributed` tier runs them
     under ``XLA_FLAGS=--xla_force_host_platform_device_count=2``.
 """
-import json
 import os
 import subprocess
 import sys
@@ -226,82 +225,15 @@ def test_sharded_matmul_collectives_detected():
     assert lines[-2] == "True" and lines[-1] == "True"
 
 
-def test_mini_dryrun_smoke_arch():
-    """Full dry-run path (lower+compile+analysis) for a smoke config on an
-    8-device (2,4) mesh — the same machinery the production dry-run uses."""
-    out = _run_probe(textwrap.dedent("""
-        import jax, jax.numpy as jnp, json
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.configs import get_config
-        from repro.launch import sharding as shd, specs as specs_mod
-        from repro.launch.steps import make_train_step
-        from repro.launch import hlo_analysis
-        from repro.models.model import Model
-        import dataclasses
-        from repro.launch.mesh import make_mesh_compat
-        mesh = make_mesh_compat((2, 4), ("data", "model"))
-        cfg = get_config("llama4-scout-17b-a16e", smoke=True)
-        model = Model(cfg)
-        train_step, opt = make_train_step(cfg)
-        ap = model.abstract_params()
-        ao = jax.eval_shape(opt.init, ap)
-        psh = shd.param_shardings(mesh, ap)
-        osh = shd.param_shardings(mesh, ao)
-        repl = NamedSharding(mesh, P())
-        batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
-                 "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
-        bsh = specs_mod.batch_shardings(mesh, cfg, batch)
-        def fn(p, o, s, b):
-            with shd.activate(mesh):
-                return train_step(p, o, s, b)
-        jf = jax.jit(fn, in_shardings=(psh, osh, repl, bsh),
-                     out_shardings=(psh, osh, repl, None))
-        compiled = jf.lower(ap, ao, jax.ShapeDtypeStruct((), jnp.int32),
-                            batch).compile()
-        ma = compiled.memory_analysis()
-        h = hlo_analysis.summarize(compiled.as_text())
-        print(json.dumps({"flops": h["flops"], "bytes": h["hbm_bytes"],
-                          "wire": h["collective_wire_bytes"],
-                          "arg": ma.argument_size_in_bytes}))
-    """))
-    rec = json.loads(out.strip().splitlines()[-1])
-    assert rec["flops"] > 0 and rec["bytes"] > 0
-    assert rec["wire"] > 0  # TP/EP requires collectives
-    assert rec["arg"] > 0
+def test_market_sharding_requires_markets_axis():
+    from jax.sharding import PartitionSpec as P
 
+    from repro.launch.mesh import make_mesh_compat
+    from repro.launch.sharding import market_sharding, replicated_sharding
 
-def test_cache_shardings_rules():
-    import jax
-    import jax.numpy as jnp
-
-    from repro.configs import get_config
-    from repro.launch import specs as specs_mod
-
-    # build shardings against an abstract 2D mesh without devices: use the
-    # single host device mesh shaped (1,1); rules must still produce specs
-    from repro.launch.mesh import make_host_mesh
-
-    mesh = make_host_mesh()
-    cfg = get_config("falcon-mamba-7b", smoke=True)
-    cache = specs_mod.abstract_cache(cfg, 2, 16)
-    sh = specs_mod.cache_shardings(mesh, cfg, cache)
-    leaves = jax.tree_util.tree_leaves(
-        sh, is_leaf=lambda x: hasattr(x, "spec"))
-    assert leaves, "no shardings built"
-
-
-def test_param_sharding_rules_structure():
-    import jax
-
-    from repro.configs import get_config
-    from repro.launch import sharding as shd
-    from repro.launch.mesh import make_host_mesh
-    from repro.models.model import Model
-
-    mesh = make_host_mesh()
-    for arch in ("kimi-k2-1t-a32b", "whisper-large-v3", "zamba2-2.7b"):
-        cfg = get_config(arch, smoke=True)
-        ap = Model(cfg).abstract_params()
-        sh = shd.param_shardings(mesh, ap, fsdp=True)
-        # structure must match exactly (tree_map would fail otherwise)
-        jax.tree_util.tree_map(lambda a, b: None, ap, sh)
+    mesh = make_mesh_compat((1,), ("markets",))
+    assert market_sharding(mesh).spec == P("markets")
+    assert replicated_sharding(mesh).spec == P()
+    other = make_mesh_compat((1,), ("data",))
+    with pytest.raises(ValueError, match="markets"):
+        market_sharding(other)

@@ -122,15 +122,20 @@ def test_kinetic_stats_kernel_emits_no_chunk_width_outputs():
     import jax
     import jax.numpy as jnp
 
+    from repro.core.params import EnsembleSpec
+
     chunk = 16
+    spec = EnsembleSpec.coerce(CFG)
     eng = Engine("pallas-kinetic", stats_only=True)
-    runner = eng._runner(CFG, chunk)
-    state = runner.init_state(CFG)
-    stats = runner.init_stats(CFG)
+    runner = eng._runner(spec, chunk)
+    state = runner.init_state(spec)
+    params = runner.params_to_device(spec.params)
+    stats = runner.init_stats(spec)
     step0 = jnp.zeros((1, 1), jnp.int32)
     nv = jnp.full((1, 1), chunk, jnp.int32)
     ext = jnp.zeros((CFG.num_markets, CFG.num_levels), jnp.float32)
-    out = jax.eval_shape(runner._chunk_fn, state, stats, step0, nv, ext, ext)
+    out = jax.eval_shape(runner._chunk_fn, state, stats, params, step0, nv,
+                         ext, ext)
     shapes = [leaf.shape for leaf in jax.tree_util.tree_leaves(out)]
     assert shapes, "no outputs?"
     assert all(chunk not in shape for shape in shapes), shapes
