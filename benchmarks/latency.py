@@ -28,8 +28,10 @@ DEFAULT_BACKENDS = ("numpy", "jax-per-step", "jax-scan", "pallas-naive",
                     "pallas-kinetic")
 
 
-def _step_latency(backend: str, cfg: MarketConfig) -> Tuple[float, float, float]:
-    """Median/min/max warm per-step latency over ``TRIALS`` session steps."""
+def _step_latency(backend: str,
+                  cfg: MarketConfig) -> Tuple[float, float, float, int, int]:
+    """Median/min/max warm per-step latency over ``TRIALS`` session steps,
+    plus the cumulative trace count and the warm-section retrace delta."""
     eng = Engine(backend)
     sess = eng.open(cfg)
     _block(sess.step())  # warmup: compile the single-step executable
@@ -40,17 +42,24 @@ def _step_latency(backend: str, cfg: MarketConfig) -> Tuple[float, float, float]
         batch = sess.step()
         _block(batch)
         times.append(time.perf_counter() - t0)
-    assert eng.trace_count == warm_traces, f"{backend}: retraced while warm"
-    return float(np.median(times)), float(np.min(times)), float(np.max(times))
+    # A warm retrace is reported as data (traces_delta != 0) rather than a
+    # crash, so the regression lands in BENCH_latency.json where it is
+    # diffable across PRs — the CI retrace check fails the build on it.
+    return (float(np.median(times)), float(np.min(times)),
+            float(np.max(times)), eng.trace_count,
+            eng.trace_count - warm_traces)
 
 
 def run(backends=DEFAULT_BACKENDS) -> List[Row]:
     cfg = MarketConfig(num_markets=4096 if FULL else 256, num_agents=FIXED_A)
     rows = []
     for b in backends:
-        med, lo, hi = _step_latency(b, cfg)
+        med, lo, hi, traces, delta = _step_latency(b, cfg)
+        # traces/traces_delta make compile regressions diffable across the
+        # BENCH_*.json trajectory (delta must stay 0 on the warm path).
         rows.append((f"fig6/step_latency/{b}", med * 1e6,
-                     f"min_us={lo * 1e6:.1f};max_us={hi * 1e6:.1f}"))
+                     f"min_us={lo * 1e6:.1f};max_us={hi * 1e6:.1f};"
+                     f"traces={traces};traces_delta={delta}"))
     return rows
 
 

@@ -1,0 +1,146 @@
+"""RL rollout throughput: host-loop ``Session.step`` vs in-graph ``rollout``.
+
+The paper's persistent regime keeps state device-resident across steps; the
+Session RL hook throws that away by crossing the host boundary per step.
+This benchmark quantifies the gap a policy-in-the-loop trainer sees:
+
+  * ``rl/session_step_loop/<backend>`` — a python loop of warm
+    ``Session.step(actions)`` calls (one dispatch + host transfer per step);
+  * ``rl/env_rollout/<backend>``       — the same policy, steps and markets
+    as ONE ``repro.env.rollout`` (a single ``lax.scan`` executable on
+    traceable backends; the NumPy references run the host-loop semantics).
+
+Rows report µs/step with ``steps_per_s``/``events_per_s`` derived, plus the
+``traces``/``traces_delta`` compile counters: ``traces`` is the engine's
+cumulative ``Engine.trace_count`` after the timed section and
+``traces_delta`` the retraces *during* it — a warm env rollout must never
+retrace, and CI fails the build if ``traces_delta`` is nonzero (see
+.github/workflows/ci.yml).
+
+    PYTHONPATH=src python -m benchmarks.rl_rollout \
+        --backends jax-scan,pallas-kinetic --json BENCH_rl.json
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import FIXED_A, FULL, Row, emit, time_call
+from repro.core.config import MarketConfig
+from repro.core.session import Engine, ExternalOrders
+from repro.env import rollout
+
+DEFAULT_BACKENDS = ("numpy", "jax-scan", "pallas-naive", "pallas-kinetic")
+
+
+def _make_policy(num_levels: int):
+    """Deterministic one-lot quote one tick inside the spread (traceable).
+
+    One stable function object per benchmark run — the env's rollout
+    executable is cached per (policy, n_steps), so a fresh closure per
+    *call* would defeat the cache and retrace.
+    """
+    def policy(obs, t):
+        xp = np if isinstance(obs, np.ndarray) else _jnp()
+        mid = obs[:, 0]
+        buy = (t % 2) == 0
+        offset = xp.where(buy, xp.float32(-1.0), xp.float32(1.0))
+        price = xp.clip(xp.round(mid + offset), 0,
+                        num_levels - 1).astype(xp.int32)
+        return ExternalOrders(side_buy=xp.broadcast_to(buy, mid.shape),
+                              price=price, qty=xp.ones_like(mid))
+
+    return policy
+
+
+def _jnp():
+    import jax.numpy as jnp
+
+    return jnp
+
+
+def _bench_backend(backend: str, cfg: MarketConfig, n_steps: int,
+                   trials: int, policy) -> List[Row]:
+    rows: List[Row] = []
+    events_per_step = cfg.num_markets * cfg.num_agents
+
+    # --- host-loop Session.step (one dispatch + transfer per step) ---
+    eng = Engine(backend)
+    sess = eng.open(cfg)
+    actions = ExternalOrders(side_buy=True, price=cfg.num_levels // 2,
+                             qty=1.0)
+
+    def step_loop():
+        out = None
+        for _ in range(n_steps):
+            out = sess.step(actions)
+        return out
+
+    step_loop()  # warm the single-step executable
+    warm = eng.trace_count
+    t_loop, _ = time_call(step_loop, trials=trials, warmup=0)
+    us = t_loop / n_steps * 1e6
+    rows.append((f"rl/session_step_loop/{backend}", us,
+                 f"steps_per_s={n_steps / t_loop:.1f};"
+                 f"events_per_s={events_per_step * n_steps / t_loop:.3e};"
+                 f"traces={eng.trace_count};"
+                 f"traces_delta={eng.trace_count - warm}"))
+
+    # --- in-graph rollout (one executable for the whole trajectory) ---
+    env_eng = Engine(backend)
+    env = env_eng.env(cfg, auto_reset=False)
+
+    def run_rollout():
+        state, traj = rollout(env, policy, n_steps)
+        return traj.reward
+
+    run_rollout()  # warm the rollout executable outside the timed section
+    warm = env_eng.trace_count
+    t_roll, reward = time_call(run_rollout, trials=trials, warmup=0)
+    assert reward.shape[0] == n_steps
+    us = t_roll / n_steps * 1e6
+    rows.append((f"rl/env_rollout/{backend}", us,
+                 f"steps_per_s={n_steps / t_roll:.1f};"
+                 f"events_per_s={events_per_step * n_steps / t_roll:.3e};"
+                 f"speedup_vs_step_loop={t_loop / t_roll:.2f};"
+                 f"traces={env_eng.trace_count};"
+                 f"traces_delta={env_eng.trace_count - warm}"))
+    return rows
+
+
+def run(backends=DEFAULT_BACKENDS, markets: int = None, agents: int = None,
+        steps: int = None, trials: int = 3) -> List[Row]:
+    M = markets or (4096 if FULL else 64)
+    A = agents or FIXED_A
+    S = steps or (500 if FULL else 64)
+    cfg = MarketConfig(num_markets=M, num_agents=A, num_steps=max(S, 2),
+                       seed=11)
+    policy = _make_policy(cfg.num_levels)
+    rows: List[Row] = []
+    for b in backends:
+        rows.extend(_bench_backend(b, cfg, S, trials, policy))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS),
+                    help="comma-separated backend list")
+    ap.add_argument("--markets", type=int, default=None)
+    ap.add_argument("--agents", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="rollout length (steps per trajectory)")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    rows = run([b for b in args.backends.split(",") if b],
+               markets=args.markets, agents=args.agents, steps=args.steps,
+               trials=args.trials)
+    emit(rows, json_path=args.json, benchmark="rl_rollout")
+
+
+if __name__ == "__main__":
+    main()

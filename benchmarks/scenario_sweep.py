@@ -70,16 +70,23 @@ def run(backends: Optional[List[str]] = None, markets: Optional[int] = None,
                     out.append(sess.run(cfg.num_steps))
             return out
 
-        t_loop, _ = time_call(run_loop, trials=trials, warmup=1)
+        run_loop()  # warmup outside the timed section
+        warm_loop = loop_eng.trace_count
+        t_loop, _ = time_call(run_loop, trials=trials, warmup=0)
         # All sweep configs share one static shape, so even the loop path
         # compiles once under the new cache — the launch count (and the
         # Θ(n_cfg) host dispatch/open overhead) is what the ensemble
-        # eliminates. `trace_count` records the measured compiles.
+        # eliminates. `compiles` records the cumulative trace count;
+        # `traces_delta` (warm-section retraces, must stay 0) mirrors the
+        # other BENCH_*.json artifacts so compile regressions are diffable
+        # across PRs — the CI retrace check fails the build on a nonzero
+        # delta.
         rows.append((
             f"scenarios/loop/{b}", t_loop * 1e6,
             f"events_per_s={total_events / t_loop:.4g};"
             f"compiles={loop_eng.trace_count};"
-            f"launches={n_cfg * launches_per_run};configs={n_cfg}"))
+            f"launches={n_cfg * launches_per_run};configs={n_cfg};"
+            f"traces_delta={loop_eng.trace_count - warm_loop}"))
 
         # --- ensemble path: one spec, one compile, one launch per chunk -
         ens_eng = Engine(b, chunk_size=chunk)
@@ -88,13 +95,16 @@ def run(backends: Optional[List[str]] = None, markets: Optional[int] = None,
             with ens_eng.open(spec) as sess:
                 return sess.run(spec.num_steps)
 
-        t_ens, _ = time_call(run_ensemble, trials=trials, warmup=1)
+        run_ensemble()  # warmup outside the timed section
+        warm_ens = ens_eng.trace_count
+        t_ens, _ = time_call(run_ensemble, trials=trials, warmup=0)
         rows.append((
             f"scenarios/ensemble/{b}", t_ens * 1e6,
             f"events_per_s={total_events / t_ens:.4g};"
             f"compiles={ens_eng.trace_count};"
             f"launches={launches_per_run};markets={spec.num_markets};"
-            f"speedup_vs_loop={t_loop / t_ens:.2f}x"))
+            f"speedup_vs_loop={t_loop / t_ens:.2f}x;"
+            f"traces_delta={ens_eng.trace_count - warm_ens}"))
     return rows
 
 

@@ -129,7 +129,7 @@ def _fundamentalist(ctx: ArchetypeContext):
 
 
 def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
-           agent_ids, xp, uniform_fn=None, atype=None):
+           agent_ids, xp, uniform_fn=None, atype=None, seed=None):
     """Vectorized agent decisions for one step.
 
     Args:
@@ -150,6 +150,11 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
         (:func:`repro.core.params.agent_types`) — it is step-invariant, so
         loop drivers hoist it out of the step loop; ``None`` recomputes it
         here (value-identical).
+      seed:       optional runtime seed override for the production counter
+        stream (scalar, traced ok — the RL env's vmap-over-seeds operand).
+        ``None`` uses the trace-static ``cfg.seed``; a concrete value equal
+        to ``cfg.seed`` is bitwise-identical to ``None``. Ignored when
+        ``uniform_fn`` is supplied (the override owns its own stream).
 
     Returns:
       side_buy: bool[M, A], price: int32[M, A], qty: float32[M, A]
@@ -164,8 +169,10 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
     step_u = xp.asarray(step).astype(xp.uint32)
 
     if uniform_fn is None:
+        seed = cfg.seed if seed is None else seed
+
         def u(channel):
-            return rng.uniform32(cfg.seed, gid, step_u, channel, xp)
+            return rng.uniform32(seed, gid, step_u, channel, xp)
     else:
         def u(channel):
             return uniform_fn(gid, step_u, channel)

@@ -56,6 +56,8 @@ class JaxChunkRunner(session.ChunkRunner):
     """jit-compiled chunk executor for the two JAX framework regimes."""
 
     xp = jnp
+    env_traceable = True
+    env_runtime_seed = True
 
     def __init__(self, spec: EnsembleSpec, chunk: int, mode: str,
                  binning: str, scan: str, stats_only: bool = False):
@@ -67,8 +69,9 @@ class JaxChunkRunner(session.ChunkRunner):
         self.mode = mode
         self.stats_only = bool(stats_only)
         M, L = spec.num_markets, spec.num_levels
-        market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
-        bin_orders = _make_bin_orders(spec, binning)
+        self._market_ids = jnp.arange(M, dtype=jnp.int32)[:, None]
+        self._bin_orders = _make_bin_orders(spec, binning)
+        self._scan = scan
         self._zero_ext = (jnp.zeros((M, L), jnp.float32),
                           jnp.zeros((M, L), jnp.float32))
 
@@ -84,11 +87,8 @@ class JaxChunkRunner(session.ChunkRunner):
                     st, acc = carry
                     eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
                     ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
-                    new_st, out = simulate_step(
-                        spec, st, step0 + s, market_ids, jnp,
-                        bin_orders=bin_orders, scan=scan,
-                        ext_buy=eb, ext_ask=ea, params=params, atype=atype,
-                    )
+                    new_st, out = self._sim_step(st, params, step0 + s,
+                                                 eb, ea, atype=atype)
                     active = s < n_valid
                     st = MarketState(*(jnp.where(active, new, old)
                                        for new, old in zip(new_st, st)))
@@ -110,11 +110,7 @@ class JaxChunkRunner(session.ChunkRunner):
         else:
             def step_fn(state, params, s, ext_buy, ext_ask):
                 self._trace_count += 1
-                return simulate_step(
-                    spec, state, s, market_ids, jnp, bin_orders=bin_orders,
-                    scan=scan, ext_buy=ext_buy, ext_ask=ext_ask,
-                    params=params,
-                )
+                return self._sim_step(state, params, s, ext_buy, ext_ask)
 
             self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
             # stats_only accumulation between dispatches stays on device.
@@ -122,6 +118,28 @@ class JaxChunkRunner(session.ChunkRunner):
                 lambda acc, mid, vol: stats_mod.accumulate(
                     acc, mid, vol, True, jnp),
                 donate_argnums=(0,))
+
+    def _sim_step(self, state, params, s, ext_buy, ext_ask, atype=None,
+                  seed=None):
+        """The single ``simulate_step`` entry shared by the Session chunk
+        path (both modes) and the RL env's functional core."""
+        return simulate_step(
+            self.spec, state, s, self._market_ids, jnp,
+            bin_orders=self._bin_orders, scan=self._scan,
+            ext_buy=ext_buy, ext_ask=ext_ask, params=params, atype=atype,
+            seed=seed,
+        )
+
+    def env_step_fn(self):
+        """Pure per-step core for :class:`repro.env.MarketEnv` — traceable,
+        with a runtime ``seed`` operand (counter RNG)."""
+        def step_core(market, params, t, ext_buy, ext_ask, seed, aux):
+            new_state, out = self._sim_step(
+                market, params, jnp.asarray(t).astype(jnp.int32),
+                ext_buy, ext_ask, seed=seed)
+            return new_state, out, aux
+
+        return step_core
 
     def _empty_batch(self) -> session.StepBatch:
         empty = jnp.zeros((self.spec.num_markets, 0), jnp.float32)

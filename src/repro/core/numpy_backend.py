@@ -59,9 +59,37 @@ class NumpyChunkRunner(session.ChunkRunner):
         self.rng_mode = rng_mode
         self.scan = scan
         self.stats_only = bool(stats_only)
+        # Runtime seed overrides rebuild the counter/SplitMix64 stream per
+        # step; the sequential PCG64 stream is fixed at init.
+        self.env_runtime_seed = rng_mode != "pcg64"
         M, L = spec.num_markets, spec.num_levels
         self._market_ids = np.arange(M, dtype=np.int32)[:, None]
         self._bin = lambda sb, p, q: _bin_orders_scatter(sb, p, q, M, L)
+
+    def env_step_fn(self):
+        """Host-loop per-step core for :class:`repro.env.MarketEnv` (not
+        traceable — the env's rollout falls back to a python loop)."""
+        spec = self.spec
+        # The type lattice is step-invariant and EnvState threads the same
+        # params object through every step of a rollout: a one-slot
+        # identity-keyed memo gives the host loop the same atype hoist the
+        # chunked `run` path performs (value-identical either way).
+        atype_memo = []
+
+        def step_core(market, params, t, ext_buy, ext_ask, seed, aux):
+            if not (atype_memo and atype_memo[0] is params):
+                atype_memo[:] = [params, params_mod.agent_types(
+                    params, spec.num_agents, np)]
+            new_state, out = simulate_step(
+                spec, market, np.int32(t), self._market_ids, np,
+                bin_orders=self._bin, scan=self.scan,
+                uniform_fn=self._uniform_fn(aux, seed=seed),
+                ext_buy=ext_buy, ext_ask=ext_ask, params=params, seed=seed,
+                atype=atype_memo[1],
+            )
+            return new_state, out, aux
+
+        return step_core
 
     # ---- stateful RNG (PCG64 only) ----
     def init_aux(self, spec: EnsembleSpec) -> Optional[np.random.Generator]:
@@ -79,11 +107,12 @@ class NumpyChunkRunner(session.ChunkRunner):
         gen.bit_generator.state = payload
         return gen
 
-    def _uniform_fn(self, aux):
+    def _uniform_fn(self, aux, seed=None):
         if self.rng_mode == "kinetic":
-            return None
+            return None  # decide() defaults to the counter stream (`seed`
+            #              is forwarded separately through simulate_step)
         if self.rng_mode == "splitmix64":
-            seed = self.spec.seed
+            seed = self.spec.seed if seed is None else seed
 
             def uniform_fn(gid, step, channel):
                 return rng.splitmix64_uniform(seed, gid, step, channel)

@@ -108,10 +108,15 @@ class StepBatch(NamedTuple):
 
 
 class ExternalOrders(NamedTuple):
-    """One external limit order per market for :meth:`Session.step`.
+    """One external limit order per market for :meth:`Session.step` and
+    :meth:`repro.env.MarketEnv.step`.
 
     Each field is broadcastable to ``[M]``: ``side_buy`` bool, ``price``
-    int tick index (clipped to the grid), ``qty`` float lots.
+    int tick index on the grid ``[0, L)``, ``qty`` float lots ``>= 0``
+    (``qty == 0`` is a bitwise no-op order). Shapes/dtypes — and values,
+    when concrete — are validated eagerly with a clear ``ValueError``
+    (see :func:`repro.env.actions.validate_actions`) instead of a deep
+    backend trace error.
     """
 
     side_buy: Any
@@ -134,6 +139,13 @@ class ChunkRunner:
     #: Runners opened with ``stats_only=True`` replace per-step path outputs
     #: with carried :class:`repro.core.stats.MarketStats` accumulators.
     stats_only: bool = False
+    #: True when :meth:`env_step_fn` returns a jax-traceable pure function
+    #: (embeddable in the RL env's jit/vmap/lax.scan rollouts).
+    env_traceable: bool = False
+    #: True when the step core accepts a *runtime* RNG seed override (the
+    #: env's vmap-over-seeds operand); False when the seed is baked into
+    #: the compiled trace (Pallas kernels) or a stateful stream (PCG64).
+    env_runtime_seed: bool = False
 
     def __init__(self) -> None:
         self._trace_count = 0
@@ -164,6 +176,26 @@ class ChunkRunner:
         return MarketStats(*(self.xp.asarray(np.asarray(x),
                                              dtype=self.xp.float32)
                              for x in stats))
+
+    # ---- functional env core (repro.env) ----
+    def env_step_fn(self) -> Optional[Callable]:
+        """Pure per-step core for :class:`repro.env.MarketEnv`, or ``None``.
+
+        The returned callable has the uniform signature
+
+            ``fn(market: MarketState, params: MarketParams, t, ext_buy,
+            ext_ask, seed, aux) -> (MarketState, StepOutput, aux)``
+
+        where ``t`` is the absolute step (scalar, traced ok), ``ext_buy`` /
+        ``ext_ask`` are float32[M, L] injected order quantities, ``seed`` is
+        an optional runtime RNG override (``None`` for the trace-static
+        seed) and ``aux`` is the stateful-RNG payload threaded through
+        unchanged by counter-RNG backends. It is the *same* ``simulate_step``
+        entry the chunked Session path compiles, so the two APIs cannot
+        drift; traceable backends (``env_traceable``) return a function that
+        embeds in jit/vmap/``lax.scan`` with no host transfer per step.
+        """
+        return None
 
     # ---- stateful-RNG hooks (identity for counter-based backends) ----
     def init_aux(self, spec: EnsembleSpec) -> Any:
@@ -323,6 +355,10 @@ class Engine:
         self.chunk_size = chunk_size
         self.backend_opts = dict(backend_opts)
         self._runners: Dict[Tuple[Any, ...], ChunkRunner] = {}
+        # RL env executables (repro.env), cached under the same
+        # shape-semantic keys as the chunk runners: any scenario mixture of
+        # one shape trains against one compile.
+        self._env_traces: Dict[Tuple[Any, ...], Dict[Any, Any]] = {}
 
     @property
     def trace_count(self) -> int:
@@ -332,6 +368,7 @@ class Engine:
     def clear_cache(self) -> None:
         """Drop all cached executables (long-lived shape-sweep processes)."""
         self._runners.clear()
+        self._env_traces.clear()
 
     def _runner(self, spec, chunk: int) -> ChunkRunner:
         spec = EnsembleSpec.coerce(spec)
@@ -354,6 +391,21 @@ class Engine:
         chunk = chunk_size or self.chunk_size \
             or min(DEFAULT_CHUNK, spec.num_steps)
         return Session(self, spec, self._runner(spec, max(1, chunk)))
+
+    def env(self, spec: Union[EnsembleSpec, MarketConfig], **env_opts: Any):
+        """Open a pure-functional RL environment over this engine's backend.
+
+        Returns a :class:`repro.env.MarketEnv` whose step core is this
+        engine's single-step executable (the one :meth:`Session.step` uses)
+        and whose jitted step/rollout traces are cached on the engine under
+        the shape-semantic :meth:`EnsembleSpec.static_key` — two envs opened
+        on different scenario mixtures of the same shape share every
+        compile. ``env_opts`` are :class:`repro.env.MarketEnv` keyword
+        options (``obs=``, ``reward=``, ``horizon=``, ``auto_reset=``).
+        """
+        from repro.env.core import MarketEnv
+
+        return MarketEnv(spec, engine=self, **env_opts)
 
 
 class Session:
@@ -527,24 +579,12 @@ class Session:
     def _build_ext(self, actions: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         if actions is None:
             return None
-        if isinstance(actions, dict):
-            actions = ExternalOrders(actions["side_buy"], actions["price"],
-                                     actions["qty"])
-        side_buy, price, qty = actions
-        M, L = self.spec.num_markets, self.spec.num_levels
-        side = np.broadcast_to(np.asarray(side_buy, dtype=bool).reshape(-1),
-                               (M,))
-        tick = np.clip(
-            np.broadcast_to(np.asarray(price, dtype=np.int64).reshape(-1), (M,)),
-            0, L - 1)
-        lots = np.broadcast_to(
-            np.asarray(qty, dtype=np.float32).reshape(-1), (M,))
-        ext_buy = np.zeros((M, L), dtype=np.float32)
-        ext_ask = np.zeros((M, L), dtype=np.float32)
-        rows = np.arange(M)
-        ext_buy[rows, tick] = np.where(side, lots, np.float32(0.0))
-        ext_ask[rows, tick] = np.where(side, np.float32(0.0), lots)
-        return ext_buy, ext_ask
+        from repro.env import actions as actions_mod
+
+        orders = actions_mod.validate_actions(
+            actions, self.spec.num_markets, self.spec.num_levels)
+        return actions_mod.lower_actions(
+            orders, self.spec.num_markets, self.spec.num_levels, np)
 
     # ---- results ----
     def to_result(self, batch: StepBatch) -> SimResult:

@@ -125,6 +125,7 @@ def simulate_step(
     agent_chunk=None,
     params: Optional[MarketParams] = None,
     atype=None,
+    seed=None,
 ):
     """Advance all markets one step. Returns (MarketState, StepOutput).
 
@@ -146,6 +147,9 @@ def simulate_step(
     VMEM-footprint knob — bitwise-invisible; see :func:`bin_orders_onehot`).
     ``atype`` optionally carries the precomputed (step-invariant) per-market
     agent-type lattice so loop drivers hoist it out of the step loop.
+    ``seed`` optionally overrides the counter-RNG seed at runtime (traced
+    ok — see :func:`repro.core.agents.decide`); ``None`` keeps the
+    trace-static ``cfg.seed`` bitwise-unchanged.
     """
     if params is None:
         # Built with xp, not host numpy: Pallas kernel bodies reject
@@ -169,7 +173,7 @@ def simulate_step(
     agent_ids = xp.arange(cfg.num_agents, dtype=xp.int32)
     side_buy, price, qty = agents.decide(
         cfg, params, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp,
-        uniform_fn=uniform_fn, atype=atype,
+        uniform_fn=uniform_fn, atype=atype, seed=seed,
     )
     buy, sell = bin_orders(side_buy, price, qty)
 

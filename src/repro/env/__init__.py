@@ -1,0 +1,37 @@
+"""repro.env — pure-functional vectorized RL environments over the engine.
+
+Public surface:
+
+    from repro.env import MarketEnv, rollout
+    from repro.env.obs import MarketFeatures, BookWindow, StatsFeatures
+    from repro.env.rewards import PnLReward, SpreadCapture, InventoryPenalty
+
+See :mod:`repro.env.core` for the design notes.
+"""
+from repro.env.actions import lower_actions, validate_actions  # noqa: F401
+from repro.env.core import (  # noqa: F401
+    EnvState,
+    MarketEnv,
+    Portfolio,
+    RolloutBatch,
+    StepInfo,
+    rollout,
+    state_from_tree,
+    state_tree,
+)
+from repro.env.obs import (  # noqa: F401
+    BookWindow,
+    Composite,
+    MarketFeatures,
+    ObservationSpec,
+    PortfolioFeatures,
+    StatsFeatures,
+)
+from repro.env.rewards import (  # noqa: F401
+    InventoryPenalty,
+    PnLReward,
+    RewardContext,
+    RewardFn,
+    SpreadCapture,
+    Sum,
+)

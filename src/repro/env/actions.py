@@ -1,0 +1,148 @@
+"""Action validation + lowering for the RL surfaces.
+
+One external limit order per market, expressed as an
+:class:`repro.core.session.ExternalOrders` triple (``side_buy``, ``price``,
+``qty``), is *lowered* onto the reserved ``ext_buy``/``ext_ask`` slot of
+``simulate_step`` as a pair of float32[M, L] one-hot quantity grids. Both
+RL front doors — the stateful :meth:`Session.step` and the pure-functional
+:meth:`repro.env.MarketEnv.step` — share this module, so action semantics
+cannot drift between them.
+
+Validation is *eager*: malformed actions (market-count mismatch, off-grid
+price levels, negative quantities, non-integer price dtypes) raise a clear
+``ValueError`` at the API boundary instead of surfacing as a shape error
+deep inside a backend trace. Value checks (grid bounds, sign) run whenever
+the operands are concrete host arrays; under jit/vmap tracing the values
+are unknowable, so traced prices are additionally clipped to the grid
+during lowering — a concrete in-grid action lowers bitwise-identically
+with or without the clip.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import numpy as np
+
+from repro.core.session import ExternalOrders
+
+
+def _is_concrete(x: Any) -> bool:
+    """True when ``x`` is a concrete value whose entries can be inspected
+    (host scalars/arrays, or jax device arrays that are not tracers)."""
+    if isinstance(x, (int, float, bool, np.ndarray, np.generic, list,
+                      tuple)):
+        return True
+    try:
+        import jax
+
+        # Tracers subclass jax.Array — rule them out before accepting it.
+        if isinstance(x, jax.core.Tracer):
+            return False
+        return isinstance(x, jax.Array)
+    except ImportError:  # pragma: no cover - jax is a hard dep here
+        return False
+
+
+def _field(value: Any, name: str, num_markets: int) -> Any:
+    """Shape-check one action field: scalar or [M] (or [M, 1])."""
+    shape = np.shape(value)
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    if size not in (1, num_markets):
+        raise ValueError(
+            f"actions.{name} must broadcast to [{num_markets}] (one order "
+            f"per market); got shape {shape} ({size} entries) — market "
+            f"mismatch")
+    if len(shape) > 2 or (len(shape) == 2 and shape[1] != 1):
+        raise ValueError(
+            f"actions.{name} must be a scalar, [{num_markets}] or "
+            f"[{num_markets}, 1] array; got shape {shape}")
+    return value
+
+
+def validate_actions(actions: Any, num_markets: int,
+                     num_levels: int) -> ExternalOrders:
+    """Normalize + eagerly validate an action triple.
+
+    Accepts an :class:`ExternalOrders`, any ``(side_buy, price, qty)``
+    3-sequence, or a mapping with those keys. Raises ``ValueError`` on a
+    market-count mismatch, a price off the ``[0, num_levels)`` grid, a
+    negative quantity, or a floating-point price with a fractional part
+    (all value checks apply only to concrete host operands — traced values
+    pass through and are clipped during lowering).
+    """
+    if isinstance(actions, dict):
+        try:
+            actions = ExternalOrders(actions["side_buy"], actions["price"],
+                                     actions["qty"])
+        except KeyError as exc:
+            raise ValueError(
+                f"action mapping is missing key {exc.args[0]!r}; need "
+                f"side_buy/price/qty") from None
+    if not isinstance(actions, ExternalOrders):
+        try:
+            side_buy, price, qty = actions
+        except (TypeError, ValueError):
+            raise ValueError(
+                "actions must be an ExternalOrders, a (side_buy, price, "
+                f"qty) triple, or a mapping with those keys; got "
+                f"{type(actions).__name__}") from None
+        actions = ExternalOrders(side_buy, price, qty)
+
+    side_buy = _field(actions.side_buy, "side_buy", num_markets)
+    price = _field(actions.price, "price", num_markets)
+    qty = _field(actions.qty, "qty", num_markets)
+
+    if _is_concrete(price):
+        p = np.asarray(price)
+        if np.issubdtype(p.dtype, np.floating) and (p != np.floor(p)).any():
+            raise ValueError(
+                "actions.price must be integer tick indices; got fractional "
+                f"values (e.g. {float(p.reshape(-1)[0])})")
+        p = p.astype(np.int64)
+        if ((p < 0) | (p >= num_levels)).any():
+            bad = np.unique(p[(p < 0) | (p >= num_levels)])[:8]
+            raise ValueError(
+                f"actions.price must lie on the grid [0, {num_levels}); "
+                f"got off-grid level(s) {bad.tolist()} — level mismatch")
+    if _is_concrete(qty):
+        q = np.asarray(qty, dtype=np.float32)
+        if (q < 0).any():
+            bad = np.unique(q[q < 0])[:8]
+            raise ValueError(
+                f"actions.qty must be >= 0 lots (0 is a no-op order); got "
+                f"negative quantit{'y' if bad.size == 1 else 'ies'} "
+                f"{bad.tolist()}")
+    return actions
+
+
+def lower_actions(orders: ExternalOrders, num_markets: int, num_levels: int,
+                  xp) -> Tuple[Any, Any]:
+    """Lower a validated order triple onto the reserved flow slot.
+
+    Returns ``(ext_buy, ext_ask)`` float32[M, L] quantity grids — exactly
+    one nonzero entry per market row (on the order's side, at its tick) —
+    built branch-free with ``where`` selects so the same code lowers
+    concrete host actions and traced in-graph policy outputs. Exact f32
+    placement keeps the injection bitwise-deterministic on every backend.
+
+    Traced values cannot be value-checked, so they are sanitized here the
+    way :func:`validate_actions` would have rejected them: prices round to
+    the nearest tick and clip to the grid, quantities clamp at 0 — all
+    bitwise no-ops for actions that pass the concrete validation.
+    """
+    M, L = num_markets, num_levels
+    f32 = xp.float32
+    side = xp.reshape(xp.asarray(orders.side_buy).astype(bool), (-1,))
+    side = xp.broadcast_to(side, (M,))[:, None]                  # bool[M, 1]
+    price = xp.asarray(orders.price)
+    if np.issubdtype(np.dtype(price.dtype), np.floating):
+        price = xp.round(price)  # nearest tick, not truncation toward 0
+    tick = xp.reshape(price.astype(xp.int32), (-1,))
+    tick = xp.clip(xp.broadcast_to(tick, (M,)), 0, L - 1)[:, None]
+    lots = xp.reshape(xp.asarray(orders.qty).astype(f32), (-1,))
+    lots = xp.maximum(xp.broadcast_to(lots, (M,)), f32(0.0))[:, None]
+    onehot = xp.arange(L, dtype=xp.int32)[None, :] == tick       # bool[M, L]
+    zero = f32(0.0)
+    ext_buy = xp.where(onehot & side, lots, zero).astype(f32)
+    ext_ask = xp.where(onehot & ~side, lots, zero).astype(f32)
+    return ext_buy, ext_ask

@@ -1,0 +1,583 @@
+"""Pure-functional vectorized RL environment over the persistent engine.
+
+The Session API (``repro.core.session``) is stateful: ``Session.step``
+crosses the host boundary every step, so a policy-in-the-loop rollout pays
+a device round-trip per step — exactly the launch-per-step regime the
+paper's persistent engine eliminates for the simulator itself. This module
+is the RL front door to the persistent regime: a gymnax-style
+pure-functional environment whose entire rollout — policy included —
+compiles to **one** device computation:
+
+    env = Engine("pallas-kinetic").env(spec)
+    state, obs = env.reset()
+    state, obs, reward, done, info = env.step(state, actions)
+    final, traj = rollout(env, policy_fn, n_steps)   # one lax.scan, one trace
+
+Design:
+
+  * :class:`EnvState` is a pytree wrapping the engine's ``MarketState`` /
+    ``MarketParams`` (+ portfolio accounting, step cursor, optional
+    ``MarketStats`` accumulators and runtime-seed/aux leaves), so
+    ``MarketEnv.step`` is a pure ``(state, actions) -> (state, obs, reward,
+    done, info)`` function compatible with ``jax.jit`` / ``jax.vmap`` /
+    ``jax.lax.scan``.
+  * The step core is each backend's :meth:`ChunkRunner.env_step_fn` — the
+    *same* ``simulate_step`` entry the Session's chunked run/stream path
+    compiles — so the two APIs cannot drift: a zero-action env trajectory
+    is bitwise-identical to ``Session.run`` on every backend, and on the
+    Pallas engines the env composes with ``devices=``/``mesh=`` sharding.
+  * Actions are per-market external limit orders lowered onto the reserved
+    ``ext_buy``/``ext_ask`` incoming-flow slot (:mod:`repro.env.actions`);
+    ``actions=None`` injects exact zeros — a bitwise no-op.
+  * Observations and rewards are pluggable frozen specs
+    (:mod:`repro.env.obs` / :mod:`repro.env.rewards`).
+  * ``done`` fires when the episode cursor reaches the horizon
+    (``spec.num_steps`` by default); with ``auto_reset=True`` the state is
+    re-seeded **in-graph** (branch-free ``where`` selects) from the
+    ensemble's per-market opening books, which ride in ``EnvState`` as the
+    ``reset_market`` operand — so one compiled rollout serves any scenario
+    mixture, auto-resets included.
+  * Jitted step/rollout executables are cached on the :class:`Engine`
+    under the shape-semantic ``EnsembleSpec.static_key()`` — training
+    against a different scenario mixture of the same shape reuses every
+    warm trace (``Engine.trace_count`` stays flat).
+
+Episodes are deterministic replays of the configured scenario: the counter
+RNG keys on the in-episode step, so an auto-reset episode re-fires its
+scenario events (a flash-crash shocks every episode) and two episodes
+differ only through the policy's actions. Vary randomness across parallel
+rollouts by vmapping over the runtime ``seed`` operand of :meth:`reset`
+(counter-RNG jax backends).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import auction
+from repro.core import stats as stats_mod
+from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec, MarketParams
+from repro.core.session import Engine
+from repro.core.stats import MarketStats
+from repro.core.step import MarketState, StepOutput
+from repro.env import actions as actions_mod
+from repro.env.obs import MarketFeatures, ObservationSpec
+from repro.env.rewards import PnLReward, RewardContext, RewardFn
+
+
+class Portfolio(NamedTuple):
+    """Per-market accounting for the external-order agent; f32[M, 1] each."""
+
+    cash: Any       # cumulative signed fill cash flows
+    inventory: Any  # net lots held (buys - sells)
+    equity: Any     # cash + inventory * mid (mark-to-market)
+
+
+class EnvState(NamedTuple):
+    """The full environment state as a pytree (jit/vmap/scan carrier).
+
+    ``last_out`` is the :class:`StepOutput` that produced ``market`` (a
+    synthetic zero-volume output at reset), kept so observations are a pure
+    function of the state. ``reset_market`` carries the ensemble's
+    per-market opening books as runtime operands — the in-graph auto-reset
+    target — so one compiled step serves any scenario mixture. ``seed`` is
+    ``None`` (trace-static RNG seed) or a uint32 scalar override; ``aux``
+    is the stateful host RNG of the ``numpy-pcg64`` reference (``None``
+    for every counter-RNG backend).
+    """
+
+    market: MarketState
+    last_out: StepOutput
+    reset_market: MarketState
+    params: MarketParams
+    t: Any                      # int32 scalar — step cursor in the episode
+    portfolio: Portfolio
+    stats: Optional[MarketStats]
+    seed: Any
+    aux: Any
+
+
+class StepInfo(NamedTuple):
+    """Diagnostics for one transition (pre-auto-reset values)."""
+
+    price: Any     # f32[M, 1] clearing price (last price when no cross)
+    volume: Any    # f32[M, 1] total transacted volume
+    mid: Any       # f32[M, 1] pre-clearing mid
+    fill_buy: Any  # f32[M, 1] external buy lots filled
+    fill_ask: Any  # f32[M, 1] external sell lots filled
+
+
+class RolloutBatch(NamedTuple):
+    """Stacked per-step outputs of a :func:`rollout`."""
+
+    obs: Any       # f32[S, M, D]
+    reward: Any    # f32[S, M]
+    done: Any      # bool[S]
+    price: Any     # f32[M, S] — StepBatch-layout paths (bitwise-comparable
+    volume: Any    # f32[M, S]   to Session.run on every backend)
+    mid: Any       # f32[M, S]
+    fill_buy: Any  # f32[M, S]
+    fill_ask: Any  # f32[M, S]
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.reward.shape[0])
+
+    def to_numpy(self) -> "RolloutBatch":
+        return RolloutBatch(*(np.asarray(x) for x in self))
+
+
+class MarketEnv:
+    """Gymnax-style pure-functional environment (see module docstring).
+
+    Obtain one from :meth:`Engine.env` (preferred — shares the engine's
+    executable caches) or construct directly with a backend name. The env
+    object itself is immutable configuration; all mutable simulation state
+    lives in the :class:`EnvState` values returned by :meth:`reset` /
+    :meth:`step`.
+    """
+
+    def __init__(self, spec: Union[EnsembleSpec, MarketConfig],
+                 backend: str = "jax-scan", *,
+                 obs: Optional[ObservationSpec] = None,
+                 reward: Optional[RewardFn] = None,
+                 horizon: Optional[int] = None,
+                 auto_reset: bool = True,
+                 engine: Optional[Engine] = None,
+                 **backend_opts: Any):
+        if engine is not None and backend_opts:
+            raise ValueError(
+                "pass backend options to the Engine when engine= is given")
+        self.spec = EnsembleSpec.coerce(spec)
+        self._engine = engine if engine is not None \
+            else Engine(backend, **backend_opts)
+        self._runner = self._engine._runner(self.spec, 1)
+        if self._runner.stats_only:
+            raise ValueError(
+                "stats_only engines have no per-step outputs to observe; "
+                "open the env on a default engine (StatsFeatures carries "
+                "its own in-graph accumulators)")
+        self._step_core = self._runner.env_step_fn()
+        if self._step_core is None:
+            raise ValueError(
+                f"backend {self._engine.backend!r} exposes no functional "
+                "env step core")
+        self.obs_spec = obs if obs is not None else MarketFeatures()
+        self.reward_fn = reward if reward is not None else PnLReward()
+        self.horizon = int(horizon) if horizon is not None \
+            else self.spec.num_steps
+        if self.horizon <= 0:
+            raise ValueError(f"horizon must be >= 1, got {self.horizon}")
+        self.auto_reset = bool(auto_reset)
+        self._traceable = self._runner.env_traceable
+        # Engine-level executable cache, keyed shape-semantically: envs on
+        # different scenario mixtures of one shape share every warm trace.
+        key = (self.spec.static_key(), self.obs_spec, self.reward_fn,
+               self.horizon, self.auto_reset)
+        self._cache = self._engine._env_traces.setdefault(key, {})
+        xp = self._runner.xp
+        M, L = self.spec.num_markets, self.spec.num_levels
+        self._zero_ext = (xp.zeros((M, L), xp.float32),
+                          xp.zeros((M, L), xp.float32))
+
+    # ---- introspection ----
+    @property
+    def backend(self) -> str:
+        return self._engine.backend
+
+    @property
+    def engine(self) -> Engine:
+        return self._engine
+
+    @property
+    def num_markets(self) -> int:
+        return self.spec.num_markets
+
+    def obs_size(self) -> int:
+        """Feature dimension D of the observation block."""
+        return self.obs_spec.size(self.spec)
+
+    # ---- functional API ----
+    def reset(self, seed: Any = None) -> Tuple[EnvState, Any]:
+        """Fresh :class:`EnvState` + opening observation.
+
+        ``seed`` optionally overrides the RNG seed at *runtime* (scalar,
+        traced ok — ``jax.vmap(env.reset)(seeds)`` batches whole rollouts
+        over seeds in one trace). Runtime seeds require a counter-RNG
+        backend whose step core takes the seed as an operand
+        (``env_runtime_seed``); the Pallas kernels bake the seed into the
+        trace and the PCG64 reference derives its stream at init, so both
+        reject an override with a clear error — open the env on a spec
+        carrying the desired seed instead. ``seed=None`` (or a concrete
+        value equal to ``spec.seed``) is bitwise-identical to the baked
+        stream.
+        """
+        runner, xp = self._runner, self._runner.xp
+        if seed is not None and not runner.env_runtime_seed:
+            raise ValueError(
+                f"backend {self._engine.backend!r} compiles the RNG seed "
+                "into its executable; open the env on a spec with "
+                f"seed={seed} instead of passing a runtime override")
+        market = runner.init_state(self.spec)
+        reset_market = runner.init_state(self.spec)
+        params = runner.params_to_device(self.spec.params)
+        M = self.spec.num_markets
+        zeros = xp.zeros((M, 1), xp.float32)
+        portfolio = Portfolio(cash=zeros, inventory=zeros, equity=zeros)
+        stats = (stats_mod.init_stats(M, xp)
+                 if self.obs_spec.needs_stats else None)
+        seed_leaf = None if seed is None \
+            else xp.asarray(seed).astype(xp.uint32)
+        state = EnvState(
+            market=market, last_out=self._reset_out(market, xp),
+            reset_market=reset_market, params=params, t=xp.int32(0),
+            portfolio=portfolio, stats=stats, seed=seed_leaf,
+            aux=runner.init_aux(self.spec))
+        return state, self.observe(state)
+
+    def observe(self, state: EnvState) -> Any:
+        """float32[M, D] observation of ``state`` (pure; traced ok)."""
+        return self.obs_spec.observe(self.spec, state.market, state.last_out,
+                                     state.portfolio, state.stats,
+                                     self._runner.xp)
+
+    def step(self, state: EnvState, actions: Any = None,
+             ) -> Tuple[EnvState, Any, Any, Any, StepInfo]:
+        """Advance one step: ``(state, obs, reward, done, info)``.
+
+        ``actions`` is an :class:`repro.core.session.ExternalOrders` (or
+        triple / mapping — one external limit order per market), validated
+        eagerly; ``None`` advances the markets untouched, bitwise-identical
+        to :meth:`Session.run`. On traceable backends the transition runs
+        as one cached jitted executable (shared engine-wide per static
+        shape), and the method itself embeds in user jit/vmap transforms.
+        """
+        eb, ea = self._lower(actions)
+        if self._traceable:
+            return self._jitted_step()(state, eb, ea)
+        return self._step_impl(state, eb, ea)
+
+    # ---- internals ----
+    def _lower(self, actions: Any) -> Tuple[Any, Any]:
+        if actions is None:
+            return self._zero_ext
+        M, L = self.spec.num_markets, self.spec.num_levels
+        orders = actions_mod.validate_actions(actions, M, L)
+        return actions_mod.lower_actions(orders, M, L, self._runner.xp)
+
+    def _reset_out(self, market: MarketState, xp) -> StepOutput:
+        """Synthetic zero-volume output describing a freshly reset state."""
+        _, _, mid = auction.best_quotes(market.bid, market.ask,
+                                        market.last_price, xp)
+        return StepOutput(price=xp.asarray(market.last_price, xp.float32),
+                          volume=xp.zeros_like(mid), mid=mid)
+
+    def _jitted_step(self) -> Callable:
+        fn = self._cache.get("step")
+        if fn is None:
+            import jax
+
+            runner = self._runner
+
+            def counted(state, eb, ea):
+                runner._trace_count += 1  # python side effect: trace-time
+                return self._step_impl(state, eb, ea)
+
+            fn = self._cache["step"] = jax.jit(counted)
+        return fn
+
+    def _step_impl(self, state: EnvState, eb: Any, ea: Any,
+                   ) -> Tuple[EnvState, Any, Any, Any, StepInfo]:
+        """The pure transition (shared by eager, jit, and scan paths)."""
+        xp = self._runner.xp
+        f32 = xp.float32
+        market, out, aux = self._step_core(
+            state.market, state.params, state.t, eb, ea, state.seed,
+            state.aux)
+
+        # Fill attribution (price-priority, no rationing — rewards.py).
+        executed = xp.asarray(out.volume, f32) > f32(0.0)          # [M, 1]
+        pstar = xp.asarray(out.price, f32)                         # [M, 1]
+        levels = xp.arange(self.spec.num_levels, dtype=f32)[None, :]
+        zero = f32(0.0)
+        fill_buy = xp.where(
+            executed,
+            xp.sum(xp.where(levels >= pstar, eb, zero), axis=-1,
+                   keepdims=True),
+            xp.zeros_like(pstar))
+        fill_ask = xp.where(
+            executed,
+            xp.sum(xp.where(levels <= pstar, ea, zero), axis=-1,
+                   keepdims=True),
+            xp.zeros_like(pstar))
+
+        prev = state.portfolio
+        cash = prev.cash - fill_buy * pstar + fill_ask * pstar
+        inventory = prev.inventory + fill_buy - fill_ask
+        equity = cash + inventory * xp.asarray(out.mid, f32)
+        portfolio = Portfolio(cash=cash, inventory=inventory, equity=equity)
+        reward = self.reward_fn(RewardContext(
+            fill_buy=fill_buy, fill_ask=fill_ask, fill_price=pstar, out=out,
+            prev=prev, portfolio=portfolio, xp=xp))
+
+        stats = state.stats
+        if stats is not None:
+            stats = stats_mod.accumulate(stats, out.mid, out.volume, True, xp)
+
+        t_next = xp.asarray(state.t).astype(xp.int32) + xp.int32(1)
+        done = t_next >= xp.int32(self.horizon)
+        info = StepInfo(price=out.price, volume=out.volume, mid=out.mid,
+                        fill_buy=fill_buy, fill_ask=fill_ask)
+
+        out_for_obs = out
+        if self.auto_reset:
+            # Branch-free in-graph episode reset from the carried opening
+            # books: one trace serves done and not-done steps alike.
+            market = MarketState(*(xp.where(done, r, c) for r, c
+                                   in zip(state.reset_market, market)))
+            portfolio = Portfolio(*(xp.where(done, xp.zeros_like(c), c)
+                                    for c in portfolio))
+            if stats is not None:
+                fresh = stats_mod.init_stats(self.spec.num_markets, xp)
+                stats = MarketStats(*(xp.where(done, r, c) for r, c
+                                      in zip(fresh, stats)))
+            reset_out = self._reset_out(state.reset_market, xp)
+            out_for_obs = StepOutput(*(xp.where(done, r, c) for r, c
+                                       in zip(reset_out, out)))
+            t_next = xp.where(done, xp.int32(0), t_next)
+
+        new_state = EnvState(
+            market=market, last_out=out_for_obs,
+            reset_market=state.reset_market, params=state.params, t=t_next,
+            portfolio=portfolio, stats=stats, seed=state.seed, aux=aux)
+        obs = self.observe(new_state)
+        return new_state, obs, reward, done, info
+
+    # ---- snapshot / checkpoint ----
+    def snapshot(self, state: EnvState) -> Dict[str, Any]:
+        """Exact host-side capture of an :class:`EnvState` (see
+        :meth:`restore`); wire format shared with ``CheckpointManager``
+        through :func:`state_tree` / :func:`state_from_tree`."""
+        runner = self._runner
+        snap: Dict[str, Any] = {
+            "market": _tuple_to_dict(state.market),
+            "last_out": _tuple_to_dict(state.last_out),
+            "reset_market": _tuple_to_dict(state.reset_market),
+            "params": _tuple_to_dict(state.params),
+            "portfolio": _tuple_to_dict(state.portfolio),
+            "t": int(np.asarray(state.t)),
+            "rng": runner.aux_state(state.aux),
+            "static_seed": self.spec.seed,
+            "num_agents": self.spec.num_agents,
+            "horizon": self.horizon,
+        }
+        if state.stats is not None:
+            snap["stats"] = _tuple_to_dict(state.stats)
+        if state.seed is not None:
+            snap["seed"] = int(np.asarray(state.seed))
+        return snap
+
+    def restore(self, snap: Dict[str, Any]) -> EnvState:
+        """Rebuild a live :class:`EnvState` from :meth:`snapshot` output.
+
+        The snapshot is device-layout agnostic (arrays are re-placed via
+        the runner, sharded runners re-shard them); a static mismatch —
+        the snapshot was taken under a different compiled seed or agent
+        count — is rejected loudly, mirroring ``Session.restore``.
+        """
+        runner, xp = self._runner, self._runner.xp
+        for field, have in (("static_seed", self.spec.seed),
+                            ("num_agents", self.spec.num_agents)):
+            got = snap.get(field)
+            if got is not None and int(got) != have:
+                raise ValueError(
+                    f"snapshot was taken under {field}={int(got)} but this "
+                    f"env's executable is compiled for {field}={have}")
+        market = runner.to_device(_dict_to_tuple(MarketState, snap["market"]))
+        reset_market = runner.to_device(
+            _dict_to_tuple(MarketState, snap["reset_market"]))
+        params = runner.params_to_device(
+            _dict_to_tuple(MarketParams, snap["params"]))
+        last = _dict_to_tuple(StepOutput, snap["last_out"])
+        last = StepOutput(*(xp.asarray(np.asarray(x), xp.float32)
+                            for x in last))
+        port = _dict_to_tuple(Portfolio, snap["portfolio"])
+        port = Portfolio(*(xp.asarray(np.asarray(x), xp.float32)
+                           for x in port))
+        stats = None
+        if snap.get("stats") is not None:
+            stats = runner.stats_to_device(
+                _dict_to_tuple(MarketStats, snap["stats"]))
+        elif self.obs_spec.needs_stats:
+            raise ValueError(
+                "snapshot carries no MarketStats accumulators but this "
+                "env's observation spec needs them")
+        rng = snap.get("rng")
+        aux = (runner.restore_aux(rng) if rng is not None
+               else runner.init_aux(self.spec))
+        seed = snap.get("seed")
+        seed_leaf = None if seed is None \
+            else xp.asarray(np.uint32(int(seed) & 0xFFFFFFFF))
+        return EnvState(market=market, last_out=last,
+                        reset_market=reset_market, params=params,
+                        t=xp.int32(int(snap["t"])), portfolio=port,
+                        stats=stats, seed=seed_leaf, aux=aux)
+
+    def save_checkpoint(self, manager, state: EnvState,
+                        step: Optional[int] = None) -> int:
+        """Persist an :class:`EnvState` through a ``CheckpointManager``."""
+        step = int(np.asarray(state.t)) if step is None else int(step)
+        manager.save(step, state_tree(self.snapshot(state)))
+        manager.wait()
+        return step
+
+    def restore_checkpoint(self, manager,
+                           step: Optional[int] = None) -> EnvState:
+        """Load an :class:`EnvState` from a ``CheckpointManager``."""
+        tree = manager.restore(step)
+        if tree is None:
+            raise FileNotFoundError(f"no checkpoint found in {manager.dir}")
+        return self.restore(state_from_tree(tree))
+
+
+# ---------------------------------------------------------------------------
+# Rollouts: the whole policy-in-the-loop trajectory as one lax.scan.
+# ---------------------------------------------------------------------------
+
+def rollout(env: MarketEnv, policy_fn: Optional[Callable] = None,
+            n_steps: Optional[int] = None, *, state: Optional[EnvState] = None,
+            seed: Any = None) -> Tuple[EnvState, RolloutBatch]:
+    """Roll ``policy_fn`` through ``env`` for ``n_steps`` steps.
+
+    ``policy_fn(obs, t) -> actions`` maps the float32[M, D] observation and
+    the int32 step cursor to per-market actions (or ``None`` to hold); it
+    must be traceable on traceable backends, where the **entire rollout —
+    environment and policy — runs as a single ``lax.scan`` inside one
+    jitted executable**: one trace (cached engine-wide per static shape and
+    per ``(policy_fn, n_steps)``), zero per-step host transfers. Host-loop
+    backends (NumPy references) run the same semantics as a python loop.
+    Pass a *stable* function object — a fresh lambda per call defeats the
+    executable cache and retraces.
+
+    ``n_steps`` defaults to the env horizon; ``state`` resumes an existing
+    rollout (otherwise :meth:`MarketEnv.reset` with ``seed``). Returns the
+    final :class:`EnvState` and a :class:`RolloutBatch` of stacked
+    per-step outputs whose ``price``/``volume``/``mid`` paths are laid out
+    ``[M, S]`` — directly bitwise-comparable to ``Session.run`` batches.
+    """
+    n = env.horizon if n_steps is None else int(n_steps)
+    if n < 0:
+        raise ValueError(f"n_steps must be >= 0, got {n}")
+    if state is None:
+        state, obs = env.reset(seed=seed)
+    else:
+        obs = env.observe(state)
+    if not env._traceable:
+        return _rollout_host(env, policy_fn, n, state, obs)
+    fn = env._cache.get(("rollout", policy_fn, n))
+    if fn is None:
+        fn = env._cache[("rollout", policy_fn, n)] = _build_rollout(
+            env, policy_fn, n)
+    return fn(state, obs)
+
+
+def _path(x) -> Any:
+    """[S, M, 1] stacked columns -> [M, S] StepBatch layout."""
+    return x[..., 0].T
+
+
+def _build_rollout(env: MarketEnv, policy_fn: Optional[Callable], n: int):
+    import jax
+
+    runner = env._runner
+
+    def body(carry, _):
+        state, obs = carry
+        actions = policy_fn(obs, state.t) if policy_fn is not None else None
+        eb, ea = env._lower(actions)
+        state, obs, reward, done, info = env._step_impl(state, eb, ea)
+        return (state, obs), (obs, reward, done, info)
+
+    def run(state, obs):
+        runner._trace_count += 1  # python side effect: trace-time only
+        (state, obs), (obs_path, rew, done, infos) = jax.lax.scan(
+            body, (state, obs), None, length=n)
+        batch = RolloutBatch(
+            obs=obs_path, reward=rew, done=done,
+            price=_path(infos.price), volume=_path(infos.volume),
+            mid=_path(infos.mid), fill_buy=_path(infos.fill_buy),
+            fill_ask=_path(infos.fill_ask))
+        return state, batch
+
+    return jax.jit(run)
+
+
+def _rollout_host(env: MarketEnv, policy_fn: Optional[Callable], n: int,
+                  state: EnvState, obs: Any) -> Tuple[EnvState, RolloutBatch]:
+    obs_path, rewards, dones, infos = [], [], [], []
+    for _ in range(n):
+        actions = policy_fn(obs, state.t) if policy_fn is not None else None
+        eb, ea = env._lower(actions)
+        state, obs, reward, done, info = env._step_impl(state, eb, ea)
+        obs_path.append(np.asarray(obs))
+        rewards.append(np.asarray(reward))
+        dones.append(bool(done))
+        infos.append(info)
+    M = env.spec.num_markets
+    def stack(parts, width):
+        if parts:
+            return np.stack([np.asarray(p) for p in parts])
+        return np.zeros((0,) + width, np.float32)
+    cols = {f: [getattr(i, f) for i in infos] for f in StepInfo._fields}
+    def path(field):
+        if not infos:
+            return np.zeros((M, 0), np.float32)
+        return np.concatenate([np.asarray(c) for c in cols[field]], axis=-1)
+    batch = RolloutBatch(
+        obs=stack(obs_path, (M, env.obs_size())),
+        reward=stack(rewards, (M,)),
+        done=np.asarray(dones, bool),
+        price=path("price"), volume=path("volume"), mid=path("mid"),
+        fill_buy=path("fill_buy"), fill_ask=path("fill_ask"))
+    return state, batch
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint wire format (CheckpointManager pytrees).
+# ---------------------------------------------------------------------------
+
+#: snapshot keys holding dicts of arrays (saved as array subtrees).
+_ARRAY_SUBTREES = ("market", "last_out", "reset_market", "params",
+                   "portfolio", "stats")
+
+
+def _tuple_to_dict(t) -> Dict[str, np.ndarray]:
+    return {f: np.asarray(v) for f, v in zip(type(t)._fields, t)}
+
+
+def _dict_to_tuple(cls, d: Dict[str, Any]):
+    return cls(*(np.asarray(d[f]) for f in cls._fields))
+
+
+def state_tree(snap: Dict[str, Any]) -> Dict[str, Any]:
+    """Pack a :meth:`MarketEnv.snapshot` dict into a checkpointable pytree
+    (array subtrees + one JSON meta leaf), mirroring the Session wire
+    format in :mod:`repro.checkpoint.manager`."""
+    meta = {k: v for k, v in snap.items() if k not in _ARRAY_SUBTREES}
+    tree: Dict[str, Any] = {"env_meta": np.asarray(json.dumps(meta))}
+    for sub in _ARRAY_SUBTREES:
+        if snap.get(sub) is not None:
+            tree[sub] = {k: np.asarray(v) for k, v in snap[sub].items()}
+    return tree
+
+
+def state_from_tree(tree: Dict[str, Any]) -> Dict[str, Any]:
+    """Inverse of :func:`state_tree` (for :meth:`MarketEnv.restore`)."""
+    snap: Dict[str, Any] = dict(json.loads(str(tree["env_meta"])))
+    for sub in _ARRAY_SUBTREES:
+        if sub in tree:
+            snap[sub] = dict(tree[sub])
+    return snap

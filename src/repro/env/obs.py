@@ -1,0 +1,178 @@
+"""Pluggable observation builders for :class:`repro.env.MarketEnv`.
+
+An :class:`ObservationSpec` is a frozen (hashable — it participates in the
+engine's env-trace cache key) dataclass mapping the current environment
+state to a float32 ``[M, D]`` feature block, built exclusively from
+xp-polymorphic array ops so one spec serves every backend and embeds in
+jit/vmap/``lax.scan`` rollouts:
+
+  * :class:`MarketFeatures`   — mid / spread / book imbalance / last trade /
+    cleared volume (D = 5), the default microstructure summary;
+  * :class:`BookWindow`       — raw book-depth window of ``2·depth`` bid and
+    ask quantity levels centred on the rounded mid (D = 4·depth);
+  * :class:`PortfolioFeatures`— the acting agent's cash / inventory /
+    mark-to-market equity (D = 3);
+  * :class:`StatsFeatures`    — running :class:`repro.core.stats.MarketStats`
+    moments (count, mean/var of the mid, extremes, total volume; D = 6).
+    Specs with ``needs_stats`` make the env carry the accumulators in
+    :class:`repro.env.core.EnvState` and update them in-graph each step;
+  * :class:`Composite`        — concatenation of child specs along D.
+
+Every feature is a deterministic elementwise map of already
+bitwise-reproducible engine outputs, so observations inherit the engine's
+cross-backend reproducibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+from repro.core import auction
+from repro.core.params import EnsembleSpec
+from repro.core.stats import MarketStats
+from repro.core.step import MarketState, StepOutput
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservationSpec:
+    """Base observation builder: subclasses implement :meth:`observe`."""
+
+    #: When True the env carries (and updates in-graph) per-market
+    #: ``MarketStats`` accumulators for this spec to read.
+    needs_stats = False
+
+    def size(self, spec: EnsembleSpec) -> int:
+        """Feature dimension D for a given ensemble spec."""
+        raise NotImplementedError
+
+    def observe(self, spec: EnsembleSpec, market: MarketState,
+                out: StepOutput, portfolio: "Portfolio",
+                stats: Optional[MarketStats], xp) -> Any:
+        """float32[M, D] features of the current state.
+
+        ``out`` is the step that *produced* ``market`` (at reset: a
+        synthetic zero-volume output whose mid is the opening mid).
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketFeatures(ObservationSpec):
+    """[mid, spread, book imbalance, last trade price, cleared volume]."""
+
+    def size(self, spec: EnsembleSpec) -> int:
+        return 5
+
+    def observe(self, spec, market, out, portfolio, stats, xp):
+        f32 = xp.float32
+        bb, ba, _ = auction.best_quotes(market.bid, market.ask,
+                                        market.last_price, xp)
+        # Empty-side sentinels (bb=-1 / ba=L) make the raw spread ba-bb;
+        # it degrades gracefully (wide) instead of branching.
+        spread = (ba - bb).astype(f32)
+        depth_b = xp.sum(market.bid, axis=-1, keepdims=True)
+        depth_a = xp.sum(market.ask, axis=-1, keepdims=True)
+        denom = xp.maximum(depth_b + depth_a, f32(1.0))
+        imbalance = (depth_b - depth_a) / denom
+        return xp.concatenate(
+            [xp.asarray(out.mid, dtype=f32), spread, imbalance,
+             xp.asarray(market.last_price, dtype=f32),
+             xp.asarray(out.volume, dtype=f32)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BookWindow(ObservationSpec):
+    """Book-depth window: bid+ask quantities on ``2·depth`` ticks around
+    the rounded mid (edge ticks repeat at the grid boundary)."""
+
+    depth: int = 4
+
+    def size(self, spec: EnsembleSpec) -> int:
+        return 4 * self.depth
+
+    def observe(self, spec, market, out, portfolio, stats, xp):
+        L = spec.num_levels
+        d = self.depth
+        centre = xp.clip(xp.round(xp.asarray(out.mid, dtype=xp.float32)),
+                         xp.float32(0.0),
+                         xp.float32(L - 1)).astype(xp.int32)  # [M, 1]
+        offsets = xp.arange(2 * d, dtype=xp.int32)[None, :] - xp.int32(d)
+        idx = xp.clip(centre + offsets, 0, L - 1)             # [M, 2d]
+        bid_win = xp.take_along_axis(market.bid, idx, axis=-1)
+        ask_win = xp.take_along_axis(market.ask, idx, axis=-1)
+        return xp.concatenate([bid_win, ask_win], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioFeatures(ObservationSpec):
+    """The acting agent's [cash, inventory, mark-to-market equity]."""
+
+    def size(self, spec: EnsembleSpec) -> int:
+        return 3
+
+    def observe(self, spec, market, out, portfolio, stats, xp):
+        f32 = xp.float32
+        return xp.concatenate(
+            [xp.asarray(portfolio.cash, dtype=f32),
+             xp.asarray(portfolio.inventory, dtype=f32),
+             xp.asarray(portfolio.equity, dtype=f32)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsFeatures(ObservationSpec):
+    """Running-moment features from the carried ``MarketStats``:
+    [count, mean mid, variance of mid, min mid, max mid, total volume].
+
+    The mean/variance divisions are guarded f32 in-graph reductions (count
+    0 reads as mean 0 / var 0); min/max start at ±inf and are clamped to 0
+    until the first accumulated step.
+    """
+
+    needs_stats = True
+
+    def size(self, spec: EnsembleSpec) -> int:
+        return 6
+
+    def observe(self, spec, market, out, portfolio, stats, xp):
+        f32 = xp.float32
+        if stats is None:
+            raise ValueError(
+                "StatsFeatures needs the env to carry MarketStats "
+                "accumulators (MarketEnv enables them automatically)")
+        count = xp.asarray(stats.count, dtype=f32)
+        seen = count > f32(0.0)
+        denom = xp.maximum(count, f32(1.0))
+        mean = xp.asarray(stats.sum_mid, f32) / denom
+        var = xp.maximum(
+            xp.asarray(stats.sumsq_mid, f32) / denom - mean * mean,
+            f32(0.0))
+        zero = xp.zeros_like(count)
+        mn = xp.where(seen, xp.asarray(stats.min_mid, f32), zero)
+        mx = xp.where(seen, xp.asarray(stats.max_mid, f32), zero)
+        return xp.concatenate(
+            [count, mean, var, mn, mx,
+             xp.asarray(stats.sum_volume, dtype=f32)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Composite(ObservationSpec):
+    """Concatenation of child observation specs along the feature axis."""
+
+    children: Tuple[ObservationSpec, ...] = ()
+
+    def __post_init__(self):
+        if not self.children:
+            raise ValueError("Composite needs at least one child spec")
+        object.__setattr__(self, "children", tuple(self.children))
+
+    @property
+    def needs_stats(self) -> bool:
+        return any(c.needs_stats for c in self.children)
+
+    def size(self, spec: EnsembleSpec) -> int:
+        return sum(c.size(spec) for c in self.children)
+
+    def observe(self, spec, market, out, portfolio, stats, xp):
+        return xp.concatenate(
+            [c.observe(spec, market, out, portfolio, stats, xp)
+             for c in self.children], axis=-1)

@@ -1,0 +1,120 @@
+"""Pluggable reward functions for :class:`repro.env.MarketEnv`.
+
+A :class:`RewardFn` is a frozen (hashable — part of the engine's env-trace
+cache key) dataclass mapping one transition to a float32 ``[M]`` reward,
+one scalar per market (the env treats each market's external-order slot as
+an independent acting agent). All inputs arrive in a :class:`RewardContext`
+built by the env core from the step's clearing outputs and the carried
+:class:`repro.env.core.Portfolio` accounting:
+
+  * :class:`PnLReward`         — mark-to-market equity delta (fill cash
+    flows plus inventory revaluation at the step's mid);
+  * :class:`SpreadCapture`     — edge captured versus the prevailing mid:
+    buys below mid and sells above mid earn ``fill · |mid − fill price|``;
+  * :class:`InventoryPenalty`  — ``−weight · inventory²`` risk shaping;
+  * :class:`Sum`               — weighted sum of child rewards.
+
+Fill attribution uses the engine's uniform-price clearing outputs under a
+price-priority, no-rationing model: when a step executes at clearing price
+``p*``, an external buy at tick ``>= p*`` (ask at tick ``<= p*``) is
+treated as fully filled at ``p*``, otherwise unfilled. This is exact for
+the strictly-in-the-money levels of a uniform-price call auction and
+optimistic only at the marginal tick (where the book is rationed pro-rata);
+it is computable from ``(p*, volume)`` alone, so every backend — including
+the fused Pallas kernels, whose per-level execution never leaves VMEM —
+produces bitwise-identical fills.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+
+class RewardContext(NamedTuple):
+    """Everything a reward function may read about one transition."""
+
+    fill_buy: Any   # f32[M, 1] externally-bought lots filled this step
+    fill_ask: Any   # f32[M, 1] externally-sold lots filled this step
+    fill_price: Any # f32[M, 1] clearing price p* (last price if no cross)
+    out: Any        # StepOutput (price / volume / mid columns)
+    prev: Any       # Portfolio before the transition
+    portfolio: Any  # Portfolio after the transition
+    xp: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardFn:
+    """Base reward: subclasses implement ``__call__(ctx) -> f32[M]``."""
+
+    def __call__(self, ctx: RewardContext) -> Any:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PnLReward(RewardFn):
+    """Mark-to-market profit this step: ``equity_t − equity_{t−1}``.
+
+    Equity is ``cash + inventory · mid`` with both sides marked at the
+    step's pre-clearing mid, so the reward decomposes into realized fill
+    cash flows plus inventory revaluation — the standard per-step PnL
+    shaping for execution agents.
+    """
+
+    def __call__(self, ctx: RewardContext) -> Any:
+        xp = ctx.xp
+        delta = (xp.asarray(ctx.portfolio.equity, xp.float32)
+                 - xp.asarray(ctx.prev.equity, xp.float32))
+        return delta[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpreadCapture(RewardFn):
+    """Edge versus the prevailing mid: buys earn ``fill · (mid − p*)``,
+    sells earn ``fill · (p* − mid)`` — the market-making objective."""
+
+    def __call__(self, ctx: RewardContext) -> Any:
+        xp = ctx.xp
+        f32 = xp.float32
+        mid = xp.asarray(ctx.out.mid, dtype=f32)
+        p = xp.asarray(ctx.fill_price, dtype=f32)
+        edge = ctx.fill_buy * (mid - p) + ctx.fill_ask * (p - mid)
+        return edge[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class InventoryPenalty(RewardFn):
+    """Quadratic inventory-risk shaping: ``−weight · inventory²``."""
+
+    weight: float = 0.01
+
+    def __call__(self, ctx: RewardContext) -> Any:
+        xp = ctx.xp
+        inv = xp.asarray(ctx.portfolio.inventory, xp.float32)
+        return (-xp.float32(self.weight)) * (inv * inv)[:, 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Sum(RewardFn):
+    """Weighted sum of child rewards (default weight 1.0 each)."""
+
+    children: Tuple[RewardFn, ...] = ()
+    weights: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if not self.children:
+            raise ValueError("Sum needs at least one child reward")
+        object.__setattr__(self, "children", tuple(self.children))
+        weights = tuple(self.weights) or (1.0,) * len(self.children)
+        if len(weights) != len(self.children):
+            raise ValueError(
+                f"got {len(weights)} weights for {len(self.children)} "
+                "child rewards")
+        object.__setattr__(self, "weights", weights)
+
+    def __call__(self, ctx: RewardContext) -> Any:
+        xp = ctx.xp
+        total = None
+        for w, child in zip(self.weights, self.children):
+            term = xp.float32(w) * child(ctx)
+            total = term if total is None else total + term
+        return total

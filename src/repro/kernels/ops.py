@@ -49,7 +49,7 @@ from repro.core import session
 from repro.core import stats as stats_mod
 from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
-from repro.core.step import MarketState, initial_state
+from repro.core.step import MarketState, StepOutput, initial_state
 from repro.kernels import autotune as tune
 from repro.kernels.kinetic_clearing import (_pad_rows, kinetic_clearing_chunk,
                                             pad_params, pick_tile)
@@ -85,6 +85,8 @@ class PallasChunkRunner(session.ChunkRunner):
     """
 
     xp = jnp
+    env_traceable = True
+    env_runtime_seed = False  # the kernel trace bakes the RNG seed
 
     def __init__(self, kernel_chunk_fn, spec: EnsembleSpec, chunk: int,
                  mb: Optional[int], scan: str, interpret: Optional[bool],
@@ -97,83 +99,36 @@ class PallasChunkRunner(session.ChunkRunner):
         self.chunk = int(chunk)
         self.stats_only = bool(stats_only)
         interpret = _auto_interpret(interpret)
+        self._interpret = interpret
+        self._scan = scan
+        self._kernel_chunk_fn = kernel_chunk_fn
         self._mesh = _resolve_mesh(mesh, devices)
         M, L = spec.num_markets, spec.num_levels
 
         # Per-shard market count: tiles are chosen for (and padding applied
         # to) each shard's local slice.
         n_shards = self._mesh.devices.size if self._mesh is not None else 1
+        self._n_shards = n_shards
         m_local = -(-M // n_shards)
         self.tile = self._resolve_tile(kernel_chunk_fn, spec, m_local, mb,
                                        agent_chunk, scan, interpret, autotune)
 
         self._zero_ext = (jnp.zeros((M, L), jnp.float32),
                           jnp.zeros((M, L), jnp.float32))
-        kernel_kwargs = dict(cfg=spec, chunk=self.chunk, mb=self.tile.mb,
-                             scan=scan, interpret=interpret,
-                             agent_chunk=self.tile.agent_chunk,
-                             stats_only=self.stats_only)
+
+        pure_chunk = self._build_chunk_fn(self.chunk, self.stats_only)
+
+        def chunk_fn(state, stats, params, step0, n_valid,
+                     ext_buy, ext_ask):
+            self._trace_count += 1  # python side effect: trace-time only
+            return pure_chunk(state, stats, params, step0, n_valid,
+                              ext_buy, ext_ask)
 
         if self._mesh is None:
-            def chunk_fn(state, stats, params, step0, n_valid,
-                         ext_buy, ext_ask):
-                self._trace_count += 1  # python side effect: trace-time only
-                return self._split(kernel_chunk_fn(
-                    state.bid, state.ask, state.last_price, state.prev_mid,
-                    step0, n_valid, ext_buy, ext_ask, params=params,
-                    stats=stats, **kernel_kwargs))
-
             self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
-            mesh_ = self._mesh
-            mb = self.tile.mb
-            m_shard = tune.pad_to_multiple(m_local, mb)
-            m_padded = n_shards * m_shard
-            self._row_sharding = market_sharding(mesh_)
-            rep = replicated_sharding(mesh_)
-            row = self._row_sharding
-
-            def shard_body(step0, n_valid, mids, bid, ask, last, pmid,
-                           ext_buy, ext_ask, params, stats):
-                return kernel_chunk_fn(
-                    bid, ask, last, pmid, step0, n_valid, ext_buy, ext_ask,
-                    market_ids=mids, params=params, stats=stats,
-                    **kernel_kwargs)
-
-            row_params = MarketParams(*(P("markets", None),)
-                                      * len(MarketParams._fields))
-            sharded_call = shard_map(
-                shard_body, mesh=mesh_,
-                in_specs=(P(), P(), P("markets", None), P("markets", None),
-                          P("markets", None), P("markets", None),
-                          P("markets", None), P("markets", None),
-                          P("markets", None), row_params,
-                          P("markets", None) if self.stats_only else None),
-                out_specs=P("markets", None), check_rep=False)
-
-            def chunk_fn(state, stats, params, step0, n_valid,
-                         ext_buy, ext_ask):
-                self._trace_count += 1
-                # Pad/slice every call rather than carrying padded state:
-                # Θ(M·L) per chunk vs the kernel's Θ(chunk·A·L) work, and it
-                # keeps session state — and therefore snapshots — in the
-                # canonical [M, ...] layout on every device topology.
-                padded = [_pad_rows(x, m_padded) for x in state]
-                eb = _pad_rows(ext_buy, m_padded)
-                ea = _pad_rows(ext_ask, m_padded)
-                pp = pad_params(params, m_padded)
-                # Global row coordinates: rows < M are real markets, pad rows
-                # get distinct ids >= M whose streams are discarded.
-                mids = jnp.arange(m_padded, dtype=jnp.int32)[:, None]
-                st = None
-                if self.stats_only:
-                    st = stats_mod.MarketStats(
-                        *(_pad_rows(x, m_padded) for x in stats))
-                out = sharded_call(step0, n_valid, mids, *padded, eb, ea,
-                                   pp, st)
-                return self._split(
-                    tuple(x[:M] for x in jax.tree_util.tree_leaves(out)))
-
+            row = self._row_sharding = market_sharding(self._mesh)
+            rep = replicated_sharding(self._mesh)
             state_sh = MarketState(row, row, row, row)
             params_sh = MarketParams(*(row,) * len(MarketParams._fields))
             stats_sh = (stats_mod.MarketStats(*(row,) * 6)
@@ -185,6 +140,98 @@ class PallasChunkRunner(session.ChunkRunner):
                 in_shardings=(state_sh, stats_sh, params_sh, rep, rep,
                               row, row),
                 out_shardings=out_sh)
+
+    def _build_chunk_fn(self, chunk: int, stats_only: bool):
+        """Pure ``(state, stats, params, step0, n_valid, ext_buy, ext_ask)
+        -> (MarketState, payload)`` chunk executor around the kernel entry.
+
+        The single construction site for both front doors: the Session
+        wraps the runner-chunk instance in ``jax.jit`` with donated state
+        buffers; the RL env (:meth:`env_step_fn`) embeds a ``chunk=1``
+        instance inside its own jitted step/rollout graphs. Mesh-opened
+        runners wrap the kernel in the same ``shard_map`` either way, so
+        env rollouts compose with market-axis sharding unchanged.
+        """
+        spec = self.spec
+        kernel_chunk_fn = self._kernel_chunk_fn
+        M = spec.num_markets
+        kernel_kwargs = dict(cfg=spec, chunk=chunk, mb=self.tile.mb,
+                             scan=self._scan, interpret=self._interpret,
+                             agent_chunk=self.tile.agent_chunk,
+                             stats_only=stats_only)
+
+        if self._mesh is None:
+            def pure_chunk(state, stats, params, step0, n_valid,
+                           ext_buy, ext_ask):
+                return self._split(kernel_chunk_fn(
+                    state.bid, state.ask, state.last_price, state.prev_mid,
+                    step0, n_valid, ext_buy, ext_ask, params=params,
+                    stats=stats, **kernel_kwargs), stats_only)
+
+            return pure_chunk
+
+        mesh_ = self._mesh
+        m_shard = tune.pad_to_multiple(-(-M // self._n_shards), self.tile.mb)
+        m_padded = self._n_shards * m_shard
+
+        def shard_body(step0, n_valid, mids, bid, ask, last, pmid,
+                       ext_buy, ext_ask, params, stats):
+            return kernel_chunk_fn(
+                bid, ask, last, pmid, step0, n_valid, ext_buy, ext_ask,
+                market_ids=mids, params=params, stats=stats,
+                **kernel_kwargs)
+
+        row_params = MarketParams(*(P("markets", None),)
+                                  * len(MarketParams._fields))
+        sharded_call = shard_map(
+            shard_body, mesh=mesh_,
+            in_specs=(P(), P(), P("markets", None), P("markets", None),
+                      P("markets", None), P("markets", None),
+                      P("markets", None), P("markets", None),
+                      P("markets", None), row_params,
+                      P("markets", None) if stats_only else None),
+            out_specs=P("markets", None), check_rep=False)
+
+        def pure_chunk(state, stats, params, step0, n_valid,
+                       ext_buy, ext_ask):
+            # Pad/slice every call rather than carrying padded state:
+            # Θ(M·L) per chunk vs the kernel's Θ(chunk·A·L) work, and it
+            # keeps session state — and therefore snapshots — in the
+            # canonical [M, ...] layout on every device topology.
+            padded = [_pad_rows(x, m_padded) for x in state]
+            eb = _pad_rows(ext_buy, m_padded)
+            ea = _pad_rows(ext_ask, m_padded)
+            pp = pad_params(params, m_padded)
+            # Global row coordinates: rows < M are real markets, pad rows
+            # get distinct ids >= M whose streams are discarded.
+            mids = jnp.arange(m_padded, dtype=jnp.int32)[:, None]
+            st = None
+            if stats_only:
+                st = stats_mod.MarketStats(
+                    *(_pad_rows(x, m_padded) for x in stats))
+            out = sharded_call(step0, n_valid, mids, *padded, eb, ea,
+                               pp, st)
+            return self._split(
+                tuple(x[:M] for x in jax.tree_util.tree_leaves(out)),
+                stats_only)
+
+        return pure_chunk
+
+    def env_step_fn(self):
+        """Traceable per-step core for :class:`repro.env.MarketEnv`: one
+        ``chunk=1`` persistent-kernel call (sharded when the runner is),
+        embeddable in the env's jitted ``lax.scan`` rollouts."""
+        pure_step = self._build_chunk_fn(1, False)
+        one = jnp.ones((1, 1), jnp.int32)
+
+        def step_core(market, params, t, ext_buy, ext_ask, seed, aux):
+            step0 = jnp.reshape(jnp.asarray(t, dtype=jnp.int32), (1, 1))
+            state, payload = pure_step(market, None, params, step0, one,
+                                       ext_buy, ext_ask)
+            pp, vp, mp = payload
+            return state, StepOutput(price=pp, volume=vp, mid=mp), aux
+
+        return step_core
 
     # ---- tile selection ----
     def _resolve_tile(self, kernel_chunk_fn, spec, m_local, mb, agent_chunk,
@@ -266,11 +313,13 @@ class PallasChunkRunner(session.ChunkRunner):
             *(jax.device_put(x, self._row_sharding) for x in stats))
 
     # ---- execution ----
-    def _split(self, out):
+    def _split(self, out, stats_only: Optional[bool] = None):
         """Kernel output tuple -> (MarketState, payload)."""
+        if stats_only is None:
+            stats_only = self.stats_only
         state = MarketState(bid=out[0], ask=out[1], last_price=out[2],
                             prev_mid=out[3])
-        if self.stats_only:
+        if stats_only:
             rest = out[4]
             if not isinstance(rest, stats_mod.MarketStats):
                 rest = stats_mod.MarketStats(*out[4:])
