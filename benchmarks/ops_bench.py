@@ -1,0 +1,104 @@
+"""Ops-surface benchmark: warm-start latency + metrics overhead.
+
+Two row families, emitted to ``BENCH_ops.json`` for the CI trajectory:
+
+* ``ops/warm_start/<backend>`` — wall time of ``Engine.warm()`` (the cold
+  compile cost a deployment pays up front) vs the steady-state chunk
+  latency afterwards, plus the number of executables compiled.  The run
+  **fails** if the first post-warm session retraces (``traces_delta`` must
+  be 0): warm() promising readiness and then retracing is a regression.
+* ``ops/metrics_overhead/<backend>`` — steady-state chunk latency with the
+  metrics registry off vs on.  Metrics sample host-side around dispatch
+  (the zero-hot-path guarantee), so the delta is pure host bookkeeping and
+  ``traces_delta`` must again be 0.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, Row, emit
+from repro.core.config import MarketConfig
+from repro.core.session import Engine
+
+BACKENDS = ["numpy-pcg64", "jax-scan", "pallas-kinetic"]
+M = 1024 if FULL else 64
+A = 256 if FULL else 64
+S = 512 if FULL else 128
+
+
+def _cfg() -> MarketConfig:
+    return MarketConfig(num_markets=M, num_agents=A, num_steps=S, seed=1)
+
+
+def _median_run_us(eng: Engine, cfg: MarketConfig, *, metrics: bool,
+                   trials: int) -> float:
+    times = []
+    for _ in range(trials):
+        sess = eng.open(cfg, metrics=metrics)
+        t0 = time.perf_counter()
+        batch = sess.run(cfg.num_steps)
+        np.asarray(batch.to_numpy().price)  # materialize on host
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def warm_start_rows(backends, trials: int) -> list:
+    rows: list[Row] = []
+    for backend in backends:
+        cfg = _cfg()
+        eng = Engine(backend)
+        t0 = time.perf_counter()
+        ready = eng.warm(cfg)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        assert ready.ready, f"{backend}: warm() left cold keys"
+        traces = eng.trace_count
+        warm_us = _median_run_us(eng, cfg, metrics=False, trials=trials)
+        delta = eng.trace_count - traces
+        if delta != 0:
+            raise AssertionError(
+                f"{backend}: {delta} retrace(s) after warm() — the "
+                f"warm-start contract is broken")
+        rows.append((f"ops/warm_start/{backend}", cold_us,
+                     f"cold_us={cold_us:.0f};warm_us={warm_us:.1f};"
+                     f"traces={traces};traces_delta={delta}"))
+    return rows
+
+
+def metrics_overhead_rows(backends, trials: int) -> list:
+    rows: list[Row] = []
+    for backend in backends:
+        cfg = _cfg()
+        eng = Engine(backend)
+        eng.warm(cfg, include_step=False)
+        off_us = _median_run_us(eng, cfg, metrics=False, trials=trials)
+        traces = eng.trace_count
+        on_us = _median_run_us(eng, cfg, metrics=True, trials=trials)
+        delta = eng.trace_count - traces
+        if delta != 0:
+            raise AssertionError(
+                f"{backend}: metrics collection caused {delta} retrace(s) — "
+                f"the zero-hot-path guarantee is broken")
+        overhead = 100.0 * (on_us - off_us) / off_us if off_us else 0.0
+        rows.append((f"ops/metrics_overhead/{backend}", on_us,
+                     f"off_us={off_us:.1f};on_us={on_us:.1f};"
+                     f"overhead_pct={overhead:.2f};traces_delta={delta}"))
+    return rows
+
+
+def run(backends=None, trials: int = 5) -> list:
+    backends = backends or BACKENDS
+    return warm_start_rows(backends, trials) + \
+        metrics_overhead_rows(backends, trials)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", nargs="*", default=BACKENDS)
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_*.json artifact here")
+    ns = ap.parse_args()
+    emit(run(ns.backends, ns.trials), json_path=ns.json, benchmark="ops")

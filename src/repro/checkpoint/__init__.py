@@ -1,1 +1,8 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401 (re-exported API)
+    FORMAT_VERSION,
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointManager,
+    CheckpointShapeError,
+    CheckpointVersionError,
+)

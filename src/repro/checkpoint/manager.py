@@ -35,6 +35,31 @@ _SESSION_ARRAY_FIELDS = ("bid", "ask", "last_price", "prev_mid")
 # Snapshot keys holding dicts of arrays (packed as subtrees, not JSON meta).
 _SESSION_ARRAY_SUBTREES = ("params", "stats", "init")
 
+#: On-disk session-checkpoint format version (the JSON meta leaf carries it).
+FORMAT_VERSION = 1
+
+
+class CheckpointError(Exception):
+    """Base class for typed checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError, IOError):
+    """The on-disk payload is damaged (truncated / bit-flipped / unparseable).
+
+    Always names the offending file or leaf. Corrupt data must never load
+    silently — callers fall back to an earlier step (see
+    ``repro.ops.chaos``) or fail loudly.
+    """
+
+
+class CheckpointVersionError(CheckpointError, ValueError):
+    """The checkpoint was written by an incompatible format version."""
+
+
+class CheckpointShapeError(CheckpointError, ValueError):
+    """A restored leaf's shape disagrees with the live session, with the
+    offending config field (num_markets / num_levels / num_agents) named."""
+
 
 def session_tree(snapshot: Dict[str, Any]) -> Dict[str, Any]:
     """Pack a ``Session.snapshot()`` dict into a checkpointable pytree.
@@ -48,6 +73,7 @@ def session_tree(snapshot: Dict[str, Any]) -> Dict[str, Any]:
     meta = {k: v for k, v in snapshot.items()
             if k not in _SESSION_ARRAY_FIELDS
             and k not in _SESSION_ARRAY_SUBTREES}
+    meta["format_version"] = FORMAT_VERSION
     tree = {
         "state": {k: np.asarray(snapshot[k]) for k in _SESSION_ARRAY_FIELDS},
         "meta": np.asarray(json.dumps(meta)),
@@ -59,9 +85,29 @@ def session_tree(snapshot: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def snapshot_from_tree(tree: Dict[str, Any]) -> Dict[str, Any]:
-    """Inverse of :func:`session_tree` (for ``Session.restore``)."""
+    """Inverse of :func:`session_tree` (for ``Session.restore``).
+
+    Raises :class:`CheckpointCorruptError` when the meta leaf is not valid
+    JSON and :class:`CheckpointVersionError` for a format this reader does
+    not understand (pre-versioning checkpoints, with no ``format_version``
+    key, still load).
+    """
+    missing = [k for k in ("state", "meta") if k not in tree]
+    if missing:
+        raise CheckpointCorruptError(
+            f"checkpoint tree is missing required subtree(s) {missing}")
     snap: Dict[str, Any] = dict(tree["state"])
-    snap.update(json.loads(str(tree["meta"])))
+    try:
+        meta = json.loads(str(tree["meta"]))
+    except (json.JSONDecodeError, ValueError) as exc:
+        raise CheckpointCorruptError(
+            f"checkpoint meta leaf is not valid JSON: {exc}") from exc
+    version = meta.pop("format_version", None)
+    if version is not None and version != FORMAT_VERSION:
+        raise CheckpointVersionError(
+            f"checkpoint meta leaf has format_version={version}; this "
+            f"reader understands format_version={FORMAT_VERSION}")
+    snap.update(meta)
     for sub in _SESSION_ARRAY_SUBTREES:
         if sub in tree:
             snap[sub] = dict(tree[sub])
@@ -174,22 +220,62 @@ class CheckpointManager:
             return None
         return int(sdir.name.split("_")[1])
 
+    def steps(self) -> "list[int]":
+        """All committed checkpoint steps (manifest present), ascending —
+        the fallback ladder an elastic/resilient restore walks down."""
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / "manifest.json").exists():
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return out
+
     def restore(self, step: Optional[int] = None):
-        """Load the pytree (elastic: any current host count may read)."""
+        """Load the pytree (elastic: any current host count may read).
+
+        Damaged payloads never load silently: an unparseable manifest, an
+        unreadable/truncated shard, a missing leaf, or a leaf whose
+        shape/dtype disagrees with the manifest raises
+        :class:`CheckpointCorruptError` naming the offending file or leaf.
+        """
         self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:
             return None
         sdir = self._step_dir(step)
+        try:
+            manifest = json.loads((sdir / "manifest.json").read_text())
+            leaves = dict(manifest["leaves"])
+        except FileNotFoundError:
+            raise
+        except Exception as exc:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step}: manifest.json is unreadable or "
+                f"not valid JSON ({type(exc).__name__}: {exc})") from exc
         flat: Dict[str, np.ndarray] = {}
         for shard in sorted(sdir.glob("shard_*.npz")):
-            with np.load(shard) as z:
-                for k in z.files:
-                    flat[k.replace("|", "/")] = z[k]
-        manifest = json.loads((sdir / "manifest.json").read_text())
-        missing = set(manifest["leaves"]) - set(flat)
+            try:
+                with np.load(shard) as z:
+                    for k in z.files:
+                        flat[k.replace("|", "/")] = z[k]
+            except Exception as exc:  # BadZipFile / EOFError / ValueError...
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: shard {shard.name} is "
+                    f"corrupt ({type(exc).__name__}: {exc})") from exc
+        missing = set(leaves) - set(flat)
         if missing:
-            raise IOError(f"checkpoint step {step} missing leaves: "
-                          f"{sorted(missing)[:5]}...")
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} missing leaves: "
+                f"{sorted(missing)[:5]}")
+        for name, info in leaves.items():
+            arr = flat[name]
+            if (list(arr.shape) != list(info["shape"])
+                    or str(arr.dtype) != info["dtype"]):
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: leaf {name!r} has "
+                    f"shape={list(arr.shape)} dtype={arr.dtype}, manifest "
+                    f"says shape={info['shape']} dtype={info['dtype']}")
         return _unflatten(flat)

@@ -56,6 +56,7 @@ class JaxChunkRunner(session.ChunkRunner):
     """jit-compiled chunk executor for the two JAX framework regimes."""
 
     xp = jnp
+    compiled = True
     env_traceable = True
     env_runtime_seed = True
 

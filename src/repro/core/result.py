@@ -53,6 +53,24 @@ class SimResult(NamedTuple):
             return 0.0
         return float((r ** 4).mean() / v ** 2 - 3.0)
 
+    def volume_volatility_corr(self) -> float:
+        """Mean-over-markets Pearson correlation of |returns| with volume.
+
+        The classic volume/volatility stylized fact: per market, corr(
+        ``|r_t|``, ``volume_t``) for ``t in [1, S)`` (volume at the step the
+        return realizes). Markets with a degenerate (zero-variance) series
+        are excluded; returns NaN if every market is degenerate.
+        """
+        r = np.abs(self.returns())                       # [M, S-1]
+        v = np.asarray(self.volume_path)[:, 1:]          # [M, S-1]
+        rc = r - r.mean(axis=1, keepdims=True)
+        vc = v - v.mean(axis=1, keepdims=True)
+        num = (rc * vc).sum(axis=1)
+        denom = np.sqrt((rc * rc).sum(axis=1) * (vc * vc).sum(axis=1))
+        with np.errstate(invalid="ignore", divide="ignore"):
+            corr = num / denom
+        return float(np.nanmean(corr))
+
     def autocorrelation(self, lags: int = 20, absolute: bool = False) -> np.ndarray:
         """Mean-over-markets ACF of returns (or |returns|) up to ``lags``."""
         r = self.returns()

@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple, Union
 
 import numpy as np
@@ -136,6 +137,10 @@ class ChunkRunner:
 
     chunk: int = 1
     xp: Any = np
+    #: True when :meth:`run` dispatches a compiled executable (jax/pallas) —
+    #: i.e. there is something for ``Engine.warm`` to precompile; host-loop
+    #: runners leave this False and are always "warm".
+    compiled: bool = False
     #: Runners opened with ``stats_only=True`` replace per-step path outputs
     #: with carried :class:`repro.core.stats.MarketStats` accumulators.
     stats_only: bool = False
@@ -347,12 +352,14 @@ class Engine:
     """
 
     def __init__(self, backend: str = "jax-scan", *,
-                 chunk_size: Optional[int] = None, **backend_opts: Any):
+                 chunk_size: Optional[int] = None, metrics: bool = True,
+                 **backend_opts: Any):
         _ensure_builtin()
         if backend not in _FACTORIES:
             raise _unknown_backend_error(backend)
         self.backend = backend
         self.chunk_size = chunk_size
+        self.metrics = bool(metrics)
         self.backend_opts = dict(backend_opts)
         self._runners: Dict[Tuple[Any, ...], ChunkRunner] = {}
         # RL env executables (repro.env), cached under the same
@@ -380,17 +387,46 @@ class Engine:
         return runner
 
     def open(self, spec: Union[EnsembleSpec, MarketConfig], *,
-             chunk_size: Optional[int] = None) -> "Session":
+             chunk_size: Optional[int] = None,
+             metrics: Optional[bool] = None) -> "Session":
         """Open a live session holding a device-resident :class:`MarketState`.
 
         ``spec`` is an :class:`EnsembleSpec` or a :class:`MarketConfig`
         (coerced through ``EnsembleSpec.homogeneous`` — bitwise-identical
         to the historical scalar-config path).
+
+        Every session carries a :class:`repro.ops.metrics.MetricsRegistry`
+        by default (``Session.metrics``), sampled strictly outside the
+        jitted graph — zero additional traces, bitwise-invisible to
+        results. Disable per-session with ``metrics=False`` or engine-wide
+        with ``Engine(backend, metrics=False)``.
         """
         spec = EnsembleSpec.coerce(spec)
         chunk = chunk_size or self.chunk_size \
             or min(DEFAULT_CHUNK, spec.num_steps)
-        return Session(self, spec, self._runner(spec, max(1, chunk)))
+        registry = None
+        if self.metrics if metrics is None else metrics:
+            from repro.ops.metrics import MetricsRegistry
+
+            registry = MetricsRegistry()
+        return Session(self, spec, self._runner(spec, max(1, chunk)),
+                       metrics=registry)
+
+    def warm(self, specs, *, chunk_sizes=None, include_step: bool = True):
+        """Precompile every executable ``specs`` will need (see
+        :func:`repro.ops.warmup.warm`); returns the post-warm readiness
+        probe, so ``engine.warm(specs).ready`` gates serving traffic."""
+        from repro.ops import warmup
+
+        return warmup.warm(self, specs, chunk_sizes=chunk_sizes,
+                           include_step=include_step)
+
+    def readiness(self):
+        """Which cached ``(static_key, chunk)`` executables are warm
+        (see :func:`repro.ops.warmup.readiness`)."""
+        from repro.ops import warmup
+
+        return warmup.readiness(self)
 
     def env(self, spec: Union[EnsembleSpec, MarketConfig], **env_opts: Any):
         """Open a pure-functional RL environment over this engine's backend.
@@ -418,7 +454,7 @@ class Session:
     """
 
     def __init__(self, engine: Engine, spec: EnsembleSpec,
-                 runner: ChunkRunner):
+                 runner: ChunkRunner, metrics=None):
         self._engine = engine
         self.spec = spec
         self._runner = runner
@@ -429,6 +465,19 @@ class Session:
         self._stats = runner.init_stats(spec)
         self._t = 0
         self._closed = False
+        self._active_streams = 0
+        self.metrics = metrics
+        if metrics is not None:
+            metrics.gauge("chunk", runner.chunk)
+            metrics.gauge("num_markets", spec.num_markets)
+            tile = getattr(runner, "tile", None)
+            if tile is not None:  # Pallas engines: autotune tile pressure
+                from repro.kernels import autotune as tune
+
+                metrics.gauge("tile_mb", tile.mb)
+                metrics.gauge("tile_agent_chunk", tile.agent_chunk)
+                metrics.gauge("autotune_vmem_bytes", tune.estimate_vmem_bytes(
+                    tile, spec.num_levels, spec.num_agents, runner.chunk))
 
     @property
     def cfg(self) -> EnsembleSpec:
@@ -533,15 +582,42 @@ class Session:
         self._check_open()
         return self._stream(self._resolve_steps(n_steps))
 
+    def _dispatch(self, runner: ChunkRunner, n: int, ext,
+                  kind: str) -> StepBatch:
+        """One runner dispatch with host-side metrics sampling around it.
+
+        All sampling is strictly outside the jitted call: wall-clock reads
+        and two integer trace-counter reads. Nothing here becomes an
+        operand of (or inserts a sync into) the compiled executable, so a
+        metrics-on session is bitwise-identical to a metrics-off one.
+        """
+        m = self.metrics
+        if m is not None:
+            traces0 = runner.trace_count
+            t0 = time.perf_counter()
+        self._state, self._aux, batch, self._stats = runner.run(
+            self._state, self._params, self._aux, self._t, n, ext,
+            self._stats)
+        if m is not None:
+            m.observe(f"{kind}_seconds", time.perf_counter() - t0)
+            m.inc("steps_total", n)
+            if kind == "chunk":
+                m.inc("chunks_total")
+            traced = runner.trace_count - traces0
+            if traced:
+                m.inc("traces", traced)
+        self._t += n
+        return batch
+
     def _stream(self, remaining: int) -> Iterator[StepBatch]:
-        while remaining > 0:
-            n = min(self._runner.chunk, remaining)
-            self._state, self._aux, batch, self._stats = self._runner.run(
-                self._state, self._params, self._aux, self._t, n, None,
-                self._stats)
-            self._t += n
-            remaining -= n
-            yield batch
+        self._active_streams += 1
+        try:
+            while remaining > 0:
+                n = min(self._runner.chunk, remaining)
+                yield self._dispatch(self._runner, n, None, "chunk")
+                remaining -= n
+        finally:
+            self._active_streams -= 1
 
     def run(self, n_steps: Optional[int] = None) -> StepBatch:
         """Advance ``n_steps`` and return the concatenated
@@ -569,12 +645,8 @@ class Session:
         self._check_open()
         if self._step_runner is None:
             self._step_runner = self._engine._runner(self.spec, 1)
-        ext = self._build_ext(actions)
-        self._state, self._aux, batch, self._stats = self._step_runner.run(
-            self._state, self._params, self._aux, self._t, 1, ext,
-            self._stats)
-        self._t += 1
-        return batch
+        return self._dispatch(self._step_runner, 1, self._build_ext(actions),
+                              "step")
 
     def _build_ext(self, actions: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         if actions is None:
@@ -609,8 +681,20 @@ class Session:
     def snapshot(self) -> Dict[str, Any]:
         """Exact host-side capture: books, step cursor, stateful RNG, and
         the per-market parameter operands (a snapshot is self-contained —
-        it restores the scenario mixture it was taken under)."""
+        it restores the scenario mixture it was taken under).
+
+        Mid-``stream()`` snapshots are **chunk-boundary-aligned**: the
+        session cursor only ever advances one whole compiled chunk at a
+        time (a partial tail is itself dispatched as one gated chunk), so a
+        snapshot taken between yielded batches captures the state exactly
+        after the last yielded chunk — ``snap["t"]`` equals the steps
+        consumed so far, never a mid-chunk step. There is no misaligned
+        call to guard against; :meth:`restore` during an active stream is
+        rejected instead (the in-flight iterator would keep the old
+        cursor).
+        """
         self._check_open()
+        t0 = time.perf_counter()
         snap: Dict[str, Any] = {
             field: np.asarray(value)
             for field, value in zip(MarketState._fields, self._state)
@@ -636,6 +720,9 @@ class Session:
                 field: np.asarray(value)
                 for field, value in zip(MarketStats._fields, self._stats)
             }
+        if self.metrics is not None:
+            self.metrics.observe("snapshot_seconds", time.perf_counter() - t0)
+            self.metrics.inc("snapshots_total")
         return snap
 
     def restore(self, snap: Dict[str, Any]) -> None:
@@ -652,19 +739,58 @@ class Session:
         bitwise, because the runner re-places state/params/stats on restore.
         """
         self._check_open()
+        if self._active_streams:
+            raise RuntimeError(
+                "restore() during an active stream(): the in-flight "
+                "iterator would keep advancing from the pre-restore cursor. "
+                "Exhaust or close() the iterator first (snapshot() stays "
+                "safe mid-stream — it is chunk-boundary-aligned).")
+        from repro.checkpoint.manager import CheckpointShapeError
+
+        t_start = time.perf_counter()
         # seed and num_agents are baked into the compiled trace (they are
         # in the static cache key) yet appear in no restored array's shape
         # (params are [M, 1]; books are [M, L]), so a mismatch would
         # silently resume on a different random stream — reject loudly.
-        for field, have in (("seed", self.spec.seed),
-                            ("num_agents", self.spec.num_agents)):
+        # num_agents gets the typed shape error (it is a config-shape
+        # field); a CheckpointShapeError is a ValueError, so older callers
+        # catching ValueError keep working.
+        for field, have, cls in (
+                ("seed", self.spec.seed, ValueError),
+                ("num_agents", self.spec.num_agents, CheckpointShapeError)):
             got = snap.get(field)
             if got is not None and int(got) != have:
-                raise ValueError(
+                raise cls(
                     f"snapshot was taken under {field}={int(got)} but this "
                     f"session's executable is compiled for {field}={have}; "
                     f"open the session on a spec with the snapshot's "
                     f"{field} to resume its stream")
+        # Shape-validate every array leaf against the live session *before*
+        # touching any field — the historical failure mode here was an
+        # opaque broadcast/unflatten error deep inside placement.
+        M, L = self.spec.num_markets, self.spec.num_levels
+        for name, want, blame in (
+                ("bid", (M, L), "num_levels"), ("ask", (M, L), "num_levels"),
+                ("last_price", (M, 1), "num_markets"),
+                ("prev_mid", (M, 1), "num_markets")):
+            arr = np.asarray(snap[name])
+            if tuple(arr.shape) != want:
+                if arr.ndim < 1 or arr.shape[0] != M:
+                    blame = "num_markets"
+                raise CheckpointShapeError(
+                    f"snapshot field {name!r} has shape {tuple(arr.shape)} "
+                    f"but this session expects {want} — mismatched {blame} "
+                    f"(session has num_markets={M}, num_levels={L}); open "
+                    f"the session on a spec matching the snapshot")
+        if snap.get("params") is not None:
+            for pname in MarketParams._fields:
+                arr = np.asarray(snap["params"][pname])
+                if tuple(arr.shape) != (M, 1):
+                    raise CheckpointShapeError(
+                        f"snapshot params leaf {pname!r} has shape "
+                        f"{tuple(arr.shape)}, expected ({M}, 1) — "
+                        f"mismatched num_markets (session has "
+                        f"num_markets={M})")
         new_state = self._runner.to_device(
             MarketState(*(snap[f] for f in MarketState._fields)))
         new_t = int(snap["t"])
@@ -701,6 +827,10 @@ class Session:
         self._state, self._t = new_state, new_t
         self.spec, self._params = new_spec, new_params
         self._aux, self._stats = new_aux, new_stats
+        if self.metrics is not None:
+            self.metrics.observe("restore_seconds",
+                                 time.perf_counter() - t_start)
+            self.metrics.inc("restores_total")
 
     def save_checkpoint(self, manager, step: Optional[int] = None) -> int:
         """Persist the session through a ``CheckpointManager``; returns the

@@ -28,6 +28,54 @@ SUBLANES = 8  # TPU f32 sublane count — tiles want MB ≡ 0 (mod 8)
 #: Winner cache for the timed sweep: (device_kind, L, A, chunk) -> TileChoice.
 _TUNE_CACHE: Dict[Tuple[str, int, int, int], "TileChoice"] = {}
 
+#: One record per *real* sweep (cache misses only), newest last — the
+#: ops/chaos harness reads these to assert an OOM-shaped sweep fell back.
+_SWEEP_REPORTS: List["SweepReport"] = []
+
+# Substrings identifying an out-of-memory-shaped backend failure. XLA spells
+# device OOM "RESOURCE_EXHAUSTED"; Mosaic VMEM overflows mention VMEM.
+_OOM_MARKERS = ("resource_exhausted", "out of memory", "oom", "vmem")
+
+
+class SweepReport(NamedTuple):
+    """Outcome of one autotune sweep (for observability + chaos tests)."""
+
+    key: Tuple                     # the _TUNE_CACHE key that was populated
+    winner: "TileChoice"           # the cached choice (fallback when fell_back)
+    fell_back: bool                # True iff every candidate failed
+    tried: Tuple["TileChoice", ...]
+    failures: Tuple[str, ...]      # one "CandRepr: ExcType: msg" per failure
+
+
+def is_oom_error(exc: BaseException) -> bool:
+    """Heuristic: does this exception look like a device/VMEM OOM?"""
+    text = f"{type(exc).__name__}: {exc}".lower()
+    return any(m in text for m in _OOM_MARKERS)
+
+
+def estimate_vmem_bytes(tile: "TileChoice", num_levels: int,
+                        num_agents: int, chunk: int = 1) -> int:
+    """Rough per-grid-cell VMEM working set of the clearing kernel, bytes.
+
+    Dominated by the [MB, Ac, L] one-hot binning intermediate, plus the
+    resident books/profiles (6 × [MB, L]) and the per-chunk output paths
+    (3 × [MB, chunk]); all f32. An estimate for dashboards and tile-pressure
+    gauges, not a lowering-accurate allocator model.
+    """
+    ac = tile.agent_chunk or max(1, num_agents)
+    onehot = tile.mb * ac * num_levels
+    books = 6 * tile.mb * num_levels
+    paths = 3 * tile.mb * max(1, chunk)
+    return 4 * (onehot + books + paths)
+
+
+def sweep_reports() -> Tuple["SweepReport", ...]:
+    return tuple(_SWEEP_REPORTS)
+
+
+def last_sweep_report() -> Optional["SweepReport"]:
+    return _SWEEP_REPORTS[-1] if _SWEEP_REPORTS else None
+
 
 class TileChoice(NamedTuple):
     """A resolved kernel tiling: grid tile, padded M, agent-chunk length."""
@@ -121,17 +169,23 @@ def autotune_tile(key: Tuple,
     cached = _TUNE_CACHE.get(key)
     if cached is None:
         best, best_t = None, float("inf")
+        failures = []
         for cand in cands:
             try:
                 t = time_candidate(cand)
-            except Exception:
+            except Exception as exc:  # a rejected/OOM tile disqualifies itself
+                failures.append(f"{cand!r}: {type(exc).__name__}: {exc}")
                 continue
             if t < best_t:
                 best, best_t = cand, t
-        if best is None:  # every candidate failed: the heuristic choice
+        fell_back = best is None
+        if fell_back:  # every candidate failed: the heuristic choice
             best = fallback if fallback is not None else auto_tile(
                 num_markets or 1)
         _TUNE_CACHE[key] = cached = best
+        _SWEEP_REPORTS.append(SweepReport(
+            key=key, winner=best, fell_back=fell_back, tried=tuple(cands),
+            failures=tuple(failures)))
     if num_markets is not None:
         cached = cached._replace(
             m_padded=pad_to_multiple(max(1, num_markets), cached.mb))
@@ -152,3 +206,4 @@ def time_call(fn: Callable[[], object], block: Callable[[object], None],
 
 def clear_tune_cache() -> None:
     _TUNE_CACHE.clear()
+    _SWEEP_REPORTS.clear()

@@ -85,6 +85,7 @@ class PallasChunkRunner(session.ChunkRunner):
     """
 
     xp = jnp
+    compiled = True
     env_traceable = True
     env_runtime_seed = False  # the kernel trace bakes the RNG seed
 

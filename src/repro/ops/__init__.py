@@ -1,0 +1,28 @@
+"""Operations subsystem: failure injection, warm-start, observability.
+
+Three parts, wired through :class:`repro.core.session.Engine`:
+
+  * :mod:`repro.ops.chaos`   — deterministic fault injection at chunk
+    boundaries (device loss, checkpoint corruption, OOM-shaped autotune
+    failures) plus the harness the ``chaos`` test tier drives;
+  * :mod:`repro.ops.warmup`  — ``Engine.warm(specs)`` precompiles the
+    ``(M, A, L, seed) × chunk`` trace set at open so first-request latency
+    is deterministic, and ``Engine.readiness()`` reports which static keys
+    are warm;
+  * :mod:`repro.ops.metrics` — a per-session :class:`MetricsRegistry`
+    sampled entirely outside the jitted graph (zero additional traces,
+    bitwise-invisible to results).
+"""
+from repro.ops.chaos import (  # noqa: F401 (re-exported API)
+    AutotuneOOM,
+    ChaosReport,
+    CheckpointCorruption,
+    DeviceLoss,
+    FaultEvent,
+    FaultPlan,
+    corrupt_checkpoint,
+    force_autotune_oom,
+    run_plan,
+)
+from repro.ops.metrics import MetricsRegistry  # noqa: F401
+from repro.ops.warmup import Readiness, readiness, warm  # noqa: F401

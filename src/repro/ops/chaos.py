@@ -1,0 +1,359 @@
+"""Deterministic failure injection at chunk boundaries (the chaos harness).
+
+A :class:`FaultPlan` schedules faults at exact step coordinates and
+:func:`run_plan` drives a session through them, recovering after each one
+from the last *loadable* checkpoint and replaying the lost steps. Because
+the engine's RNG keys on the absolute step coordinate and snapshots are
+layout-portable (PR 3), recovery is **bitwise**: every replayed chunk must
+equal the chunk originally streamed before the fault, whatever device
+topology the session restarts on. The ``chaos`` test tier
+(``tests/test_chaos.py``) asserts exactly that for every fault class, on
+both single-device and forced-2-device sharded paths.
+
+Fault classes:
+
+  * :class:`DeviceLoss`     — tear the session down and rebuild the engine
+    on a different device set (``devices_after=N`` or
+    ``lost_device=i`` → a mesh over the survivors via
+    ``make_markets_mesh(skip=(i,))``), then restore the last checkpoint
+    onto the new topology.
+  * :class:`CheckpointCorruption` — damage the newest checkpoint on disk
+    (truncate or bit-flip a shard / the manifest) before restarting. The
+    restore path must raise a typed
+    :class:`~repro.checkpoint.manager.CheckpointCorruptError` — never load
+    silently — and the harness falls back down the checkpoint ladder to
+    the newest intact step.
+  * :class:`AutotuneOOM`    — restart with ``autotune=True`` under
+    :func:`force_autotune_oom`, which makes every timed tile candidate
+    fail with an OOM-shaped error; the sweep must degrade to the
+    conservative heuristic tile (never crash), and results stay bitwise.
+
+Every fault is injected *between* chunk dispatches — the simulator's only
+coherent preemption points (mid-chunk state never exists on the host) —
+so plans validate fault coordinates against the chunk length.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import zipfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint.manager import (CheckpointCorruptError,
+                                      CheckpointError, CheckpointManager)
+from repro.core.params import EnsembleSpec
+from repro.core.session import Engine, StepBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """Base fault: fires when the session cursor reaches ``at_step``."""
+
+    at_step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLoss(Fault):
+    """Simulated loss of a device: rebuild on the survivors and restore.
+
+    ``devices_after`` pins the rebuilt mesh width (``devices=N``);
+    ``lost_device`` instead names the lost local device index and spans
+    every survivor (``make_markets_mesh(skip=(lost_device,))``). With
+    neither, the session rebuilds on the engine's original options — a
+    plain restart.
+    """
+
+    devices_after: Optional[int] = None
+    lost_device: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointCorruption(Fault):
+    """Damage the newest checkpoint before restarting.
+
+    ``kind``:   ``"truncate"`` (keep the first half of the bytes) or
+                ``"bitflip"`` (XOR one mid-file byte).
+    ``target``: ``"shard"`` (the first shard_*.npz) or ``"manifest"``.
+    """
+
+    kind: str = "truncate"
+    target: str = "shard"
+
+    def __post_init__(self):
+        if self.kind not in ("truncate", "bitflip"):
+            raise ValueError(f"unknown corruption kind {self.kind!r}")
+        if self.target not in ("shard", "manifest"):
+            raise ValueError(f"unknown corruption target {self.target!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneOOM(Fault):
+    """Restart with the autotune sweep enabled while every timed candidate
+    fails with an OOM-shaped error; the runner must fall back to the
+    conservative heuristic tile."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """What actually happened when one fault fired."""
+
+    fault: Fault
+    at_step: int
+    recovered_from: int          # checkpoint step the session resumed at
+    errors: Tuple[str, ...]      # typed errors hit on the way (corruption)
+    detail: str = ""             # fault-specific notes (tile choice, mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosReport:
+    """Result of :func:`run_plan`."""
+
+    batch: StepBatch             # the full recovered [M, n_steps] stream
+    state: Tuple[np.ndarray, ...]  # final MarketState, host-side
+    events: Tuple[FaultEvent, ...]
+    replay_matched: bool         # every replayed chunk == original, bitwise
+    checkpoints: Tuple[int, ...]  # intact checkpoint steps at exit
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of faults over one simulated run.
+
+    ``checkpoint_every`` steps (0 disables periodic checkpoints beyond the
+    mandatory one at step 0). Fault coordinates and the checkpoint cadence
+    must be chunk-boundary-aligned — faults are injected between chunk
+    dispatches, the engine's only coherent preemption points.
+    """
+
+    faults: Tuple[Fault, ...]
+    checkpoint_every: int = 0
+
+    def __init__(self, faults: Sequence[Fault], checkpoint_every: int = 0):
+        object.__setattr__(self, "faults",
+                           tuple(sorted(faults, key=lambda f: f.at_step)))
+        object.__setattr__(self, "checkpoint_every", int(checkpoint_every))
+
+    def validate(self, chunk: int, n_steps: int) -> None:
+        if self.checkpoint_every and self.checkpoint_every % chunk:
+            raise ValueError(
+                f"checkpoint_every={self.checkpoint_every} is not a "
+                f"multiple of the chunk length {chunk}: checkpoints are "
+                "taken at chunk boundaries")
+        for f in self.faults:
+            if not (0 < f.at_step <= n_steps):
+                raise ValueError(
+                    f"fault {f} fires at step {f.at_step}, outside the "
+                    f"run's (0, {n_steps}] window")
+            if f.at_step % chunk:
+                raise ValueError(
+                    f"fault {f} fires at step {f.at_step}, which is not a "
+                    f"chunk boundary (chunk={chunk}): faults inject at the "
+                    "engine's coherent preemption points only")
+
+
+# ---------------------------------------------------------------------------
+# corruption + OOM injectors (used directly by tests as well)
+# ---------------------------------------------------------------------------
+
+def corrupt_checkpoint(directory, step: int, kind: str = "truncate",
+                       target: str = "shard") -> Path:
+    """Damage one file of checkpoint ``step`` in ``directory`` on disk.
+
+    Returns the path that was damaged. ``kind="truncate"`` keeps the first
+    half of the file's bytes; ``kind="bitflip"`` XORs one mid-file byte.
+    """
+    sdir = Path(directory) / f"step_{step:08d}"
+    if target == "manifest":
+        victim = sdir / "manifest.json"
+    else:
+        shards = sorted(sdir.glob("shard_*.npz"))
+        if not shards:
+            raise FileNotFoundError(f"no shards under {sdir}")
+        victim = shards[0]
+    data = victim.read_bytes()
+    if kind == "truncate":
+        data = data[:max(1, len(data) // 2)]
+    elif kind == "bitflip":
+        i = _payload_offset(victim, data)
+        data = data[:i] + bytes([data[i] ^ 0xFF]) + data[i + 1:]
+    else:
+        raise ValueError(f"unknown corruption kind {kind!r}")
+    victim.write_bytes(data)
+    return victim
+
+
+def _payload_offset(victim: Path, data: bytes) -> int:
+    """A byte offset inside actual *payload* (not container metadata).
+
+    A flip in a zip archive's central directory (timestamps, attributes)
+    can be semantically invisible — the member data still reads back
+    intact, which is not a corruption at all. Aim at the first member's
+    data region instead, so the archive's CRC deterministically trips.
+    Non-zip files (the JSON manifest) just take a mid-file byte.
+    """
+    if victim.suffix == ".npz":
+        with zipfile.ZipFile(victim) as z:
+            info = z.infolist()[0]
+        # local file header: 30 fixed bytes + filename + extra field
+        name_len = int.from_bytes(
+            data[info.header_offset + 26:info.header_offset + 28], "little")
+        extra_len = int.from_bytes(
+            data[info.header_offset + 28:info.header_offset + 30], "little")
+        start = info.header_offset + 30 + name_len + extra_len
+        return min(start + info.compress_size // 2, len(data) - 1)
+    return len(data) // 2
+
+
+class _FakeOom(RuntimeError):
+    """An OOM-shaped failure, as XLA spells device memory exhaustion."""
+
+
+@contextlib.contextmanager
+def force_autotune_oom():
+    """Make every autotune tile-candidate timing call fail OOM-shaped.
+
+    Patches ``repro.kernels.autotune.time_call`` for the duration, so any
+    sweep started inside the context disqualifies every candidate and must
+    fall back to the heuristic tile. The fake error carries XLA's
+    RESOURCE_EXHAUSTED/VMEM markers so ``autotune.is_oom_error`` recognises
+    it.
+    """
+    from repro.kernels import autotune as tune
+
+    real = tune.time_call
+
+    def exploding_time_call(fn, block, trials: int = 2) -> float:
+        raise _FakeOom(
+            "RESOURCE_EXHAUSTED: injected chaos fault: tile candidate "
+            "exceeded VMEM while allocating scratch (out of memory)")
+
+    tune.time_call = exploding_time_call
+    try:
+        yield
+    finally:
+        tune.time_call = real
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+
+def _restore_resilient(session, mgr: CheckpointManager,
+                       errors: List[str]) -> int:
+    """Restore the newest *loadable* checkpoint, walking the ladder down.
+
+    Typed corruption errors are recorded in ``errors`` (the chaos tests
+    assert they were raised — silent loads of damaged data are the bug this
+    module exists to catch) and the next-older step is tried.
+    """
+    for step in sorted(mgr.steps(), reverse=True):
+        try:
+            return session.restore_checkpoint(mgr, step)
+        except CheckpointError as exc:
+            errors.append(f"step {step}: {type(exc).__name__}: {exc}")
+    raise CheckpointCorruptError(
+        "no loadable checkpoint survives in "
+        f"{mgr.dir}; errors: {errors}")
+
+
+def run_plan(plan: FaultPlan, spec, *, backend: str, ckpt_dir,
+             chunk_size: int, engine_opts: Optional[Dict[str, Any]] = None,
+             n_steps: Optional[int] = None, keep: int = 32) -> ChaosReport:
+    """Drive ``spec`` for ``n_steps`` under ``plan``, recovering each fault.
+
+    The harness checkpoints at step 0 and every ``plan.checkpoint_every``
+    steps; when a fault fires it injects the failure, rebuilds the
+    engine/session (on a different device set for :class:`DeviceLoss`),
+    restores the newest loadable checkpoint, and replays the lost chunks.
+    Replayed chunks are compared bitwise against the originally streamed
+    ones (``ChaosReport.replay_matched``); the returned batch is the
+    deduplicated full-horizon stream.
+    """
+    spec = EnsembleSpec.coerce(spec)
+    opts = dict(engine_opts or {})
+    steps = int(n_steps if n_steps is not None else spec.num_steps)
+    plan.validate(chunk_size, steps)
+    mgr = CheckpointManager(ckpt_dir, async_write=False, keep=keep)
+
+    def open_session(engine_opts):
+        eng = Engine(backend, chunk_size=chunk_size, **engine_opts)
+        return eng, eng.open(spec)
+
+    eng, sess = open_session(opts)
+    sess.save_checkpoint(mgr)                 # step 0: the mandatory anchor
+    faults = list(plan.faults)
+    events: List[FaultEvent] = []
+    collected: Dict[int, StepBatch] = {}      # chunk start step -> batch
+    replay_matched = True
+    t = 0
+    while t < steps:
+        if faults and faults[0].at_step == t:
+            fault = faults.pop(0)
+            errors: List[str] = []
+            detail = ""
+            if isinstance(fault, CheckpointCorruption):
+                latest = mgr.latest_step()
+                victim = corrupt_checkpoint(mgr.dir, latest, fault.kind,
+                                            fault.target)
+                detail = f"corrupted {victim.name} of step {latest}"
+                sess.close()
+                eng, sess = open_session(opts)
+            elif isinstance(fault, DeviceLoss):
+                sess.close()
+                new_opts = dict(opts)
+                new_opts.pop("devices", None)
+                new_opts.pop("mesh", None)
+                if fault.devices_after is not None:
+                    new_opts["devices"] = fault.devices_after
+                    detail = f"rebuilt on devices={fault.devices_after}"
+                elif fault.lost_device is not None:
+                    from repro.launch.mesh import make_markets_mesh
+
+                    new_opts["mesh"] = make_markets_mesh(
+                        skip=(fault.lost_device,))
+                    detail = (f"lost device {fault.lost_device}; mesh over "
+                              f"{new_opts['mesh'].devices.size} survivors")
+                eng, sess = open_session(new_opts)
+            elif isinstance(fault, AutotuneOOM):
+                from repro.kernels import autotune as tune
+
+                sess.close()
+                tune.clear_tune_cache()
+                with force_autotune_oom():
+                    eng, sess = open_session({**opts, "autotune": True})
+                report = tune.last_sweep_report()
+                if report is not None:
+                    detail = (f"sweep fell_back={report.fell_back} "
+                              f"winner={report.winner} "
+                              f"failures={len(report.failures)}")
+                    errors.extend(report.failures)
+            else:
+                raise TypeError(f"unknown fault class {type(fault).__name__}")
+            recovered = _restore_resilient(sess, mgr, errors)
+            events.append(FaultEvent(fault=fault, at_step=t,
+                                     recovered_from=recovered,
+                                     errors=tuple(errors), detail=detail))
+            t = recovered
+            continue
+        n = min(chunk_size, steps - t)
+        batch = sess.run(n).to_numpy()
+        prev = collected.get(t)
+        if prev is not None:       # replaying steps lost to a fault
+            for field, a, b in zip(batch._fields, prev, batch):
+                if not (np.asarray(a) == np.asarray(b)).all():
+                    replay_matched = False
+        collected[t] = batch
+        t += n
+        if (plan.checkpoint_every and t < steps
+                and t % plan.checkpoint_every == 0):
+            sess.save_checkpoint(mgr)
+    full = StepBatch.concatenate(
+        [collected[k] for k in sorted(collected)], xp=np)
+    state = tuple(np.asarray(x) for x in sess.state)
+    sess.close()
+    return ChaosReport(batch=full, state=state, events=tuple(events),
+                       replay_matched=replay_matched,
+                       checkpoints=tuple(mgr.steps()))

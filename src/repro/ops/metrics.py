@@ -1,0 +1,115 @@
+"""Zero-hot-path metrics surface: per-session counters, gauges and timings.
+
+A :class:`MetricsRegistry` is attached to every session ``Engine.open``
+creates (disable with ``Engine(backend, metrics=False)`` or per-session
+``open(spec, metrics=False)``). Everything it records is sampled on the
+*host*, strictly outside the jitted graph:
+
+  * no value ever becomes an operand of a compiled executable, so metrics
+    collection causes **zero additional traces** and results stay
+    bitwise-identical to a metrics-off session (asserted by the tier-1
+    test ``tests/test_ops.py::test_metrics_zero_traces_and_bitwise``);
+  * chunk/step timings are dispatch wall-times around the existing host
+    call sites (no ``block_until_ready`` is inserted — blocking would
+    perturb the very latency being observed);
+  * the retrace counter samples the runner's Python-side trace counter
+    before/after each dispatch — two integer reads per chunk.
+
+Recorded by the session wiring (see :class:`repro.core.session.Session`):
+
+  counters  ``steps_total``, ``chunks_total``, ``traces`` (retrace counter:
+            0 on a warm engine), ``snapshots_total``, ``restores_total``
+  timings   ``chunk_seconds``, ``step_seconds``, ``snapshot_seconds``,
+            ``restore_seconds``  (count/total/min/max aggregates)
+  gauges    ``chunk``, ``num_markets``, and on the Pallas engines the
+            autotune tile pressure: ``autotune_vmem_bytes``, ``tile_mb``,
+            ``tile_agent_chunk``
+
+The registry is generic — any consumer may ``inc``/``observe``/``gauge``
+additional series (the serving gateway will add queue depths here).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+
+class Aggregate:
+    """count/total/min/max running aggregate of host-side observations."""
+
+    __slots__ = ("count", "total", "min", "max")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def add(self, value: float) -> None:
+        self.count += 1
+        self.total += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+
+    def summary(self) -> Dict[str, float]:
+        mean = self.total / self.count if self.count else 0.0
+        return {"count": self.count, "total": self.total, "mean": mean,
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0}
+
+
+class MetricsRegistry:
+    """Per-session metrics: counters, gauges, timing aggregates.
+
+    Thread-safe (one lock around the tiny dict updates) so a streaming
+    consumer thread may read :meth:`snapshot` while the session advances.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, Any] = {}
+        self._timings: Dict[str, Aggregate] = {}
+
+    # ---- write side (host-only; never called from inside a trace) ----
+    def inc(self, name: str, value: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + value
+
+    def gauge(self, name: str, value: Any) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            agg = self._timings.get(name)
+            if agg is None:
+                agg = self._timings[name] = Aggregate()
+            agg.add(value)
+
+    # ---- read side ----
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def steps_per_s(self) -> float:
+        """Derived throughput: steps dispatched per second of chunk wall
+        time (dispatch-side; see module docstring for the async caveat)."""
+        with self._lock:
+            steps = self._counters.get("steps_total", 0)
+            agg = self._timings.get("chunk_seconds")
+            secs = agg.total if agg is not None else 0.0
+        return steps / secs if secs > 0 else 0.0
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-python view: {'counters', 'gauges', 'timings', 'derived'}."""
+        with self._lock:
+            out = {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "timings": {k: v.summary() for k, v in self._timings.items()},
+            }
+        out["derived"] = {"steps_per_s": self.steps_per_s()}
+        return out

@@ -1,0 +1,112 @@
+"""Warm-start controller: precompile the trace set at engine open.
+
+The engine's compile-once guarantee makes *steady-state* latency
+deterministic, but the first request after process start still pays the
+full trace+compile cost. ``Engine.warm(specs)`` (delegating here) runs one
+throwaway chunk call per ``(static_key, chunk)`` entry so every executable
+a session will need — the streaming chunk and, optionally, the
+single-step RL/gym executable — is compiled before the first request:
+
+    eng = Engine("pallas-kinetic")
+    eng.warm([spec])              # compiles (M, A, L, seed) x chunk now
+    eng.readiness().ready         # -> True
+    with eng.open(spec) as s:     # first request: ZERO new traces
+        s.run(...)
+
+``readiness()`` is the probe: it reports which static keys are warm
+(host-loop backends compile nothing and are always ready), the shape a
+serving layer needs for its readiness endpoint.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, NamedTuple, Optional, Sequence, Tuple, Union
+
+
+class KeyReadiness(NamedTuple):
+    """Warm/cold status of one cached executable."""
+
+    static_key: Tuple[Any, ...]   # EnsembleSpec.static_key(): (M, A, L, seed)
+    chunk: int
+    warm: bool                    # compiled (or nothing to compile)
+    traces: int                   # times this executable has been traced
+
+
+class Readiness(NamedTuple):
+    """Aggregate probe result: ``ready`` iff every known key is warm.
+
+    An engine with no cached runners reports ``ready=True`` vacuously —
+    probe *after* :func:`warm` (or after opening the serving specs) for a
+    meaningful answer.
+    """
+
+    ready: bool
+    entries: Tuple[KeyReadiness, ...]
+
+    def warm_keys(self) -> Tuple[Tuple[Any, ...], ...]:
+        return tuple(e.static_key + (e.chunk,) for e in self.entries if e.warm)
+
+    def cold_keys(self) -> Tuple[Tuple[Any, ...], ...]:
+        return tuple(e.static_key + (e.chunk,)
+                     for e in self.entries if not e.warm)
+
+
+def _warm_runner(runner, spec) -> None:
+    """Force the runner's executable to compile with one throwaway call.
+
+    The call uses fresh state/params buffers (discarded afterwards — the
+    chunk executable donates them), so warming never touches any live
+    session. Host-loop runners compile nothing and return immediately; an
+    already-traced runner is left alone.
+    """
+    if not runner.compiled or runner.trace_count > 0:
+        return
+    state = runner.init_state(spec)
+    params = runner.params_to_device(spec.params)
+    aux = runner.init_aux(spec)
+    stats = runner.init_stats(spec)
+    runner.run(state, params, aux, 0, runner.chunk, None, stats)
+
+
+def warm(engine, specs: Union[Any, Sequence[Any]], *,
+         chunk_sizes: Optional[Iterable[int]] = None,
+         include_step: bool = True) -> Readiness:
+    """Precompile every ``(static_key, chunk)`` executable for ``specs``.
+
+    ``specs`` is one spec/config or a sequence of them. For each, the
+    engine's default chunk resolution is warmed, plus the ``chunk=1``
+    single-step executable :meth:`Session.step` uses (``include_step``),
+    plus any explicit ``chunk_sizes``. Returns the post-warm
+    :func:`readiness` probe, so ``engine.warm(specs).ready`` is the
+    one-liner a serving layer gates traffic on.
+    """
+    from repro.core.params import EnsembleSpec
+    from repro.core.session import DEFAULT_CHUNK
+
+    if not isinstance(specs, (list, tuple)):
+        specs = [specs]
+    for spec in specs:
+        spec = EnsembleSpec.coerce(spec)
+        chunks = {engine.chunk_size or min(DEFAULT_CHUNK, spec.num_steps)}
+        if include_step:
+            chunks.add(1)
+        for c in chunk_sizes or ():
+            chunks.add(int(c))
+        for c in sorted(chunks):
+            _warm_runner(engine._runner(spec, max(1, c)), spec)
+    return readiness(engine)
+
+
+def readiness(engine) -> Readiness:
+    """Probe which of the engine's cached executables are warm.
+
+    A key is warm when its runner has nothing to compile (host-loop
+    backends) or has been traced at least once (the compile is cached).
+    """
+    entries = []
+    for key, runner in engine._runners.items():
+        entries.append(KeyReadiness(
+            static_key=key[:-1], chunk=key[-1],
+            warm=(not runner.compiled) or runner.trace_count > 0,
+            traces=runner.trace_count))
+    return Readiness(ready=all(e.warm for e in entries),
+                     entries=tuple(entries))

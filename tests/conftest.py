@@ -3,4 +3,8 @@ import sys
 
 # Tests run on the single host device (multi-device cases force N host
 # devices in their own subprocess, or are `distributed`-marked).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+# Repo root too, so tests can import the `benchmarks` package (e.g. the
+# stylized-facts smoke reuses benchmarks.emergent_dynamics.stylized_facts).
+sys.path.insert(0, os.path.join(_HERE, ".."))

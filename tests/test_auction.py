@@ -105,6 +105,85 @@ if HAVE_HYPOTHESIS:
         _check_hillis_steele_matches_cumsum(*bs)
 
 
+# ---- clearing invariants across all seven backends' clearing entries ----
+#
+# Every backend funnels clearing through xp-polymorphic auction.clear():
+# the numpy family calls it with np, the jax/pallas families with jnp (the
+# pallas kernels transcribe the same math in-kernel; their log-depth scan
+# corresponds to the "hillis-steele" variant, so those entries drive it).
+SEVEN_BACKENDS = {
+    "numpy": ("np", "cumsum"),
+    "numpy-splitmix64": ("np", "cumsum"),
+    "numpy-pcg64": ("np", "cumsum"),
+    "jax-scan": ("jnp", "cumsum"),
+    "jax-per-step": ("jnp", "cumsum"),
+    "pallas-naive": ("jnp", "hillis-steele"),
+    "pallas-kinetic": ("jnp", "hillis-steele"),
+}
+
+
+def _clearing_entry(backend):
+    xp_name, scan = SEVEN_BACKENDS[backend]
+    if xp_name == "jnp":
+        import jax.numpy as jnp
+        return jnp, scan
+    return np, scan
+
+
+def _check_backend_clearing_invariants(buy, sell, xp, scan):
+    """Grid/volume/conservation invariants, exact in f32 (integer books)."""
+    L = buy.shape[-1]
+    c = auction.clear(xp.asarray(buy), xp.asarray(sell), xp, scan=scan)
+    c = {k: np.asarray(v) for k, v in c.items()}
+    p = int(c["p_star"][0, 0])
+    v = float(c["volume"][0, 0])
+    # clearing price lands on the grid
+    assert c["p_star"].dtype == np.int32 and 0 <= p < L
+    # executed volume is exactly min(cum-buy, cum-ask) at p*
+    d = auction.suffix_sum(buy, np)
+    s = auction.prefix_sum(sell, np)
+    assert v == min(d[0, p], s[0, p])
+    # volume conserved: every filled unit leaves the book, none invented
+    # (integer quantities <= 50*32 sum exactly in f32)
+    assert float(buy.sum() - c["new_bid"].sum()) == v
+    assert float(sell.sum() - c["new_ask"].sum()) == v
+    assert float(c["traded_buy"].sum()) == v == float(c["traded_sell"].sum())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(books(), st.sampled_from(sorted(SEVEN_BACKENDS)))
+    def test_clearing_invariants_all_seven_backends(bs, backend):
+        _check_backend_clearing_invariants(*bs, *_clearing_entry(backend))
+
+
+@pytest.mark.parametrize("backend", sorted(SEVEN_BACKENDS))
+def test_clearing_invariants_all_seven_backends_fallback(backend):
+    """Seeded fallback when hypothesis is absent: same invariants."""
+    xp, scan = _clearing_entry(backend)
+    rng = np.random.default_rng(7)
+    for L in (4, 8, 16, 32):
+        for _ in range(8):
+            _check_backend_clearing_invariants(*_random_books(rng, L), xp, scan)
+
+
+def test_session_price_path_stays_on_grid_all_seven_backends():
+    """End-to-end: every backend's price path is integer grid levels in
+    [0, L) and volume is never negative."""
+    from repro.core.config import MarketConfig
+    from repro.core.session import Engine
+
+    cfg = MarketConfig(num_markets=4, num_agents=16, num_levels=16,
+                       num_steps=12, seed=3)
+    for backend in sorted(SEVEN_BACKENDS):
+        with Engine(backend).open(cfg) as sess:
+            b = sess.run(cfg.num_steps).to_numpy()
+        prices, volumes = np.asarray(b.price), np.asarray(b.volume)
+        assert (prices == np.round(prices)).all(), backend
+        assert (prices >= 0).all() and (prices < cfg.num_levels).all(), backend
+        assert (volumes >= 0).all(), backend
+
+
 def _random_books(rng, L):
     buy = rng.integers(0, 51, size=(1, L)).astype(np.float32)
     sell = rng.integers(0, 51, size=(1, L)).astype(np.float32)

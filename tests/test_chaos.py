@@ -1,0 +1,213 @@
+"""Chaos tier (`-m chaos`): every fault class recovers bitwise.
+
+Each test drives :func:`repro.ops.chaos.run_plan` through a fault and
+asserts the recovered trajectory is **bitwise-identical** to a fault-free
+run — replayed chunks equal the originally streamed ones, the concatenated
+stream equals the baseline, and the typed corruption errors actually fired
+(damaged checkpoints must never load silently). Single-device cases run
+in-process; the sharded cases re-run the same plans in a forced-2-device
+subprocess (the `_run_probe` pattern from test_distributed.py), so both
+paths are covered on any machine.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.config import scenario_config
+from repro.core.session import Engine
+from repro.ops import (AutotuneOOM, CheckpointCorruption, DeviceLoss,
+                       FaultPlan, run_plan)
+
+pytestmark = pytest.mark.chaos
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# Flash-crash so the recovery window replays a shock (shock_step=11 sits
+# between the step-6 checkpoint and the step-18 faults); chunk=6 makes
+# 12/18 chunk-boundary fault coordinates.
+CFG_KW = dict(num_markets=6, num_agents=16, num_levels=32, num_steps=24,
+              shock_step=11, seed=7)
+CHUNK = 6
+
+BACKENDS = ["pallas-kinetic", "numpy-pcg64"]
+
+
+def _cfg():
+    return scenario_config("flash-crash", **CFG_KW)
+
+
+def _baseline(backend):
+    with Engine(backend, chunk_size=CHUNK).open(_cfg()) as s:
+        return s.run(CFG_KW["num_steps"]).to_numpy()
+
+
+def _assert_bitwise(report, want, ctx):
+    assert report.replay_matched, f"{ctx}: replayed chunks diverged"
+    got = report.batch
+    for f, a, b in zip(want._fields, want, got):
+        assert (np.asarray(a) == np.asarray(b)).all(), \
+            f"{ctx}: stream field {f} differs after recovery"
+
+
+# ---------------------------------------------------------------------------
+# single-device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_device_loss_restores_from_last_snapshot(backend, tmp_path):
+    """Plain restart: rebuild the engine, restore the newest checkpoint,
+    replay — bitwise."""
+    want = _baseline(backend)
+    plan = FaultPlan([DeviceLoss(at_step=18)], checkpoint_every=CHUNK)
+    rep = run_plan(plan, _cfg(), backend=backend, ckpt_dir=tmp_path,
+                   chunk_size=CHUNK)
+    _assert_bitwise(rep, want, f"{backend} device-loss")
+    ev = rep.events[0]
+    assert ev.at_step == 18 and ev.recovered_from == 18
+    assert not ev.errors
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind,target", [("truncate", "shard"),
+                                         ("bitflip", "shard"),
+                                         ("truncate", "manifest"),
+                                         ("bitflip", "manifest")])
+def test_checkpoint_corruption_falls_back_typed(backend, kind, target,
+                                                tmp_path):
+    """A damaged newest checkpoint raises a typed CheckpointCorruptError —
+    never loads silently — and recovery falls back to the previous intact
+    step, still bitwise."""
+    want = _baseline(backend)
+    plan = FaultPlan([CheckpointCorruption(at_step=18, kind=kind,
+                                           target=target)],
+                     checkpoint_every=CHUNK)
+    rep = run_plan(plan, _cfg(), backend=backend, ckpt_dir=tmp_path,
+                   chunk_size=CHUNK)
+    _assert_bitwise(rep, want, f"{backend} corruption {kind}/{target}")
+    ev = rep.events[0]
+    # the corrupt step-18 checkpoint was rejected; step 12 loaded
+    assert ev.recovered_from == 12
+    assert any("CheckpointCorruptError" in e or "CheckpointError" in e
+               for e in ev.errors), ev.errors
+
+
+def test_autotune_oom_falls_back_to_conservative_tile(tmp_path):
+    """Restarting with an OOM-shaped autotune sweep degrades to the
+    heuristic tile (never crashes); the recovered stream stays bitwise."""
+    from repro.kernels import autotune as tune
+
+    want = _baseline("pallas-kinetic")
+    plan = FaultPlan([AutotuneOOM(at_step=12)], checkpoint_every=CHUNK)
+    rep = run_plan(plan, _cfg(), backend="pallas-kinetic", ckpt_dir=tmp_path,
+                   chunk_size=CHUNK)
+    _assert_bitwise(rep, want, "pallas-kinetic autotune-oom")
+    ev = rep.events[0]
+    assert "fell_back=True" in ev.detail
+    assert ev.errors and all("RESOURCE_EXHAUSTED" in e for e in ev.errors)
+    report = tune.last_sweep_report()
+    assert report is not None and report.fell_back
+    tune.clear_tune_cache()
+
+
+def test_multiple_faults_in_one_plan(tmp_path):
+    """Faults compose: a corruption at 12 then a device loss at 18."""
+    want = _baseline("pallas-kinetic")
+    plan = FaultPlan([CheckpointCorruption(at_step=12, kind="bitflip"),
+                      DeviceLoss(at_step=18)], checkpoint_every=CHUNK)
+    rep = run_plan(plan, _cfg(), backend="pallas-kinetic", ckpt_dir=tmp_path,
+                   chunk_size=CHUNK)
+    _assert_bitwise(rep, want, "pallas-kinetic multi-fault")
+    assert [e.at_step for e in rep.events] == [12, 18]
+    assert rep.events[0].recovered_from == 6   # step-12 ckpt was corrupted
+    assert rep.events[1].recovered_from == 18  # rewritten intact on replay
+
+
+def test_plan_validates_chunk_alignment():
+    with pytest.raises(ValueError, match="chunk boundary"):
+        run_plan(FaultPlan([DeviceLoss(at_step=7)]), _cfg(),
+                 backend="numpy", ckpt_dir="/tmp/unused", chunk_size=6)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        run_plan(FaultPlan([DeviceLoss(at_step=6)], checkpoint_every=5),
+                 _cfg(), backend="numpy", ckpt_dir="/tmp/unused",
+                 chunk_size=6)
+    with pytest.raises(ValueError, match="window"):
+        run_plan(FaultPlan([DeviceLoss(at_step=600)]), _cfg(),
+                 backend="numpy", ckpt_dir="/tmp/unused", chunk_size=6)
+
+
+# ---------------------------------------------------------------------------
+# sharded (forced-2-device subprocess, as in test_distributed.py)
+# ---------------------------------------------------------------------------
+
+def _run_probe(code: str, devices: int = 2) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+_SHARDED_PROLOGUE = textwrap.dedent(f"""
+    import tempfile, numpy as np, jax
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.core.config import scenario_config
+    from repro.core.session import Engine
+    from repro.ops import (AutotuneOOM, CheckpointCorruption, DeviceLoss,
+                           FaultPlan, run_plan)
+    cfg = scenario_config("flash-crash", **{CFG_KW!r})
+    with Engine("pallas-kinetic", chunk_size={CHUNK}).open(cfg) as s:
+        want = s.run(cfg.num_steps).to_numpy()
+
+    def check(fault, expect_recovered, expect_errors=0):
+        with tempfile.TemporaryDirectory() as d:
+            rep = run_plan(FaultPlan([fault], checkpoint_every={CHUNK}),
+                           cfg, backend="pallas-kinetic", ckpt_dir=d,
+                           chunk_size={CHUNK}, engine_opts={{"devices": 2}})
+        ev = rep.events[0]
+        assert rep.replay_matched, fault
+        for f, a, b in zip(want._fields, want, rep.batch):
+            assert (np.asarray(a) == np.asarray(b)).all(), (fault, f)
+        assert ev.recovered_from == expect_recovered, ev
+        assert len(ev.errors) >= expect_errors, ev
+        return ev
+""")
+
+
+def test_sharded_device_loss_shrinks_mesh_subprocess():
+    """Drop one of two devices mid-run: the snapshot restores onto the
+    1-device topology (layout-portable) and the stream stays bitwise equal
+    to the single-device baseline."""
+    out = _run_probe(_SHARDED_PROLOGUE + textwrap.dedent("""
+        ev = check(DeviceLoss(at_step=18, devices_after=1), 18)
+        assert "devices=1" in ev.detail, ev.detail
+        ev = check(DeviceLoss(at_step=18, lost_device=0), 18)
+        assert "1 survivors" in ev.detail, ev.detail
+        print("OK")
+    """))
+    assert out.strip().splitlines()[-1] == "OK"
+
+
+def test_sharded_checkpoint_corruption_subprocess():
+    out = _run_probe(_SHARDED_PROLOGUE + textwrap.dedent("""
+        for kind in ("truncate", "bitflip"):
+            ev = check(CheckpointCorruption(at_step=18, kind=kind), 12,
+                       expect_errors=1)
+            assert any("CheckpointCorruptError" in e for e in ev.errors), ev
+        print("OK")
+    """))
+    assert out.strip().splitlines()[-1] == "OK"
+
+
+def test_sharded_autotune_oom_subprocess():
+    out = _run_probe(_SHARDED_PROLOGUE + textwrap.dedent("""
+        ev = check(AutotuneOOM(at_step=12), 12, expect_errors=1)
+        assert "fell_back=True" in ev.detail, ev.detail
+        print("OK")
+    """))
+    assert out.strip().splitlines()[-1] == "OK"

@@ -1,0 +1,167 @@
+"""CheckpointManager negative paths: typed errors, never silent loads.
+
+Satellite coverage for the ops-hardening PR: every damage mode a restore
+can hit raises a *typed* error naming the offending file/leaf/field —
+the historical failure mode was an opaque pytree unflatten error (or, for
+shape mismatches, a deep broadcast error inside placement).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (FORMAT_VERSION, CheckpointCorruptError,
+                                      CheckpointError, CheckpointManager,
+                                      CheckpointShapeError,
+                                      CheckpointVersionError, session_tree,
+                                      snapshot_from_tree)
+from repro.core.config import MarketConfig
+from repro.core.session import Engine
+from repro.ops.chaos import corrupt_checkpoint
+
+CFG = MarketConfig(num_markets=4, num_agents=16, num_levels=16, num_steps=12,
+                   seed=3)
+
+
+def _saved_manager(tmp_path, cfg=CFG, backend="numpy-pcg64"):
+    sess = Engine(backend).open(cfg)
+    sess.run(5)
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    step = sess.save_checkpoint(mgr)
+    return mgr, step, sess
+
+
+# ---- corrupt payloads ----
+
+def test_truncated_shard_raises_typed_error(tmp_path):
+    mgr, step, _ = _saved_manager(tmp_path)
+    victim = corrupt_checkpoint(mgr.dir, step, "truncate", "shard")
+    with pytest.raises(CheckpointCorruptError, match=victim.name):
+        mgr.restore(step)
+
+
+def test_bitflipped_shard_raises_typed_error(tmp_path):
+    mgr, step, _ = _saved_manager(tmp_path)
+    victim = corrupt_checkpoint(mgr.dir, step, "bitflip", "shard")
+    with pytest.raises(CheckpointCorruptError, match=victim.name):
+        mgr.restore(step)
+
+
+def test_corrupt_manifest_raises_typed_error(tmp_path):
+    mgr, step, _ = _saved_manager(tmp_path)
+    corrupt_checkpoint(mgr.dir, step, "truncate", "manifest")
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        mgr.restore(step)
+
+
+def test_missing_leaf_raises_typed_error(tmp_path):
+    mgr, step, _ = _saved_manager(tmp_path)
+    sdir = mgr.dir / f"step_{step:08d}"
+    manifest = json.loads((sdir / "manifest.json").read_text())
+    manifest["leaves"]["state/not_a_real_leaf"] = {"shape": [1], "dtype": "float32"}
+    (sdir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptError, match="not_a_real_leaf"):
+        mgr.restore(step)
+
+
+def test_manifest_shape_mismatch_raises_typed_error(tmp_path):
+    mgr, step, _ = _saved_manager(tmp_path)
+    sdir = mgr.dir / f"step_{step:08d}"
+    manifest = json.loads((sdir / "manifest.json").read_text())
+    manifest["leaves"]["state/bid"]["shape"] = [99, 99]
+    (sdir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptError, match="state/bid"):
+        mgr.restore(step)
+
+
+# ---- wrong format version ----
+
+def test_wrong_version_meta_leaf_raises_version_error(tmp_path):
+    _, _, sess = _saved_manager(tmp_path)
+    tree = session_tree(sess.snapshot())
+    meta = json.loads(str(tree["meta"]))
+    assert meta["format_version"] == FORMAT_VERSION
+    meta["format_version"] = FORMAT_VERSION + 1
+    tree["meta"] = np.asarray(json.dumps(meta))
+    with pytest.raises(CheckpointVersionError, match="format_version"):
+        snapshot_from_tree(tree)
+
+
+def test_preversioning_meta_still_loads(tmp_path):
+    """Checkpoints written before format_version existed keep loading."""
+    _, _, sess = _saved_manager(tmp_path)
+    tree = session_tree(sess.snapshot())
+    meta = json.loads(str(tree["meta"]))
+    meta.pop("format_version")
+    tree["meta"] = np.asarray(json.dumps(meta))
+    snap = snapshot_from_tree(tree)
+    assert snap["t"] == 5 and "format_version" not in snap
+
+
+def test_garbage_meta_leaf_raises_corrupt_error(tmp_path):
+    _, _, sess = _saved_manager(tmp_path)
+    tree = session_tree(sess.snapshot())
+    tree["meta"] = np.asarray("{not json")
+    with pytest.raises(CheckpointCorruptError, match="JSON"):
+        snapshot_from_tree(tree)
+
+
+# ---- restore-time (M, A, L) shape mismatches name the offending field ----
+
+@pytest.mark.parametrize("field,override", [
+    ("num_markets", dict(num_markets=6)),
+    ("num_levels", dict(num_levels=32)),
+])
+def test_shape_mismatch_on_restore_names_field(tmp_path, field, override):
+    snap = Engine("numpy").open(dataclasses.replace(CFG, **override)) \
+        .snapshot()
+    sess = Engine("numpy").open(CFG)
+    with pytest.raises(CheckpointShapeError, match=field):
+        sess.restore(snap)
+    # a failed restore leaves the session untouched and usable
+    assert sess.step_count == 0
+    sess.run(2)
+
+
+def test_num_agents_mismatch_names_field():
+    snap = Engine("numpy").open(dataclasses.replace(CFG, num_agents=32)) \
+        .snapshot()
+    sess = Engine("numpy").open(CFG)
+    with pytest.raises(CheckpointShapeError, match="num_agents"):
+        sess.restore(snap)
+    # CheckpointShapeError subclasses ValueError: pre-existing callers that
+    # caught ValueError for this mismatch keep working.
+    with pytest.raises(ValueError):
+        sess.restore(snap)
+
+
+def test_params_leaf_shape_mismatch_names_num_markets():
+    snap = Engine("numpy").open(CFG).snapshot()
+    bad = dict(snap)
+    bad["params"] = {k: np.vstack([v, v]) for k, v in snap["params"].items()}
+    sess = Engine("numpy").open(CFG)
+    with pytest.raises(CheckpointShapeError, match="num_markets"):
+        sess.restore(bad)
+
+
+def test_error_hierarchy():
+    assert issubclass(CheckpointCorruptError, CheckpointError)
+    assert issubclass(CheckpointCorruptError, IOError)
+    assert issubclass(CheckpointVersionError, ValueError)
+    assert issubclass(CheckpointShapeError, ValueError)
+
+
+# ---- steps() listing ----
+
+def test_steps_lists_committed_checkpoints(tmp_path):
+    sess = Engine("numpy").open(dataclasses.replace(CFG, num_steps=40))
+    mgr = CheckpointManager(tmp_path, async_write=False, keep=10)
+    for _ in range(3):
+        sess.run(4)
+        sess.save_checkpoint(mgr)
+    assert mgr.steps() == [4, 8, 12]
+    assert mgr.latest_step() == 12
+    # a directory without a manifest is not a committed checkpoint
+    (mgr.dir / "step_00000099").mkdir()
+    assert mgr.steps() == [4, 8, 12]

@@ -1,0 +1,38 @@
+"""Slow stylized-facts smoke: the engine still produces emergent dynamics.
+
+Revives benchmarks/emergent_dynamics.py as a nightly guardrail — the
+measurement is :func:`benchmarks.emergent_dynamics.stylized_facts`, the
+same function the Fig-7 benchmark reports, on the pinned high-vol
+momentum-heavy configuration. The thresholds are qualitative (the paper's
+stylized facts), with wide margins against seed noise: measured kurtosis
+is ~3.9 and volume/volatility correlation ~0.06-0.09 across seeds.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.emergent_dynamics import high_vol_smoke_config, stylized_facts
+
+pytestmark = pytest.mark.slow
+
+
+def test_high_vol_preset_exhibits_stylized_facts():
+    facts = stylized_facts(high_vol_smoke_config())
+    # fat tails: raw kurtosis above the Gaussian value of 3
+    assert facts["kurtosis"] > 3.0, facts
+    assert facts["excess_kurtosis"] == pytest.approx(facts["kurtosis"] - 3.0)
+    # volume stimulation: |returns| positively correlated with volume
+    assert facts["volume_volatility_corr"] > 0.0, facts
+    # sanity on the rest of the battery
+    assert facts["volatility"] > 0 and facts["volume_per_step"] > 0
+    assert np.isfinite(facts["acf_abs_lag1"])
+
+
+def test_stylized_facts_deterministic_across_backends():
+    """The battery is a pure function of the trajectory: the numpy
+    reference backend reproduces the jax-scan numbers on the same config
+    (short run; this is a determinism check, not a threshold check)."""
+    cfg = high_vol_smoke_config(num_steps=60)
+    a = stylized_facts(cfg, backend="jax-scan")
+    b = stylized_facts(cfg, backend="numpy")
+    for k in a:
+        assert a[k] == pytest.approx(b[k], rel=1e-5), k

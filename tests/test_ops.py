@@ -1,0 +1,213 @@
+"""Operations subsystem (repro.ops): metrics, warm-start, OOM degradation.
+
+Tier-1 acceptance for the ops hardening:
+  * metrics collection causes **zero additional traces** and results stay
+    bitwise-identical to a metrics-off session (the zero-hot-path
+    guarantee), on every compiled backend;
+  * ``Engine.warm(specs)`` precompiles the full ``(static_key, chunk)``
+    trace set so the first open/run/step after warm never retraces, and
+    ``readiness()`` reports warm/cold keys truthfully;
+  * an OOM-shaped autotune sweep (every tile candidate fails) degrades to
+    the conservative heuristic tile — bitwise-identical results, never a
+    crash.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.config import MarketConfig
+from repro.core.session import DEFAULT_CHUNK, Engine
+from repro.kernels import autotune as tune
+from repro.ops import force_autotune_oom
+from repro.ops.metrics import MetricsRegistry
+
+CFG = MarketConfig(num_markets=4, num_agents=16, num_levels=16, num_steps=12,
+                   seed=3)
+
+COMPILED_BACKENDS = ["jax-scan", "jax-per-step", "pallas-naive",
+                     "pallas-kinetic"]
+ALL_BACKENDS = ["numpy", "numpy-splitmix64", "numpy-pcg64"] + COMPILED_BACKENDS
+
+
+def _batches_equal(a, b):
+    a, b = a.to_numpy(), b.to_numpy()
+    return all((np.asarray(x) == np.asarray(y)).all() for x, y in zip(a, b))
+
+
+# ---- metrics: zero traces, bitwise parity ----
+
+@pytest.mark.parametrize("backend", ["numpy-pcg64", "jax-scan",
+                                     "pallas-kinetic"])
+def test_metrics_zero_traces_and_bitwise(backend):
+    """The headline guarantee: a metrics-on session produces bitwise the
+    same stream as a metrics-off session and causes traces_delta == 0."""
+    eng = Engine(backend)
+    off = eng.open(CFG, metrics=False)
+    batch_off = off.run(12)
+    traces_before = eng.trace_count
+
+    on = eng.open(CFG)  # metrics on by default
+    assert isinstance(on.metrics, MetricsRegistry)
+    batch_on = on.run(12)
+    assert eng.trace_count - traces_before == 0, "metrics caused a retrace"
+    assert _batches_equal(batch_off, batch_on)
+    snap = on.metrics.snapshot()
+    assert snap["counters"]["steps_total"] == 12
+    assert snap["counters"]["chunks_total"] == 1
+    assert snap["counters"].get("traces", 0) == 0  # warm engine
+    assert snap["timings"]["chunk_seconds"]["count"] == 1
+    assert on.metrics.steps_per_s() > 0
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_metrics_recorded_series(backend):
+    """Every session records the documented counters/timings/gauges."""
+    eng = Engine(backend)
+    with eng.open(CFG) as sess:
+        sess.run(8)
+        sess.step()
+        snap_dict = sess.snapshot()
+        sess.restore(snap_dict)
+        m = sess.metrics.snapshot()
+    assert m["counters"]["steps_total"] == 9
+    assert m["counters"]["snapshots_total"] == 1
+    assert m["counters"]["restores_total"] == 1
+    assert m["gauges"]["num_markets"] == CFG.num_markets
+    for series in ("chunk_seconds", "step_seconds", "snapshot_seconds",
+                   "restore_seconds"):
+        assert m["timings"][series]["count"] >= 1, series
+    if backend.startswith("pallas"):
+        assert m["gauges"]["autotune_vmem_bytes"] > 0
+        assert m["gauges"]["tile_mb"] >= 1
+
+
+def test_metrics_disabled_engine_wide_and_per_open():
+    eng = Engine("numpy", metrics=False)
+    assert eng.open(CFG).metrics is None
+    assert eng.open(CFG, metrics=True).metrics is not None
+    eng2 = Engine("numpy")
+    assert eng2.open(CFG, metrics=False).metrics is None
+    assert eng2.open(CFG).metrics is not None
+
+
+def test_metrics_registry_aggregates():
+    m = MetricsRegistry()
+    m.inc("c")
+    m.inc("c", 4)
+    for v in (0.5, 1.5, 1.0):
+        m.observe("t", v)
+    m.gauge("g", 7)
+    snap = m.snapshot()
+    assert m.counter("c") == 5 and m.counter("missing") == 0
+    agg = snap["timings"]["t"]
+    assert agg["count"] == 3 and agg["min"] == 0.5 and agg["max"] == 1.5
+    assert agg["total"] == pytest.approx(3.0)
+    assert agg["mean"] == pytest.approx(1.0)
+    assert snap["gauges"]["g"] == 7
+    assert m.steps_per_s() == 0.0  # no chunk timings recorded
+
+
+# ---- warm-start controller ----
+
+@pytest.mark.parametrize("backend", COMPILED_BACKENDS)
+def test_warm_precompiles_whole_trace_set(backend):
+    """After warm(), the first open/run/step triggers zero new traces."""
+    eng = Engine(backend)
+    ready = eng.warm(CFG)
+    assert ready.ready
+    traces = eng.trace_count
+    assert traces >= 2  # chunk executable + the single-step executable
+    with eng.open(CFG) as sess:
+        sess.run(12)
+        sess.run(5)
+        sess.step()
+    assert eng.trace_count == traces, "first request retraced after warm"
+
+
+def test_warm_numpy_is_a_ready_noop():
+    eng = Engine("numpy")
+    ready = eng.warm(CFG)
+    assert ready.ready and eng.trace_count == 0
+    for entry in ready.entries:
+        assert entry.warm and entry.traces == 0
+
+
+def test_readiness_cold_to_warm_transition():
+    eng = Engine("pallas-kinetic")
+    assert eng.readiness().ready  # vacuously: no cached executables yet
+    runner = eng._runner(CFG, 12)  # build without compiling
+    probe = eng.readiness()
+    assert not probe.ready
+    assert probe.cold_keys() and not probe.warm_keys()
+    eng.warm(CFG, include_step=False)
+    probe = eng.readiness()
+    assert probe.ready and not probe.cold_keys()
+    entry = probe.entries[0]
+    assert entry.chunk == 12 and entry.static_key[-1] == CFG.seed
+    assert runner.trace_count == 1
+
+
+def test_warm_multiple_specs_and_chunk_sizes():
+    eng = Engine("jax-scan")
+    other = dataclasses.replace(CFG, num_steps=24, seed=4)
+    ready = eng.warm([CFG, other], chunk_sizes=[6], include_step=False)
+    assert ready.ready
+    # default chunk per spec (12 and 24) plus the explicit 6 for each spec
+    chunks = sorted(e.chunk for e in ready.entries)
+    assert chunks == [6, 6, 12, 24]
+    traces = eng.trace_count
+    eng.warm([CFG, other], chunk_sizes=[6], include_step=False)  # idempotent
+    assert eng.trace_count == traces
+
+
+def test_warm_default_chunk_matches_open():
+    big = dataclasses.replace(CFG, num_steps=10 * DEFAULT_CHUNK)
+    eng = Engine("jax-scan")
+    eng.warm(big, include_step=False)
+    traces = eng.trace_count
+    with eng.open(big) as sess:
+        sess.run(DEFAULT_CHUNK)
+    assert eng.trace_count == traces
+
+
+# ---- OOM-shaped autotune failure degrades to the conservative tile ----
+
+def test_autotune_oom_degrades_to_heuristic_tile():
+    """Every tile candidate failing OOM-shaped must fall back to the
+    heuristic tile with bitwise-identical results — never crash."""
+    with Engine("pallas-kinetic").open(CFG) as sess:
+        want = sess.run(12)
+    tune.clear_tune_cache()
+    try:
+        with force_autotune_oom():
+            eng = Engine("pallas-kinetic", autotune=True)
+            with eng.open(CFG) as sess:
+                got = sess.run(12)
+                runner = sess._runner
+        report = tune.last_sweep_report()
+        assert report is not None and report.fell_back
+        assert len(report.failures) == len(report.tried) >= 1
+        assert all("RESOURCE_EXHAUSTED" in f for f in report.failures)
+        heuristic = tune.auto_tile(CFG.num_markets, CFG.num_agents)
+        assert runner.tile == heuristic
+        assert _batches_equal(want, got)
+    finally:
+        tune.clear_tune_cache()
+
+
+def test_is_oom_error_markers():
+    assert tune.is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: ..."))
+    assert tune.is_oom_error(MemoryError("out of memory"))
+    assert tune.is_oom_error(ValueError("exceeded VMEM limit"))
+    assert not tune.is_oom_error(ValueError("shape mismatch"))
+
+
+def test_estimate_vmem_bytes_scales_with_tile():
+    small = tune.TileChoice(mb=8, m_padded=8, agent_chunk=64)
+    big = tune.TileChoice(mb=16, m_padded=16, agent_chunk=None)
+    a = tune.estimate_vmem_bytes(small, num_levels=32, num_agents=256)
+    b = tune.estimate_vmem_bytes(big, num_levels=32, num_agents=256)
+    assert 0 < a < b
+    # dominated by the [MB, Ac, L] one-hot intermediate
+    assert a >= 4 * 8 * 64 * 32

@@ -218,6 +218,49 @@ def test_default_chunk_bounds():
     assert eng.open(CFG)._runner.chunk == CFG.num_steps
 
 
+# ---- satellite: mid-stream snapshot/restore semantics (ops PR) ----
+
+@pytest.mark.parametrize("backend", ["numpy-pcg64", "pallas-kinetic"])
+def test_mid_stream_snapshot_is_chunk_aligned(backend):
+    """snapshot() between streamed chunks is chunk-boundary-aligned: it
+    captures exactly the state after the last yielded chunk (the cursor
+    only ever moves one whole compiled chunk at a time), bitwise equal to
+    a snapshot after an explicit run() of the same steps."""
+    eng = _engine(backend)
+    sess = eng.open(CFG, chunk_size=4)
+    it = sess.stream(12)
+    next(it)
+    snap = sess.snapshot()
+    assert snap["t"] == 4 == sess.step_count
+    ref_sess = eng.open(CFG, chunk_size=4)
+    ref_sess.run(4)
+    ref = ref_sess.snapshot()
+    for f in STATE_FIELDS:
+        assert (np.asarray(snap[f]) == np.asarray(ref[f])).all(), f
+    assert snap["rng"] == ref["rng"]
+    # the in-flight iterator keeps its fixed schedule after the snapshot
+    assert sum(b.num_steps for b in it) == 8
+    assert sess.step_count == 12
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas-kinetic"])
+def test_restore_during_active_stream_raises(backend):
+    """restore() under an in-flight stream() is rejected with a clear
+    error (the iterator would keep the pre-restore cursor); closing or
+    exhausting the iterator re-enables it."""
+    eng = _engine(backend)
+    sess = eng.open(CFG, chunk_size=4)
+    snap0 = sess.snapshot()
+    it = sess.stream(12)
+    next(it)
+    with pytest.raises(RuntimeError, match="active stream"):
+        sess.restore(snap0)
+    it.close()
+    sess.restore(snap0)
+    assert sess.step_count == 0
+    assert sess.run(12).num_steps == 12
+
+
 # ---- satellite: backend availability introspection ----
 
 def test_backend_available():
