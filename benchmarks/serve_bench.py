@@ -1,0 +1,104 @@
+"""Serving-gateway load benchmark: N concurrent streaming clients.
+
+Drives :class:`repro.serve.Gateway` with a load-generating swarm of
+in-process clients (the same transport the tests use — no sockets, so the
+numbers isolate gateway/engine cost from kernel TCP) and emits
+``BENCH_serve.json`` rows:
+
+* ``serve/attach/<backend>/c<N>``  — admission throughput: sessions/s from
+  first ``open_session`` to every client holding its first frame (slot
+  splice + warm-trace reuse; no compile on this path, ever);
+* ``serve/stream/<backend>/c<N>``  — steady-state fan-out: aggregate
+  frames/s delivered across all clients, with the gateway's bounded-window
+  per-chunk p50/p99 latency.
+
+Every row asserts ``traces_delta == 0`` after warmup — a serving gateway
+that retraces under client churn is a regression, and CI's
+retrace-regression check reads these fields from the JSON artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+from benchmarks.common import FULL, Row, emit
+from repro.serve import Gateway, parked_template
+
+BACKENDS = ["jax-scan", "pallas-kinetic"]
+CLIENT_SWEEP = [8, 32, 128] if FULL else [8, 32]
+A = 256 if FULL else 32
+L = 128 if FULL else 32
+CHUNK = 32 if FULL else 8
+SCENARIOS = ["baseline", "flash-crash", "high-vol", "thin-book"]
+
+
+async def _drive(backend: str, n_clients: int, frames_per_client: int):
+    tpl = parked_template(slots=n_clients, num_agents=A, num_levels=L,
+                          num_steps=1_000_000)
+    gw = Gateway(tpl, backend=backend, chunk_size=CHUNK,
+                 queue_maxsize=frames_per_client + 4)
+    # +2 chunks: one for the lag-one pipeline, one for attach alignment
+    await gw.start(chunks=frames_per_client + 2)
+
+    t0 = time.perf_counter()
+    clients = [gw.open_session(SCENARIOS[i % len(SCENARIOS)],
+                               client=f"load-{i}")
+               for i in range(n_clients)]
+    await asyncio.gather(*(c.frames(1) for c in clients))
+    attach_s = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    streams = await asyncio.gather(
+        *(c.frames(frames_per_client - 1) for c in clients))
+    stream_s = time.perf_counter() - t1
+    n_frames = n_clients + sum(len(s) for s in streams)
+    steps = sum(f.num_steps for s in streams for f in s)
+
+    lat = gw.metrics.window("chunk_latency_seconds").summary()
+    delta = gw.traces_delta
+    await gw.stop()
+    if delta != 0:
+        raise AssertionError(
+            f"{backend}/c{n_clients}: {delta} retrace(s) while serving — "
+            "the warm-serving contract is broken")
+    return {
+        "attach_s": attach_s, "stream_s": stream_s, "frames": n_frames,
+        "steps": steps, "p50_ms": lat["p50"] * 1e3,
+        "p99_ms": lat["p99"] * 1e3, "traces_delta": delta,
+    }
+
+
+def run(backends=None, clients=None, frames: int = 40) -> list:
+    rows: list[Row] = []
+    for backend in backends or BACKENDS:
+        for n in clients or CLIENT_SWEEP:
+            r = asyncio.run(_drive(backend, n, frames))
+            sessions_per_s = n / r["attach_s"] if r["attach_s"] else 0.0
+            frames_per_s = (r["frames"] / r["stream_s"]
+                            if r["stream_s"] else 0.0)
+            rows.append((
+                f"serve/attach/{backend}/c{n}", r["attach_s"] * 1e6,
+                f"clients={n};sessions_per_s={sessions_per_s:.1f};"
+                f"traces_delta={r['traces_delta']}"))
+            rows.append((
+                f"serve/stream/{backend}/c{n}", r["stream_s"] * 1e6,
+                f"clients={n};frames_per_s={frames_per_s:.1f};"
+                f"steps_per_s={r['steps'] / r['stream_s']:.0f};"
+                f"chunk_p50_ms={r['p50_ms']:.3f};"
+                f"chunk_p99_ms={r['p99_ms']:.3f};"
+                f"traces_delta={r['traces_delta']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", nargs="*", default=BACKENDS)
+    ap.add_argument("--clients", nargs="*", type=int, default=CLIENT_SWEEP)
+    ap.add_argument("--frames", type=int, default=40,
+                    help="frames each client consumes")
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_*.json artifact here")
+    ns = ap.parse_args()
+    emit(run(ns.backends, ns.clients, ns.frames), json_path=ns.json,
+         benchmark="serve")

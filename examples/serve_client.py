@@ -1,0 +1,80 @@
+"""Minimal async serving client: N sessions over one warm gateway.
+
+    PYTHONPATH=src python examples/serve_client.py [n_clients]
+
+Starts an in-process :class:`repro.serve.Gateway` (one warm engine, all
+slots parked), opens ``n_clients`` concurrent sessions with a mixture of
+scenario presets, and consumes each session's frame stream — the same
+code path a WebSocket consumer runs, minus the socket. Also probes the
+HTTP health endpoint the load balancer would use. Attaching a session is
+a parameter-row splice into the running ensemble, so the whole demo
+compiles exactly once, during ``Gateway.start``; the final line asserts
+``traces_delta == 0``.
+"""
+import asyncio
+import json
+import os
+import sys
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serve import Gateway, parked_template
+from repro.serve.transport import HealthServer
+
+SCENARIOS = ["baseline", "flash-crash", "high-vol", "thin-book"]
+
+
+async def consume(name: str, cs, n_frames: int) -> None:
+    """One client: read frames as they stream, print a rolling summary."""
+    got = 0
+    async for frame in cs.subscription:
+        if not hasattr(frame, "mid"):       # control Event (attach/close)
+            print(f"  {name}: event {frame.kind} {frame.payload}")
+            if frame.kind == "closed":
+                return
+            continue
+        print(f"  {name}: chunk {frame.seq:2d} steps "
+              f"[{frame.step0}, {frame.step0 + frame.num_steps}) "
+              f"mid={float(frame.mid.mean()):6.2f}")
+        got += 1
+        if got >= n_frames:
+            cs.close()
+            return
+
+
+async def main(n_clients: int) -> None:
+    template = parked_template(slots=max(8, n_clients), num_agents=64,
+                               num_levels=64, num_steps=100_000)
+    gateway = Gateway(template, backend="jax-scan", chunk_size=32,
+                      queue_maxsize=8)
+    await gateway.start()
+
+    health = HealthServer(gateway)
+    port = await health.start()
+
+    def probe():   # blocking client -> executor, off the serving loop
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/healthz", timeout=5) as r:
+            return json.loads(r.read())
+
+    loop = asyncio.get_running_loop()
+    print(f"healthz: {await loop.run_in_executor(None, probe)}")
+
+    clients = [gateway.open_session(SCENARIOS[i % len(SCENARIOS)],
+                                    client=f"user-{i}")
+               for i in range(n_clients)]
+    print(f"{n_clients} sessions attached to "
+          f"{gateway.health()['slots']} slots\n")
+    await asyncio.gather(*(consume(cs.client, cs, n_frames=4)
+                           for cs in clients))
+
+    await health.stop()
+    await gateway.stop()
+    assert gateway.traces_delta == 0
+    print(f"\nserved {n_clients} clients with "
+          f"{gateway.traces_delta} retraces after warmup")
+
+
+if __name__ == "__main__":
+    asyncio.run(main(int(sys.argv[1]) if len(sys.argv) > 1 else 6))

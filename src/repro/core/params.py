@@ -100,6 +100,35 @@ _INT_FIELDS = ("shock_step", "num_makers", "num_momentum",
                "num_fundamentalists")
 
 
+def replace_rows(params: MarketParams, slots, rows: MarketParams,
+                 ) -> MarketParams:
+    """Host-side row splice: ``params`` with markets ``slots`` replaced by
+    the rows of ``rows`` (a ``len(slots)``-market params pytree).
+
+    The serving gateway's slot mutation primitive: attaching/detaching a
+    client's market into a running ensemble is a pure value update — the
+    result has identical shapes/dtypes, so re-placing it on device reuses
+    the warm executable (shape-semantic cache keys) and every *other* row
+    is carried over bitwise-untouched.
+    """
+    idx = np.asarray(slots, dtype=np.int64).reshape(-1)
+    M = params.num_markets
+    if idx.size != rows.num_markets:
+        raise ValueError(
+            f"replace_rows got {idx.size} slots but {rows.num_markets} "
+            "replacement rows")
+    if idx.size != np.unique(idx).size:
+        raise ValueError(f"slots must be unique, got {idx.tolist()}")
+    if ((idx < 0) | (idx >= M)).any():
+        raise ValueError(f"slots {idx.tolist()} out of range [0, {M})")
+    out = []
+    for f, leaf, src in zip(MarketParams._fields, params, rows):
+        leaf = np.array(np.asarray(leaf), dtype=MarketParams.field_dtype(f))
+        leaf[idx] = np.asarray(src, dtype=leaf.dtype)
+        out.append(leaf)
+    return MarketParams(*out)
+
+
 def _config_values(cfg: MarketConfig) -> Dict[str, float]:
     """One config's scenario-varying values, keyed by MarketParams field."""
     return {
@@ -326,6 +355,36 @@ class EnsembleSpec:
         return (self.num_markets, self.num_agents, self.num_levels, self.seed)
 
     # ---- builders for parameter updates (no retrace: same static key) ----
+    def replace_markets(self, slots, sub: "EnsembleSpec") -> "EnsembleSpec":
+        """New spec with markets ``slots`` replaced by the rows of ``sub``.
+
+        The spec-level twin of :func:`replace_rows`, carrying the scenario
+        labels and per-market opening-book fields along with the params —
+        the serving gateway's attach/detach bookkeeping. ``sub`` must agree
+        with this spec on every static field (shapes/seed/horizon), so the
+        result keeps this spec's :meth:`static_key` and therefore its warm
+        executable.
+        """
+        for f in _STATIC_FIELDS:
+            if getattr(sub, f) != getattr(self, f):
+                raise ValueError(
+                    f"replace_markets rows must agree on static field {f!r}:"
+                    f" this spec has {getattr(self, f)}, the replacement has"
+                    f" {getattr(sub, f)}")
+        idx = np.asarray(slots, dtype=np.int64).reshape(-1)
+        scenarios = list(self.scenarios or ("?",) * self.num_markets)
+        quote = np.array(self.initial_quote_qty, np.float32)
+        spread = np.array(self.initial_spread, np.int32)
+        params = replace_rows(self.params, idx, sub.params)  # validates idx
+        quote[idx] = np.asarray(sub.initial_quote_qty, np.float32)
+        spread[idx] = np.asarray(sub.initial_spread, np.int32)
+        for k, slot in enumerate(idx):
+            scenarios[slot] = (sub.scenarios[k] if k < len(sub.scenarios)
+                               else "?")
+        return dataclasses.replace(
+            self, params=params, initial_quote_qty=quote,
+            initial_spread=spread, scenarios=tuple(scenarios))
+
     def with_values(self, **fields: Any) -> "EnsembleSpec":
         """New spec with some :class:`MarketParams` leaves replaced.
 
@@ -428,6 +487,41 @@ class EnsembleSpec:
                 f"session horizon); markets {bad[:8].tolist()} place the "
                 "shock at or past it and a default-length run would "
                 "silently never fire it")
+
+    @classmethod
+    def parked(cls, like: "EnsembleSpec", num_markets: int = None,
+               ) -> "EnsembleSpec":
+        """A minimal-activity ensemble agreeing with ``like`` on every
+        static field — the serving gateway's *parked slot* rows.
+
+        A detached slot keeps simulating (the step loop is branch-free and
+        shape-static; removing a row would retrace), so parked rows are
+        built to make that dead work as inert as possible: no scenario
+        events (``shock_step=-1``), all agents quoting passively at the mid
+        with zero offset and unit size (``p_marketable=0``,
+        ``noise_delta=0``, ``q_max=1``, no maker/momentum/fundamentalist
+        blocks), and empty opening books. The slot still costs its share of
+        the ensemble's fixed per-chunk work — what it never costs is an
+        extra trace, host sync, or any effect on other rows.
+        """
+        M = like.num_markets if num_markets is None else int(num_markets)
+        values = dict(
+            shock_step=-1, shock_intensity=0.0, shock_cancel=0.0,
+            p_marketable=0.0, q_max=1.0, noise_delta=0.0,
+            maker_half_spread=0.0, fundamental=float(like.num_levels // 2),
+            fundamentalist_kappa=0.0, num_makers=0, num_momentum=0,
+            num_fundamentalists=0)
+        return cls(
+            num_markets=M, num_agents=like.num_agents,
+            num_levels=like.num_levels, num_steps=like.num_steps,
+            seed=like.seed,
+            params=MarketParams(**{
+                f: np.full((M, 1), values[f], MarketParams.field_dtype(f))
+                for f in MarketParams._fields}),
+            initial_quote_qty=np.zeros(M, np.float32),
+            initial_spread=np.zeros(M, np.int32),
+            scenarios=("parked",) * M,
+        )
 
     def __repr__(self) -> str:  # arrays make the dataclass repr unreadable
         kinds = [f"{name}×{len(list(group))}"

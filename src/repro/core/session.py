@@ -658,6 +658,64 @@ class Session:
         return actions_mod.lower_actions(
             orders, self.spec.num_markets, self.spec.num_levels, np)
 
+    # ---- slot mutation (the serving gateway's attach/detach hook) ----
+    def swap_markets(self, slots, sub: Union[EnsembleSpec, MarketConfig],
+                     *, reset_books: bool = True) -> None:
+        """Chunk-boundary slot mutation: replace markets ``slots`` with the
+        rows of ``sub`` (an ``len(slots)``-market spec/config), in place.
+
+        This is the serving gateway's attach/detach primitive: a client's
+        market is spliced into a running ensemble as a pure *value* update
+        — new per-market params rows plus (``reset_books``) that market's
+        fresh opening book — so the session keeps its static shape, its
+        warm executable (zero retraces), and bitwise-identical trajectories
+        for every **other** market: the step loop is row-independent and
+        the RNG keys on ``(seed, global market id, absolute step)``, so
+        rows outside ``slots`` never see the splice. Detaching is the same
+        call with :meth:`EnsembleSpec.parked` rows.
+
+        ``sub`` must agree with the session spec on every static field
+        (``num_agents``/``num_levels``/``seed``/``num_steps``); the splice
+        happens on host mirrors and re-places state/params through the
+        runner, so it works identically on single-device and sharded
+        sessions. Like :meth:`restore`, it is rejected during an active
+        ``stream()`` — call it between chunks (the engine's only coherent
+        preemption points).
+        """
+        self._check_open()
+        if self._active_streams:
+            raise RuntimeError(
+                "swap_markets() during an active stream(): slot mutations "
+                "apply at chunk boundaries — exhaust or close() the "
+                "iterator first")
+        sub = EnsembleSpec.coerce(sub)
+        t0 = time.perf_counter()
+        new_spec = self.spec.replace_markets(slots, sub)  # validates slots
+        idx = np.asarray(slots, dtype=np.int64).reshape(-1)
+        new_state = self._state
+        if reset_books:
+            host = [np.array(np.asarray(x), np.float32) for x in self._state]
+            fresh = initial_state(sub, np)
+            for leaf, src in zip(host, fresh):
+                leaf[idx] = np.asarray(src, np.float32)
+            new_state = self._runner.to_device(MarketState(*host))
+        new_stats = self._stats
+        if self._stats is not None:
+            shost = [np.array(np.asarray(x), np.float32)
+                     for x in self._stats]
+            zero = init_stats(idx.size, np)
+            for leaf, src in zip(shost, zero):
+                leaf[idx] = np.asarray(src, np.float32)
+            new_stats = self._runner.stats_to_device(MarketStats(*shost))
+        # Commit only after every placement succeeded (restore()-style
+        # all-or-nothing: a failed splice leaves the session untouched).
+        self._params = self._runner.params_to_device(new_spec.params)
+        self._state, self._stats = new_state, new_stats
+        self.spec = new_spec
+        if self.metrics is not None:
+            self.metrics.observe("swap_seconds", time.perf_counter() - t0)
+            self.metrics.inc("swaps_total", int(idx.size))
+
     # ---- results ----
     def to_result(self, batch: StepBatch) -> SimResult:
         """Assemble a terminal :class:`SimResult` from the final books plus a

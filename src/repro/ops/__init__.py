@@ -20,9 +20,11 @@ from repro.ops.chaos import (  # noqa: F401 (re-exported API)
     DeviceLoss,
     FaultEvent,
     FaultPlan,
+    ServeChaosReport,
     corrupt_checkpoint,
     force_autotune_oom,
     run_plan,
+    run_serve_plan,
 )
 from repro.ops.metrics import MetricsRegistry  # noqa: F401
 from repro.ops.warmup import Readiness, readiness, warm  # noqa: F401

@@ -357,3 +357,99 @@ def run_plan(plan: FaultPlan, spec, *, backend: str, ckpt_dir,
     return ChaosReport(batch=full, state=state, events=tuple(events),
                        replay_matched=replay_matched,
                        checkpoints=tuple(mgr.steps()))
+
+
+# ---- serving-gateway chaos (faults under concurrent client load) ----
+
+@dataclasses.dataclass(frozen=True)
+class ServeChaosReport:
+    """Outcome of :func:`run_serve_plan`: per-client streams + recovery.
+
+    ``frames``/``events`` are keyed by client id in attach order. Compare
+    two reports' frames bitwise (fault-free vs faulted run of the same
+    scenario mixture) to prove recovery resumed every client's trajectory
+    exactly; ``reconnects`` counts the ``reconnect`` control events each
+    surviving client observed (all clients see every recovery).
+    ``traces_delta`` is the gateway's post-(re)warm trace delta — 0 means
+    no client request ever paid a compile, before or after the fault.
+    """
+
+    frames: Dict[str, Tuple[Any, ...]]
+    events: Dict[str, Tuple[Any, ...]]
+    reconnects: int
+    traces_delta: int
+    steps: int
+
+    def client_paths(self, client: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(mid, price) concatenated over the client's frames."""
+        fs = self.frames[client]
+        return (np.concatenate([f.mid for f in fs]),
+                np.concatenate([f.price for f in fs]))
+
+
+def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
+                   chunk_size: int = 8, chunks: int = 12,
+                   checkpoint_every: int = 2, slots: Optional[int] = None,
+                   fault: Optional[Fault] = None, fault_after: int = 2,
+                   late_attach: Optional[str] = None, late_after: int = 4,
+                   num_agents: int = 16, num_levels: int = 32,
+                   engine_opts: Optional[Dict[str, Any]] = None,
+                   ) -> ServeChaosReport:
+    """Drive a serving gateway under concurrent client load, with a fault.
+
+    One client session opens per entry of ``scenarios`` (preset names)
+    before the first chunk; ``late_attach`` optionally adds one more after
+    ``late_after`` chunks — *after* a checkpoint, so recovery must replay
+    the attach from the gateway's splice journal. ``fault`` (typically
+    :class:`DeviceLoss`) is injected at the chunk boundary after the first
+    client has received ``fault_after`` frames; recovery restores the
+    newest checkpoint and replays quietly, and every client sees a
+    ``reconnect`` event while its stream continues bitwise.
+
+    Per-client queues are sized to hold the whole run (``chunks`` deep) so
+    this harness measures recovery fidelity, not backpressure — the
+    backpressure tier lives in ``tests/test_serve.py``.
+    """
+    import asyncio
+
+    from repro.serve import Gateway, parked_template
+
+    n_clients = len(scenarios) + (1 if late_attach else 0)
+    tpl = parked_template(
+        slots=n_clients if slots is None else slots, num_agents=num_agents,
+        num_levels=num_levels, num_steps=max(4096, chunks * chunk_size))
+
+    async def drive():
+        gw = Gateway(tpl, backend=backend, chunk_size=chunk_size,
+                     queue_maxsize=chunks + 4,
+                     ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
+                     engine_opts=engine_opts)
+        await gw.start(chunks=chunks)
+        clients = [gw.open_session(s, client=f"c{i}")
+                   for i, s in enumerate(scenarios)]
+        collected = [list(await clients[0].frames(fault_after))]
+        collected += [[] for _ in clients[1:]]
+        if late_attach is not None:
+            while len(collected[0]) < late_after:
+                collected[0].append(await clients[0].next_frame())
+            clients.append(gw.open_session(late_attach, client="late"))
+            collected.append([])
+        if fault is not None:
+            gw.inject_fault(fault)
+        rest = await asyncio.gather(
+            *(cs.frames(chunks) for cs in clients))
+        for got, more in zip(collected, rest):
+            got.extend(more)
+        await gw.stop()
+        return gw, clients, collected
+
+    gw, clients, collected = asyncio.run(drive())
+    events = {cs.client: tuple(cs.events) for cs in clients}
+    return ServeChaosReport(
+        frames={cs.client: tuple(fs)
+                for cs, fs in zip(clients, collected)},
+        events=events,
+        reconnects=sum(1 for e in events[clients[0].client]
+                       if e.kind == "reconnect"),
+        traces_delta=gw.traces_delta,
+        steps=gw.step_count)

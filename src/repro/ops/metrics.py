@@ -26,12 +26,21 @@ Recorded by the session wiring (see :class:`repro.core.session.Session`):
             ``tile_agent_chunk``
 
 The registry is generic — any consumer may ``inc``/``observe``/``gauge``
-additional series (the serving gateway will add queue depths here).
+additional series. The serving gateway (:mod:`repro.serve`) records:
+
+  counters  ``frames_published_total``, ``frames_dropped_total``,
+            ``sessions_opened_total``, ``sessions_closed_total``,
+            ``reconnects_total``, ``swaps_total`` (slot attach/detach rows)
+  gauges    ``queue_depth.<client>`` per-client fan-out queue depths,
+            ``clients_connected``, ``slots_attached``
+  windows   ``chunk_latency_seconds`` — a bounded-window
+            :class:`QuantileWindow` whose p50/p99 feed ``BENCH_serve.json``
 """
 from __future__ import annotations
 
+import bisect
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 
 class Aggregate:
@@ -60,8 +69,63 @@ class Aggregate:
                 "max": self.max if self.count else 0.0}
 
 
+class QuantileWindow:
+    """Bounded sliding window of the last ``size`` observations with exact
+    percentile reads — the latency-summary shape a serving layer needs
+    (p50/p99 over *recent* traffic, not a run-lifetime mean).
+
+    A ring buffer holds arrival order while a parallel sorted list supports
+    O(log n) insert/remove, so :meth:`percentile` is an O(1) index into the
+    sorted view. Memory is O(size) however long the gateway runs; ``size``
+    defaults to 1024 observations.
+    """
+
+    __slots__ = ("size", "count", "_ring", "_next", "_sorted")
+
+    def __init__(self, size: int = 1024) -> None:
+        if size < 1:
+            raise ValueError(f"window size must be >= 1, got {size}")
+        self.size = int(size)
+        self.count = 0            # lifetime observations (window may be full)
+        self._ring: List[float] = []
+        self._next = 0            # ring slot the next add overwrites
+        self._sorted: List[float] = []
+
+    def add(self, value: float) -> None:
+        value = float(value)
+        if len(self._ring) < self.size:
+            self._ring.append(value)
+        else:
+            evicted = self._ring[self._next]
+            self._sorted.pop(bisect.bisect_left(self._sorted, evicted))
+            self._ring[self._next] = value
+        self._next = (self._next + 1) % self.size
+        bisect.insort(self._sorted, value)
+        self.count += 1
+
+    def __len__(self) -> int:
+        return len(self._sorted)
+
+    def percentile(self, q: float) -> float:
+        """Exact nearest-rank percentile of the current window (q in
+        [0, 100]); 0.0 on an empty window."""
+        n = len(self._sorted)
+        if not n:
+            return 0.0
+        rank = min(n - 1, max(0, int(round(q / 100.0 * (n - 1)))))
+        return self._sorted[rank]
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "window": len(self._sorted),
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99),
+                "min": self._sorted[0] if self._sorted else 0.0,
+                "max": self._sorted[-1] if self._sorted else 0.0}
+
+
 class MetricsRegistry:
-    """Per-session metrics: counters, gauges, timing aggregates.
+    """Per-session metrics: counters, gauges, timing aggregates, and
+    bounded-window quantile summaries.
 
     Thread-safe (one lock around the tiny dict updates) so a streaming
     consumer thread may read :meth:`snapshot` while the session advances.
@@ -72,6 +136,7 @@ class MetricsRegistry:
         self._counters: Dict[str, float] = {}
         self._gauges: Dict[str, Any] = {}
         self._timings: Dict[str, Aggregate] = {}
+        self._windows: Dict[str, QuantileWindow] = {}
 
     # ---- write side (host-only; never called from inside a trace) ----
     def inc(self, name: str, value: float = 1) -> None:
@@ -89,10 +154,28 @@ class MetricsRegistry:
                 agg = self._timings[name] = Aggregate()
             agg.add(value)
 
+    def observe_window(self, name: str, value: float,
+                       size: int = 1024) -> None:
+        """Record into a bounded :class:`QuantileWindow` series (created on
+        first use with ``size``; later calls ignore ``size``)."""
+        with self._lock:
+            win = self._windows.get(name)
+            if win is None:
+                win = self._windows[name] = QuantileWindow(size)
+            win.add(value)
+
     # ---- read side ----
     def counter(self, name: str) -> float:
         with self._lock:
             return self._counters.get(name, 0)
+
+    def gauge_value(self, name: str, default: Any = None) -> Any:
+        with self._lock:
+            return self._gauges.get(name, default)
+
+    def window(self, name: str) -> Optional[QuantileWindow]:
+        with self._lock:
+            return self._windows.get(name)
 
     def steps_per_s(self) -> float:
         """Derived throughput: steps dispatched per second of chunk wall
@@ -104,12 +187,14 @@ class MetricsRegistry:
         return steps / secs if secs > 0 else 0.0
 
     def snapshot(self) -> Dict[str, Any]:
-        """Plain-python view: {'counters', 'gauges', 'timings', 'derived'}."""
+        """Plain-python view: {'counters', 'gauges', 'timings', 'windows',
+        'derived'}."""
         with self._lock:
             out = {
                 "counters": dict(self._counters),
                 "gauges": dict(self._gauges),
                 "timings": {k: v.summary() for k, v in self._timings.items()},
+                "windows": {k: v.summary() for k, v in self._windows.items()},
             }
         out["derived"] = {"steps_per_s": self.steps_per_s()}
         return out

@@ -1,0 +1,31 @@
+"""Streaming serving gateway: multi-tenant sessions over one warm engine.
+
+Public surface:
+
+  * :class:`Gateway` / :class:`ClientSession` / :func:`parked_template` —
+    the serving core (in-process transport);
+  * :class:`SlotScheduler` / :class:`GatewayFull` — slot multiplexing;
+  * :class:`FrameBus` / :class:`Subscription` — bounded backpressure bus;
+  * :class:`Frame` / :class:`Event` / :func:`decode` — wire shapes;
+  * :class:`DoubleBuffer` — the lag-one device→host pipeline;
+  * :class:`HealthServer` (and, with the optional ``websockets`` package,
+    :class:`WebSocketServer`) in :mod:`repro.serve.transport`.
+
+``Engine.warm()`` runs inside :meth:`Gateway.start` before the first
+frame — serving never pays a compile, and ``Gateway.traces_delta`` stays
+0 for any mixture of client scenarios (the shape-semantic cache
+guarantee; CI asserts it).
+"""
+from repro.serve.bus import POLICIES, FrameBus, Subscription
+from repro.serve.frames import Event, Frame, decode, slice_frames
+from repro.serve.gateway import ClientSession, Gateway, parked_template
+from repro.serve.pipeline import DoubleBuffer
+from repro.serve.slots import GatewayFull, SlotScheduler
+
+__all__ = [
+    "POLICIES", "FrameBus", "Subscription",
+    "Event", "Frame", "decode", "slice_frames",
+    "ClientSession", "Gateway", "parked_template",
+    "DoubleBuffer",
+    "GatewayFull", "SlotScheduler",
+]

@@ -1,0 +1,410 @@
+"""The streaming serving gateway: many client sessions, one warm engine.
+
+``Gateway`` multiplexes N concurrent client sessions onto ONE persistent
+ensemble session (the paper's compile-once, device-resident regime) so the
+marginal cost of a client is a slot assignment, never a compile:
+
+  * admission   — :class:`repro.serve.slots.SlotScheduler` maps each client
+    onto an ensemble row; attach/detach land as ONE coalesced
+    ``Session.swap_markets`` splice per chunk boundary (zero retraces —
+    the shape-semantic trace cache guarantees it, the gateway asserts it);
+  * the hot loop — a dedicated single engine thread dispatches chunk after
+    chunk; a lag-one :class:`repro.serve.pipeline.DoubleBuffer` materializes
+    chunk ``k-1`` on host while chunk ``k`` computes on device, so
+    streaming never blocks the next chunk's dispatch;
+  * fan-out     — per-chunk :class:`repro.serve.frames.Frame` slices go
+    through :class:`repro.serve.bus.FrameBus` with bounded per-client
+    queues and non-blocking delivery (drop-oldest or disconnect), so a
+    stalled consumer can never stall the simulation or other clients;
+  * operations  — ``Engine.warm`` runs before serving (no client request
+    ever pays a compile), :meth:`health` wraps ``Engine.readiness`` for the
+    HTTP probe, every gateway series lands in the session's
+    :class:`~repro.ops.metrics.MetricsRegistry`, and optional periodic
+    checkpoints make device-loss recovery (:meth:`inject_fault`) bitwise:
+    a splice journal replays post-checkpoint attach/detach at their
+    original boundaries, so the post-``reconnect`` stream equals a
+    fault-free run's.
+
+In-process transport (tests, benchmarks, and same-process consumers)::
+
+    gw = Gateway(parked_template(slots=32, num_agents=64, num_levels=64,
+                                 num_steps=10_000), backend="jax-scan")
+    await gw.start()
+    cs = gw.open_session("flash-crash")      # attach -> next chunk boundary
+    async for frame in cs.subscription:       # Frames + control Events
+        ...
+    await gw.stop()
+
+Real sockets are one layer up in :mod:`repro.serve.transport` (HTTP health
+endpoint; WebSocket fan-out when the ``websockets`` package is present).
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.core.config import MarketConfig, scenario_config
+from repro.core.params import EnsembleSpec
+from repro.core.session import Engine, Session, StepBatch
+from repro.serve.bus import FrameBus, Subscription
+from repro.serve.frames import Event, Frame, slice_frames
+from repro.serve.pipeline import DoubleBuffer
+from repro.serve.slots import GatewayFull, SlotScheduler  # noqa: F401
+
+
+def parked_template(slots: int, *, num_agents: int, num_levels: int,
+                    num_steps: int, seed: int = 0) -> EnsembleSpec:
+    """An all-parked ``slots``-market serving template.
+
+    The template fixes the static shape — and therefore the one warm trace
+    — every client session will share; clients vary only the per-market
+    parameter rows. ``num_steps`` is the horizon scenario events are
+    validated against (the gateway itself streams indefinitely).
+    """
+    like = EnsembleSpec.homogeneous(scenario_config(
+        "baseline", num_markets=slots, num_agents=num_agents,
+        num_levels=num_levels, num_steps=num_steps, seed=seed))
+    return EnsembleSpec.parked(like, slots)
+
+
+class ClientSession:
+    """One client's handle: a slot assignment + a bounded frame queue."""
+
+    def __init__(self, gateway: "Gateway", sub: Subscription) -> None:
+        self._gateway = gateway
+        self.subscription = sub
+        self.events: List[Event] = []    # control events seen by frames()
+
+    @property
+    def client(self) -> str:
+        return self.subscription.client
+
+    @property
+    def slot(self) -> int:
+        return self.subscription.slot
+
+    @property
+    def closed(self) -> bool:
+        return self.subscription.closed
+
+    async def next_frame(self) -> Optional[Frame]:
+        """Next data frame (control events are recorded on ``.events``);
+        ``None`` once the subscription is closed and drained."""
+        while True:
+            item = await self.subscription.get()
+            if item is None:
+                return None
+            if isinstance(item, Event):
+                self.events.append(item)
+                if item.kind == "closed":
+                    return None
+                continue
+            return item
+
+    async def frames(self, n: int) -> List[Frame]:
+        """Collect the next ``n`` data frames."""
+        out: List[Frame] = []
+        while len(out) < n:
+            frame = await self.next_frame()
+            if frame is None:
+                break
+            out.append(frame)
+        return out
+
+    def close(self) -> None:
+        self._gateway.close_session(self)
+
+
+class Gateway:
+    """Asyncio serving gateway over one warm :class:`Engine` session.
+
+    ``template`` is the serving ensemble (see :func:`parked_template`);
+    its market count is the session capacity. ``queue_maxsize``/``policy``
+    set the default per-client backpressure bounds
+    (:mod:`repro.serve.bus`); ``ckpt_dir`` + ``checkpoint_every`` (in
+    chunks) enable the fault-recovery path. All public methods must be
+    called from the event-loop thread; device work runs on a dedicated
+    single-thread executor ("the engine thread") so the loop stays
+    responsive — and consumers keep draining — while chunks compute.
+    """
+
+    def __init__(self, template: Union[EnsembleSpec, MarketConfig],
+                 backend: str = "jax-scan", *, chunk_size: int = 16,
+                 queue_maxsize: int = 8, policy: str = "drop-oldest",
+                 ckpt_dir: Optional[Any] = None, checkpoint_every: int = 0,
+                 metrics: bool = True,
+                 engine_opts: Optional[Dict[str, Any]] = None) -> None:
+        self.template = EnsembleSpec.coerce(template)
+        self.backend = backend
+        self.chunk = int(chunk_size)
+        self.queue_maxsize = int(queue_maxsize)
+        self.policy = policy
+        self.checkpoint_every = int(checkpoint_every)
+        self._ckpt_dir = ckpt_dir
+        self._ckpt = None
+        self._metrics_enabled = bool(metrics)
+        self._engine_opts = dict(engine_opts or {})
+        self.engine: Optional[Engine] = None
+        self.session: Optional[Session] = None
+        self.scheduler = SlotScheduler(self.template)
+        self.bus: Optional[FrameBus] = None
+        self.metrics = None
+        self._buffer: Optional[DoubleBuffer] = None
+        self._exec = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="engine")
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+        self._seq = itertools.count()
+        self._chunks_remaining: Optional[int] = None
+        self._warm_traces = 0
+        self._pending_faults: List[Any] = []
+        self._sessions: Dict[str, ClientSession] = {}
+        # Splice journal: (boundary step, slots, sub-spec) of every applied
+        # swap, so fault recovery can replay post-checkpoint attach/detach
+        # at their original boundaries (bitwise resume).
+        self._splices: List[Tuple[int, Tuple[int, ...], EnsembleSpec]] = []
+
+    # ---- lifecycle ----
+    async def start(self, chunks: Optional[int] = None) -> None:
+        """Warm the engine, open the serving session, start the step loop.
+
+        ``Engine.warm`` runs *before* the first frame so no client request
+        ever pays a compile (``traces_delta`` stays 0 from here on — the
+        invariant CI's serve smoke asserts). ``chunks`` bounds the run for
+        tests/benchmarks; ``None`` streams until :meth:`stop`.
+        """
+        if self._running:
+            raise RuntimeError("gateway already started")
+        loop = asyncio.get_running_loop()
+        self._chunks_remaining = chunks
+        await loop.run_in_executor(self._exec, self._open_engine,
+                                   self._engine_opts)
+        self.bus = FrameBus(metrics=self.metrics)
+        self._running = True
+        self._task = asyncio.create_task(self._run_loop(), name="gateway")
+
+    def _open_engine(self, engine_opts: Dict[str, Any]) -> None:
+        """(engine thread) Build + warm the engine, open the session, and
+        take the step-0 checkpoint anchor on *first* start (recovery keeps
+        the existing checkpoint ladder — the anchor must never be
+        overwritten with a fresh template state)."""
+        self.engine = Engine(self.backend, chunk_size=self.chunk,
+                             metrics=self._metrics_enabled, **engine_opts)
+        ready = self.engine.warm(self.template, include_step=False)
+        assert ready.ready, f"warm() left cold keys: {ready.cold_keys()}"
+        self.session = self.engine.open(self.template)
+        if self.metrics is None:
+            self.metrics = self.session.metrics
+        else:
+            self.session.metrics = self.metrics   # lifetime series survive
+        if self.bus is not None:
+            self.bus.metrics = self.metrics
+        self._warm_traces = self.engine.trace_count
+        self._buffer = DoubleBuffer(self._to_host)
+        if self._ckpt_dir is not None and self._ckpt is None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            self._ckpt = CheckpointManager(self._ckpt_dir, keep=64,
+                                           async_write=False)
+            self.session.save_checkpoint(self._ckpt)
+
+    async def stop(self) -> None:
+        """Stop the step loop, flush the pipeline tail, close every
+        client."""
+        self._running = False
+        if self._task is not None:
+            await self._task
+            self._task = None
+        self._exec.shutdown(wait=True)
+        if self.session is not None:
+            self.session.close()
+
+    @property
+    def traces_delta(self) -> int:
+        """Traces since warm — 0 is the serving invariant."""
+        return (self.engine.trace_count - self._warm_traces
+                if self.engine is not None else 0)
+
+    @property
+    def step_count(self) -> int:
+        return self.session.step_count if self.session is not None else 0
+
+    def health(self) -> Dict[str, Any]:
+        """The health-endpoint payload, backed by ``Engine.readiness()``."""
+        ready = self.engine is not None and self.engine.readiness().ready
+        return {
+            "ready": bool(ready and self._running),
+            "running": self._running,
+            "backend": self.backend,
+            "slots": self.scheduler.num_slots,
+            "slots_attached": len(self.scheduler.attached),
+            "slots_free": self.scheduler.free,
+            "clients": len(self._sessions),
+            "step": self.step_count,
+            "traces_delta": self.traces_delta,
+        }
+
+    # ---- client admission (in-process front door) ----
+    def open_session(self, spec: Union[str, MarketConfig, EnsembleSpec],
+                     *, maxsize: Optional[int] = None,
+                     policy: Optional[str] = None,
+                     client: Optional[str] = None) -> ClientSession:
+        """Attach a client's market; frames start at the next chunk
+        boundary. Raises :class:`GatewayFull` when every slot is taken and
+        ``ValueError`` when the spec disagrees with the template's static
+        fields."""
+        if not self._running:
+            raise RuntimeError("gateway is not running; await start() first")
+        slot = self.scheduler.attach(spec)
+        sub = self.bus.subscribe(
+            slot, client=client,
+            maxsize=self.queue_maxsize if maxsize is None else maxsize,
+            policy=self.policy if policy is None else policy)
+        sub._force(Event("attached", {
+            "slot": slot, "client": sub.client,
+            "scenario": self.scheduler.label(slot),
+            "first_step": self.step_count}))
+        cs = ClientSession(self, sub)
+        self._sessions[sub.client] = cs
+        if self.metrics is not None:
+            self.metrics.gauge("slots_attached",
+                               len(self.scheduler.attached))
+        return cs
+
+    def close_session(self, cs: ClientSession) -> None:
+        """Detach the client's slot (parked at the next boundary) and close
+        its queue."""
+        self._sessions.pop(cs.client, None)
+        if cs.slot in self.scheduler.attached:
+            self.scheduler.detach(cs.slot)
+        self.bus.close_subscription(cs.subscription, reason="detach")
+        if self.metrics is not None:
+            self.metrics.gauge("slots_attached",
+                               len(self.scheduler.attached))
+
+    # ---- fault injection (the chaos tier's entry point) ----
+    def inject_fault(self, fault: Any) -> None:
+        """Queue a :class:`repro.ops.chaos.DeviceLoss` for the next chunk
+        boundary; requires ``ckpt_dir`` (recovery restores the newest
+        loadable checkpoint and replays quietly, so client streams resume
+        bitwise)."""
+        if self._ckpt is None:
+            raise RuntimeError(
+                "fault recovery needs ckpt_dir= (no checkpoint to restore)")
+        self._pending_faults.append(fault)
+
+    # ---- the step loop ----
+    async def _run_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            while self._running and self._chunks_remaining != 0:
+                if self._pending_faults:
+                    fault = self._pending_faults.pop(0)
+                    # The in-flight chunk completed pre-fault: deliver it
+                    # before tearing the engine down, so no frame is lost.
+                    tail = await loop.run_in_executor(self._exec,
+                                                      self._buffer.flush)
+                    if tail is not None:
+                        self._complete(tail)
+                    resume = await loop.run_in_executor(
+                        self._exec, self._recover, fault)
+                    self.bus.broadcast(Event("reconnect", {
+                        "resume_step": resume, "step": self.step_count,
+                        "fault": type(fault).__name__}))
+                    if self.metrics is not None:
+                        self.metrics.inc("reconnects_total")
+                done = await loop.run_in_executor(self._exec,
+                                                  self._advance_once)
+                if done is not None:
+                    self._complete(done)
+                if self._chunks_remaining is not None:
+                    self._chunks_remaining -= 1
+            tail = None if self._buffer is None else self._buffer.flush()
+            if tail is not None:
+                self._complete(tail)
+        finally:
+            self._running = False
+            if self.bus is not None:
+                self.bus.close_all("shutdown")
+
+    def _advance_once(self):
+        """(engine thread) Apply pending slot splices, dispatch one chunk,
+        and hand back the *previous* chunk still device-side (the lag-one
+        pipeline; materialization happens in :meth:`_complete`)."""
+        sess = self.session
+        spliced = self.scheduler.drain(sess)   # coalesced boundary swap
+        if spliced is not None:
+            self._splices.append((sess.step_count,) + spliced)
+        seq = next(self._seq)
+        step0 = sess.step_count
+        t0 = time.perf_counter()
+        batch = sess.run(self.chunk)   # async dispatch on jax/pallas
+        stats = sess.stats             # host copy; None unless stats_only
+        meta = (seq, step0, self.chunk, t0, self.scheduler.attached)
+        done = self._buffer.push(meta, (batch, stats))
+        if (self._ckpt is not None and self.checkpoint_every
+                and (seq + 1) % self.checkpoint_every == 0):
+            sess.save_checkpoint(self._ckpt)
+        return done
+
+    def _to_host(self, payload: Tuple[StepBatch, Any]):
+        batch, stats = payload
+        return batch.to_numpy(), stats
+
+    def _complete(self, done) -> None:
+        """(event loop) Record a finished chunk's latency and fan it out;
+        queue puts are non-blocking, so this never stalls the loop."""
+        (seq, step0, n, t0, slots), payload = done
+        if self.metrics is not None:
+            self.metrics.observe_window("chunk_latency_seconds",
+                                        time.perf_counter() - t0)
+        host_batch, stats = payload
+        self.bus.publish(slice_frames(host_batch, stats, slots, seq,
+                                      step0, n))
+
+    def _recover(self, fault) -> int:
+        """(engine thread) Device-loss recovery under live client load.
+
+        Rebuild the engine on the surviving topology (``devices_after`` /
+        ``lost_device``, as in :class:`repro.ops.chaos.DeviceLoss`),
+        restore the newest loadable checkpoint (walking the ladder past
+        corrupt steps), then replay *quietly* back to the pre-fault cursor
+        — re-applying journaled slot splices at their original boundaries
+        — so published streams continue bitwise after the ``reconnect``
+        event. Returns the step the session resumed from.
+        """
+        from repro.ops.chaos import _restore_resilient
+
+        target = self.session.step_count
+        self.session.close()
+        new_opts = dict(self._engine_opts)
+        new_opts.pop("devices", None)
+        new_opts.pop("mesh", None)
+        devices_after = getattr(fault, "devices_after", None)
+        lost_device = getattr(fault, "lost_device", None)
+        if devices_after is not None:
+            new_opts["devices"] = devices_after
+        elif lost_device is not None:
+            from repro.launch.mesh import make_markets_mesh
+
+            new_opts["mesh"] = make_markets_mesh(skip=(lost_device,))
+        self._engine_opts = new_opts
+        self._open_engine(new_opts)
+        errors: List[str] = []
+        resumed = _restore_resilient(self.session, self._ckpt, errors)
+        # Quiet replay: the checkpoint predates some splices — re-apply
+        # each at its original boundary while running the lost chunks.
+        replay = [(t, slots, sub) for t, slots, sub in self._splices
+                  if resumed <= t < target]
+        for t, slots, sub in replay:
+            while self.session.step_count < t:
+                self.session.run(min(self.chunk,
+                                     t - self.session.step_count))
+            self.session.swap_markets(list(slots), sub)
+        while self.session.step_count < target:
+            self.session.run(min(self.chunk,
+                                 target - self.session.step_count))
+        return resumed
