@@ -10,16 +10,24 @@ numbers isolate gateway/engine cost from kernel TCP) and emits
   splice + warm-trace reuse; no compile on this path, ever);
 * ``serve/stream/<backend>/c<N>``  — steady-state fan-out: aggregate
   frames/s delivered across all clients, with the gateway's bounded-window
-  per-chunk p50/p99 latency.
+  per-chunk p50/p99 latency;
+* ``serve/ckpt/<backend>/c<N>``    — durability overhead: the same stream
+  with the async checkpoint pipeline ON (``checkpoint_every=2`` chunks) vs
+  OFF. The row carries both p99s, the engine-thread snapshot cost
+  (device→host mirror — the ONLY checkpoint work the hot path pays), the
+  background writer's commit latency, and the writer's skip/lag counters.
 
-Every row asserts ``traces_delta == 0`` after warmup — a serving gateway
-that retraces under client churn is a regression, and CI's
-retrace-regression check reads these fields from the JSON artifact.
+Hard failures (raise, so CI goes red rather than silently shipping a
+regression): any retrace after warmup (every row); an engine-thread
+checkpoint snapshot stalling past ``SNAPSHOT_STALL_MS``; checkpoints-on
+p99 chunk latency outside noise of checkpoints-off (the async-writer
+contract: durability must not ride the hot path).
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import tempfile
 import time
 
 from benchmarks.common import FULL, Row, emit
@@ -32,12 +40,21 @@ L = 128 if FULL else 32
 CHUNK = 32 if FULL else 8
 SCENARIOS = ["baseline", "flash-crash", "high-vol", "thin-book"]
 
+#: Hard ceiling on the engine-thread cost of ONE checkpoint snapshot (ms).
+#: The snapshot is a device→host mirror only — if it ever approaches this,
+#: serialization/fsync work has leaked back onto the engine thread.
+SNAPSHOT_STALL_MS = 100.0
+#: Checkpoints-on p99 must stay within this noise envelope of off.
+P99_NOISE_FACTOR, P99_NOISE_FLOOR_MS = 3.0, 2.0
 
-async def _drive(backend: str, n_clients: int, frames_per_client: int):
+
+async def _drive(backend: str, n_clients: int, frames_per_client: int,
+                 ckpt_dir=None, checkpoint_every: int = 0):
     tpl = parked_template(slots=n_clients, num_agents=A, num_levels=L,
                           num_steps=1_000_000)
     gw = Gateway(tpl, backend=backend, chunk_size=CHUNK,
-                 queue_maxsize=frames_per_client + 4)
+                 queue_maxsize=frames_per_client + 4,
+                 ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every)
     # +2 chunks: one for the lag-one pipeline, one for attach alignment
     await gw.start(chunks=frames_per_client + 2)
 
@@ -57,16 +74,28 @@ async def _drive(backend: str, n_clients: int, frames_per_client: int):
 
     lat = gw.metrics.window("chunk_latency_seconds").summary()
     delta = gw.traces_delta
+    out = {
+        "attach_s": attach_s, "stream_s": stream_s, "frames": n_frames,
+        "steps": steps, "p50_ms": lat["p50"] * 1e3,
+        "p99_ms": lat["p99"] * 1e3, "traces_delta": delta,
+    }
+    if ckpt_dir is not None:
+        health = gw.health()
+        snap = gw.metrics.window("checkpoint_snapshot_seconds")
+        write = gw.metrics.window("checkpoint_write_seconds")
+        out["snapshot_ms_max"] = (snap.summary()["max"] * 1e3
+                                  if snap is not None else 0.0)
+        out["write_ms_p99"] = (write.summary()["p99"] * 1e3
+                               if write is not None else 0.0)
+        out["ckpt_writes"] = health["checkpoint"]["writes"]
+        out["ckpt_skipped"] = health["checkpoint"]["skipped"]
+        out["ckpt_pending"] = health["checkpoint"]["pending"]
     await gw.stop()
     if delta != 0:
         raise AssertionError(
             f"{backend}/c{n_clients}: {delta} retrace(s) while serving — "
             "the warm-serving contract is broken")
-    return {
-        "attach_s": attach_s, "stream_s": stream_s, "frames": n_frames,
-        "steps": steps, "p50_ms": lat["p50"] * 1e3,
-        "p99_ms": lat["p99"] * 1e3, "traces_delta": delta,
-    }
+    return out
 
 
 def run(backends=None, clients=None, frames: int = 40) -> list:
@@ -88,6 +117,34 @@ def run(backends=None, clients=None, frames: int = 40) -> list:
                 f"chunk_p50_ms={r['p50_ms']:.3f};"
                 f"chunk_p99_ms={r['p99_ms']:.3f};"
                 f"traces_delta={r['traces_delta']}"))
+        n = (clients or CLIENT_SWEEP)[0]
+        off = asyncio.run(_drive(backend, n, frames))
+        with tempfile.TemporaryDirectory() as d:
+            on = asyncio.run(_drive(backend, n, frames, ckpt_dir=d,
+                                    checkpoint_every=2))
+        if on["snapshot_ms_max"] > SNAPSHOT_STALL_MS:
+            raise AssertionError(
+                f"{backend}/c{n}: engine-thread checkpoint snapshot "
+                f"stalled for {on['snapshot_ms_max']:.1f}ms "
+                f"(> {SNAPSHOT_STALL_MS}ms) — commit work has leaked "
+                "onto the hot path")
+        budget = off["p99_ms"] * P99_NOISE_FACTOR + P99_NOISE_FLOOR_MS
+        if on["p99_ms"] > budget:
+            raise AssertionError(
+                f"{backend}/c{n}: p99 chunk latency with checkpoints on "
+                f"is {on['p99_ms']:.3f}ms vs {off['p99_ms']:.3f}ms off "
+                f"(budget {budget:.3f}ms) — the async writer is not "
+                "keeping durability off the hot path")
+        rows.append((
+            f"serve/ckpt/{backend}/c{n}", on["stream_s"] * 1e6,
+            f"clients={n};checkpoint_every=2;"
+            f"p99_off_ms={off['p99_ms']:.3f};p99_on_ms={on['p99_ms']:.3f};"
+            f"snapshot_ms_max={on['snapshot_ms_max']:.3f};"
+            f"write_ms_p99={on['write_ms_p99']:.3f};"
+            f"ckpt_writes={on['ckpt_writes']};"
+            f"ckpt_skipped={on['ckpt_skipped']};"
+            f"ckpt_pending={on['ckpt_pending']};"
+            f"traces_delta={on['traces_delta']}"))
     return rows
 
 

@@ -1,4 +1,5 @@
 from repro.checkpoint.manager import (  # noqa: F401 (re-exported API)
+    COMMIT_NAME,
     FORMAT_VERSION,
     CheckpointCorruptError,
     CheckpointError,

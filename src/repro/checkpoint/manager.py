@@ -1,32 +1,62 @@
-"""Sharded, crash-safe checkpointing with async writes + elastic restore.
+"""Sharded, crash-consistent checkpointing with a non-blocking async writer.
 
 Layout (per step):
     <dir>/step_000040/
         manifest.json            # tree structure, shapes, dtypes, shard map
         shard_00000_of_00001.npz # per-host flat arrays
-    <dir>/LATEST                 # atomic pointer (renamed into place)
+        COMMIT                   # terminal commit marker (written LAST)
+    <dir>/LATEST                 # fast-path pointer (renamed into place)
 
-Design points for 1000+-node operation:
-  * every host writes only its own shard file; the manifest is written by
-    host 0 after all shards exist (two-phase commit: a step directory is
-    valid iff manifest.json exists and LATEST points at it);
-  * writes are atomic (tmp + rename) so a node failure mid-write never
-    corrupts the previous checkpoint;
-  * async mode hands the arrays to a writer thread so the train loop only
-    blocks on the *previous* save (standard checkpoint/compute overlap);
-  * restore accepts a different host count than save (elastic restart):
-    arrays are re-assembled from any shard layout and re-sharded to the
-    current mesh by the caller's device_put.
+Commit protocol — a step directory is **committed** iff its terminal
+``COMMIT`` marker exists. Every durable byte goes through
+:func:`_durable_write` (write-to-tmp → fsync → atomic rename), files are
+committed in dependency order (shards → manifest → ``COMMIT`` → ``LATEST``),
+and re-saving an existing step *removes* its ``COMMIT`` first — so a crash
+at **any** write offset leaves either the previous committed checkpoint
+intact or an uncommitted directory that :meth:`CheckpointManager.steps` /
+:meth:`~CheckpointManager.restore` skip. A torn write can never produce a
+loadable-but-wrong checkpoint (the torn-write chaos fault in
+``repro.ops.chaos`` enumerates every offset and asserts exactly that).
+``LATEST`` is advisory only: :meth:`~CheckpointManager.latest_step` falls
+back to scanning committed directories when the pointer is stale (a crash
+between ``COMMIT`` and ``LATEST`` is benign).
+
+Async writes are a **two-stage pipeline** (the serving gateway's hot-path
+contract):
+
+  * :meth:`CheckpointManager.save` runs on the caller (engine) thread and
+    only mirrors device arrays to host (``np.asarray`` per leaf) before
+    handing them to the writer — no serialization, no fsync, no disk I/O
+    ever happens on the engine thread;
+  * a single persistent writer thread serializes (npz), commits, and GCs;
+  * lag is bounded by a **one-deep latest-wins mailbox** — if a save
+    arrives while the writer is busy and a newer snapshot is already
+    queued, the queued one is *skipped and counted*
+    (:attr:`~CheckpointManager.skipped`), never queued behind it. The
+    writer can fall at most one checkpoint behind; memory stays O(1)
+    snapshots however slow the disk is.
+
+Writer failures are sticky: the first exception is re-raised from
+:meth:`~CheckpointManager.wait` (and recorded on
+:attr:`~CheckpointManager.error`) instead of vanishing on a daemon thread.
+
+Restore accepts a different host count than save (elastic restart) and
+never loads damaged data silently — uncommitted directories, unparseable
+manifests, truncated shards, missing leaves, and shape/dtype disagreements
+all raise a typed :class:`CheckpointCorruptError` naming the offending
+file or leaf.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import tempfile
 import threading
+import time
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -38,13 +68,18 @@ _SESSION_ARRAY_SUBTREES = ("params", "stats", "init")
 #: On-disk session-checkpoint format version (the JSON meta leaf carries it).
 FORMAT_VERSION = 1
 
+#: Terminal commit-marker filename: a step directory is committed iff this
+#: file exists (written last, removed first on rewrite).
+COMMIT_NAME = "COMMIT"
+
 
 class CheckpointError(Exception):
     """Base class for typed checkpoint failures."""
 
 
 class CheckpointCorruptError(CheckpointError, IOError):
-    """The on-disk payload is damaged (truncated / bit-flipped / unparseable).
+    """The on-disk payload is damaged (truncated / bit-flipped / torn /
+    unparseable) or the step directory was never committed.
 
     Always names the offending file or leaf. Corrupt data must never load
     silently — callers fall back to an earlier step (see
@@ -145,50 +180,199 @@ def _unflatten(flat: Dict[str, Any]):
     return rebuild(root)
 
 
+# ---------------------------------------------------------------------------
+# durable-write choke point (the chaos tier's torn-write injection surface)
+# ---------------------------------------------------------------------------
+
+def _barrier(label: str) -> None:
+    """Crash-injection hook called between every durable sub-operation.
+
+    A no-op in production. ``repro.ops.chaos.crash_during_write`` patches
+    it to raise after the N-th call, simulating a process crash at that
+    exact write offset — the enumeration the torn-write chaos tests sweep.
+    """
+
+
+def _durable_write(path: Path, data: bytes) -> None:
+    """Write ``data`` to ``path`` crash-atomically: tmp → fsync → rename.
+
+    A crash at any point leaves either the previous contents of ``path``
+    (or no file) or the complete new contents — never a torn file under
+    the final name. The mid-write barrier deliberately exposes the
+    partial-tmp state to the chaos sweep.
+    """
+    tmp = path.with_name(path.name + ".tmp")
+    _barrier(f"open:{path.name}")
+    with open(tmp, "wb") as f:
+        half = len(data) // 2
+        f.write(data[:half])
+        _barrier(f"mid-write:{path.name}")
+        f.write(data[half:])
+        f.flush()
+        _barrier(f"pre-fsync:{path.name}")
+        os.fsync(f.fileno())
+    _barrier(f"pre-rename:{path.name}")
+    os.replace(tmp, path)
+    _barrier(f"post-rename:{path.name}")
+
+
+def _fsync_dir(path: Path) -> None:
+    """Fsync a directory so renames inside it are durable (POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:          # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
+    """See the module docstring for the commit protocol and async pipeline.
+
+    ``on_write(step, seconds)`` and ``on_gc(oldest_retained_step)`` are
+    optional callbacks fired **on the writer thread** after each commit /
+    garbage collection — the serving gateway uses them for write-latency
+    metrics and splice-journal compaction. They must be thread-safe.
+    """
+
     def __init__(self, directory, *, host_id: int = 0, num_hosts: int = 1,
-                 keep: int = 3, async_write: bool = True):
+                 keep: int = 3, async_write: bool = True,
+                 on_write: Optional[Callable[[int, float], None]] = None,
+                 on_gc: Optional[Callable[[int], None]] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.host_id = host_id
         self.num_hosts = num_hosts
         self.keep = keep
         self.async_write = async_write
-        self._pending: Optional[threading.Thread] = None
+        self.on_write = on_write
+        self.on_gc = on_gc
+        # ---- async-writer state (all guarded by _cv's lock) ----
+        self._cv = threading.Condition()
+        self._queued: Optional[Tuple[int, Dict[str, np.ndarray]]] = None
+        self._writing: Optional[int] = None
+        self._writer: Optional[threading.Thread] = None
+        self._stop = False
+        self.error: Optional[BaseException] = None  # sticky writer failure
+        self.writes = 0            # committed checkpoints
+        self.skipped = 0           # saves dropped by the lag-bound policy
+        self.last_write_seconds = 0.0
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> Path:
         return self.dir / f"step_{step:08d}"
 
-    def save(self, step: int, tree) -> None:
-        """Save a pytree (blocking on the previous async save only)."""
-        host_arrays = {}
-        for path, leaf in _flatten(tree):
-            arr = np.asarray(leaf)
-            host_arrays[path] = arr
-        self.wait()
-        if self.async_write:
-            self._pending = threading.Thread(
-                target=self._write, args=(step, host_arrays), daemon=True)
-            self._pending.start()
-        else:
+    # ---- save side ----------------------------------------------------
+    def save(self, step: int, tree) -> bool:
+        """Persist a pytree; returns True if the save was accepted.
+
+        The caller-thread cost is the device→host mirror only. In async
+        mode the snapshot is handed to the writer thread; when the writer
+        is busy *and* a newer snapshot is already queued, the queued one is
+        replaced (latest wins) and counted in :attr:`skipped` — the
+        lag-bounded skip-and-count policy. Returns False only when this
+        very snapshot was itself superseded before being accepted (cannot
+        happen with a single saver thread). Sync mode writes inline.
+        """
+        host_arrays = {path: np.asarray(leaf)
+                       for path, leaf in _flatten(tree)}
+        if not self.async_write:
             self._write(step, host_arrays)
+            return True
+        with self._cv:
+            self._raise_sticky()
+            if self._queued is not None:
+                # Writer is a full commit behind: drop the stale queued
+                # snapshot (never grow a queue), keep the freshest.
+                self.skipped += 1
+            self._queued = (step, host_arrays)
+            self._ensure_writer()
+            self._cv.notify_all()
+        return True
 
-    def wait(self) -> None:
-        if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+    @property
+    def pending(self) -> int:
+        """Snapshots not yet committed (0–2: queued + in-flight write)."""
+        with self._cv:
+            return (self._queued is not None) + (self._writing is not None)
 
-    def _write(self, step: int, host_arrays: Dict[str, np.ndarray]) -> None:
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Block until every accepted save is committed; re-raises the
+        first (sticky) writer failure, if any."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._queued is not None or self._writing is not None:
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"checkpoint writer still busy after {timeout}s "
+                        f"(writing step {self._writing})")
+                self._cv.wait(remaining)
+            self._raise_sticky()
+
+    def close(self) -> None:
+        """Flush and stop the writer thread (idempotent)."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._writer is not None:
+            self._writer.join(timeout=60)
+            self._writer = None
+
+    def _raise_sticky(self) -> None:
+        if self.error is not None:
+            raise self.error
+
+    def _ensure_writer(self) -> None:
+        if self._writer is None or not self._writer.is_alive():
+            self._stop = False
+            self._writer = threading.Thread(
+                target=self._writer_loop, name="ckpt-writer", daemon=True)
+            self._writer.start()
+
+    def _writer_loop(self) -> None:
+        while True:
+            with self._cv:
+                while self._queued is None and not self._stop:
+                    self._cv.wait()
+                if self._queued is None:        # stop requested, fully drained
+                    return
+                step, host_arrays = self._queued
+                self._queued = None
+                self._writing = step
+            err: Optional[BaseException] = None
+            seconds = 0.0
+            try:
+                seconds = self._write(step, host_arrays)
+            except BaseException as exc:        # sticky: surfaced by wait()
+                err = exc
+            with self._cv:
+                self._writing = None
+                if err is not None and self.error is None:
+                    self.error = err
+                self._cv.notify_all()
+            if err is None and self.on_write is not None:
+                self.on_write(step, seconds)
+
+    # ---- the commit sequence (writer thread, or inline in sync mode) ----
+    def _write(self, step: int, host_arrays: Dict[str, np.ndarray]) -> float:
+        t0 = time.perf_counter()
         sdir = self._step_dir(step)
         sdir.mkdir(parents=True, exist_ok=True)
+        commit = sdir / COMMIT_NAME
+        if commit.exists():
+            # Rewriting a committed step: uncommit FIRST so a crash during
+            # the rewrite can never leave a committed-but-torn directory.
+            os.remove(commit)
+            _fsync_dir(sdir)
         shard_name = f"shard_{self.host_id:05d}_of_{self.num_hosts:05d}.npz"
-        fd, tmp = tempfile.mkstemp(dir=sdir, suffix=".tmp")
-        os.close(fd)
-        np.savez(tmp, **{k.replace("/", "|"): v
+        buf = io.BytesIO()
+        np.savez(buf, **{k.replace("/", "|"): v
                          for k, v in host_arrays.items()})
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
-                   sdir / shard_name)
+        _durable_write(sdir / shard_name, buf.getvalue())
         if self.host_id == 0:
             manifest = {
                 "step": step,
@@ -196,36 +380,72 @@ class CheckpointManager:
                 "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                            for k, v in host_arrays.items()},
             }
-            mtmp = sdir / "manifest.json.tmp"
-            mtmp.write_text(json.dumps(manifest))
-            os.replace(mtmp, sdir / "manifest.json")
-            ltmp = self.dir / "LATEST.tmp"
-            ltmp.write_text(sdir.name)
-            os.replace(ltmp, self.dir / "LATEST")
+            _durable_write(sdir / "manifest.json",
+                           json.dumps(manifest).encode())
+            _durable_write(commit, json.dumps(
+                {"step": step, "format_version": FORMAT_VERSION}).encode())
+            _fsync_dir(sdir)
+            _durable_write(self.dir / "LATEST", sdir.name.encode())
             self._gc()
+        seconds = time.perf_counter() - t0
+        with self._cv:
+            self.writes += 1
+            self.last_write_seconds = seconds
+        return seconds
 
     def _gc(self) -> None:
-        steps = sorted(p for p in self.dir.glob("step_*")
-                       if (p / "manifest.json").exists())
-        for p in steps[:-self.keep]:
+        """Drop committed steps beyond ``keep`` plus any dead uncommitted
+        directories and stray tmp files (torn-write leftovers)."""
+        committed, torn = [], []
+        for p in sorted(self.dir.glob("step_*")):
+            (committed if (p / COMMIT_NAME).exists() else torn).append(p)
+        writing = None
+        with self._cv:
+            if self._writing is not None:
+                writing = self._step_dir(self._writing)
+        for p in committed[:-self.keep] if self.keep else []:
             shutil.rmtree(p, ignore_errors=True)
+        for p in torn:
+            if writing is None or p != writing:
+                shutil.rmtree(p, ignore_errors=True)
+        for tmp in self.dir.glob("*.tmp"):
+            tmp.unlink(missing_ok=True)
+        if self.on_gc is not None:
+            remaining = self.steps()
+            if remaining:
+                self.on_gc(remaining[0])
 
     # ------------------------------------------------------------------
+    def _is_committed(self, sdir: Path) -> bool:
+        return (sdir / COMMIT_NAME).exists() \
+            and (sdir / "manifest.json").exists()
+
     def latest_step(self) -> Optional[int]:
+        """Newest committed step. ``LATEST`` is a fast path only — when the
+        pointer is stale or torn (crash between ``COMMIT`` and ``LATEST``)
+        this falls back to scanning committed directories."""
         ptr = self.dir / "LATEST"
-        if not ptr.exists():
-            return None
-        sdir = self.dir / ptr.read_text().strip()
-        if not (sdir / "manifest.json").exists():
-            return None
-        return int(sdir.name.split("_")[1])
+        if ptr.exists():
+            sdir = self.dir / ptr.read_text().strip()
+            if self._is_committed(sdir):
+                try:
+                    pointed = int(sdir.name.split("_")[1])
+                except ValueError:
+                    pointed = None
+                if pointed is not None:
+                    all_steps = self.steps()
+                    if all_steps and all_steps[-1] == pointed:
+                        return pointed
+        steps = self.steps()
+        return steps[-1] if steps else None
 
     def steps(self) -> "list[int]":
-        """All committed checkpoint steps (manifest present), ascending —
-        the fallback ladder an elastic/resilient restore walks down."""
+        """All **committed** checkpoint steps (terminal ``COMMIT`` marker
+        present), ascending — the fallback ladder an elastic/resilient
+        restore walks down. Torn/uncommitted directories never appear."""
         out = []
         for p in sorted(self.dir.glob("step_*")):
-            if (p / "manifest.json").exists():
+            if self._is_committed(p):
                 try:
                     out.append(int(p.name.split("_")[1]))
                 except ValueError:
@@ -235,9 +455,10 @@ class CheckpointManager:
     def restore(self, step: Optional[int] = None):
         """Load the pytree (elastic: any current host count may read).
 
-        Damaged payloads never load silently: an unparseable manifest, an
-        unreadable/truncated shard, a missing leaf, or a leaf whose
-        shape/dtype disagrees with the manifest raises
+        Damaged payloads never load silently: an uncommitted step directory
+        (no terminal ``COMMIT`` marker — a torn write), an unparseable
+        manifest, an unreadable/truncated shard, a missing leaf, or a leaf
+        whose shape/dtype disagrees with the manifest raises
         :class:`CheckpointCorruptError` naming the offending file or leaf.
         """
         self.wait()
@@ -246,6 +467,14 @@ class CheckpointManager:
         if step is None:
             return None
         sdir = self._step_dir(step)
+        if not (sdir / COMMIT_NAME).exists():
+            if not sdir.exists():
+                raise FileNotFoundError(
+                    f"checkpoint step {step}: no directory {sdir.name}")
+            raise CheckpointCorruptError(
+                f"checkpoint step {step}: directory {sdir.name} has no "
+                f"{COMMIT_NAME} marker — the write never committed (torn "
+                "write or crash mid-commit); refusing to load")
         try:
             manifest = json.loads((sdir / "manifest.json").read_text())
             leaves = dict(manifest["leaves"])

@@ -890,14 +890,22 @@ class Session:
                                  time.perf_counter() - t_start)
             self.metrics.inc("restores_total")
 
-    def save_checkpoint(self, manager, step: Optional[int] = None) -> int:
+    def save_checkpoint(self, manager, step: Optional[int] = None,
+                        *, wait: bool = True) -> int:
         """Persist the session through a ``CheckpointManager``; returns the
-        checkpoint step (defaults to the session's step cursor)."""
+        checkpoint step (defaults to the session's step cursor).
+
+        ``wait=False`` returns as soon as the snapshot is handed to the
+        manager's background writer (device→host mirror only — the serving
+        gateway's non-blocking checkpoint path); the caller is responsible
+        for a later ``manager.wait()`` before relying on durability.
+        """
         from repro.checkpoint import manager as ckpt
 
         step = self._t if step is None else int(step)
         manager.save(step, ckpt.session_tree(self.snapshot()))
-        manager.wait()
+        if wait:
+            manager.wait()
         return step
 
     def restore_checkpoint(self, manager, step: Optional[int] = None) -> int:

@@ -21,7 +21,11 @@ from repro.ops.chaos import (  # noqa: F401 (re-exported API)
     FaultEvent,
     FaultPlan,
     ServeChaosReport,
+    SimulatedCrash,
+    TornCheckpointWrite,
     corrupt_checkpoint,
+    count_write_ops,
+    crash_during_write,
     force_autotune_oom,
     run_plan,
     run_serve_plan,

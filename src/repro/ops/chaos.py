@@ -27,6 +27,14 @@ Fault classes:
     :func:`force_autotune_oom`, which makes every timed tile candidate
     fail with an OOM-shaped error; the sweep must degrade to the
     conservative heuristic tile (never crash), and results stay bitwise.
+  * :class:`TornCheckpointWrite` — crash the process at an exact durable
+    write offset *inside* a checkpoint commit (via
+    :func:`crash_during_write`, which patches the manager's ``_barrier``
+    choke point), then restart. The commit protocol (tmp + fsync + atomic
+    rename + terminal ``COMMIT`` marker) must leave either the previous
+    committed checkpoint or a skipped uncommitted directory — a torn
+    write must **never** restore loadable-but-wrong state. The chaos
+    tests sweep every injection offset.
 
 Every fault is injected *between* chunk dispatches — the simulator's only
 coherent preemption points (mid-chunk state never exists on the host) —
@@ -38,7 +46,7 @@ import contextlib
 import dataclasses
 import zipfile
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -94,6 +102,24 @@ class AutotuneOOM(Fault):
     """Restart with the autotune sweep enabled while every timed candidate
     fails with an OOM-shaped error; the runner must fall back to the
     conservative heuristic tile."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TornCheckpointWrite(Fault):
+    """Crash mid-checkpoint-commit at durable-write op ``crash_at_op``,
+    then restart and restore.
+
+    The save attempt runs under :func:`crash_during_write`, which raises
+    :class:`SimulatedCrash` after the ``crash_at_op``-th barrier inside
+    the manager's commit sequence — simulating process death at that
+    exact write offset. The restart must restore a committed checkpoint
+    (the torn one is skipped by the ``COMMIT``-marker protocol; an
+    explicit restore of it raises a typed
+    :class:`~repro.checkpoint.manager.CheckpointCorruptError`) and replay
+    bitwise. Use ``count_write_ops`` to discover the sweep range.
+    """
+
+    crash_at_op: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +231,63 @@ def _payload_offset(victim: Path, data: bytes) -> int:
         start = info.header_offset + 30 + name_len + extra_len
         return min(start + info.compress_size // 2, len(data) - 1)
     return len(data) // 2
+
+
+class SimulatedCrash(RuntimeError):
+    """Stands in for process death at an exact durable-write offset: the
+    op that raised it — and everything after — never reached disk order.
+    Only :func:`crash_during_write` raises it."""
+
+
+@contextlib.contextmanager
+def crash_during_write(after_ops: Optional[int]):
+    """Simulate a process crash inside the checkpoint commit sequence.
+
+    Patches :func:`repro.checkpoint.manager._barrier` — the no-op hook the
+    manager calls between every durable sub-operation (open, mid-write,
+    pre-fsync, pre-rename, post-rename, per file) — to raise
+    :class:`SimulatedCrash` on the ``after_ops``-th call. Everything the
+    commit sequence did *before* that barrier is on disk exactly as a real
+    crash would leave it (including torn ``.tmp`` files: the mid-write
+    barrier fires with half the payload written).
+
+    ``after_ops=None`` is count-only mode: nothing raises, and the yielded
+    list's single element ends up holding the total number of barrier ops
+    a full commit executes — the sweep range for torn-write enumeration::
+
+        with crash_during_write(None) as ops:
+            mgr.save(step, tree)            # sync manager: completes
+        for k in range(ops[0]):
+            with crash_during_write(k), pytest.raises(SimulatedCrash):
+                mgr.save(step2, tree2)
+            ...assert restore never loads torn state...
+    """
+    from repro.checkpoint import manager as ckpt
+
+    counter = [0]
+    real = ckpt._barrier
+
+    def crashing_barrier(label: str) -> None:
+        if after_ops is not None and counter[0] == after_ops:
+            raise SimulatedCrash(
+                f"injected crash at durable-write op {after_ops} ({label})")
+        counter[0] += 1
+
+    ckpt._barrier = crashing_barrier
+    try:
+        yield counter
+    finally:
+        ckpt._barrier = real
+
+
+def count_write_ops(mgr: CheckpointManager, step: int, tree) -> int:
+    """Number of durable-write barrier ops one full commit of ``tree``
+    executes (run against a scratch save of ``step``) — the enumeration
+    bound for a torn-write sweep."""
+    with crash_during_write(None) as ops:
+        mgr.save(step, tree)
+        mgr.wait()
+    return ops[0]
 
 
 class _FakeOom(RuntimeError):
@@ -330,6 +413,20 @@ def run_plan(plan: FaultPlan, spec, *, backend: str, ckpt_dir,
                               f"winner={report.winner} "
                               f"failures={len(report.failures)}")
                     errors.extend(report.failures)
+            elif isinstance(fault, TornCheckpointWrite):
+                # A checkpoint save at this boundary dies mid-commit at the
+                # requested durable-write offset; the "process" restarts
+                # and must restore a committed checkpoint — never the torn
+                # one (the ladder skips it; loading it explicitly raises).
+                try:
+                    with crash_during_write(fault.crash_at_op):
+                        sess.save_checkpoint(mgr)
+                except SimulatedCrash as exc:
+                    errors.append(f"SimulatedCrash: {exc}")
+                detail = (f"crashed at durable-write op "
+                          f"{fault.crash_at_op} during save at step {t}")
+                sess.close()
+                eng, sess = open_session(opts)
             else:
                 raise TypeError(f"unknown fault class {type(fault).__name__}")
             recovered = _restore_resilient(sess, mgr, errors)
@@ -379,6 +476,8 @@ class ServeChaosReport:
     reconnects: int
     traces_delta: int
     steps: int
+    recoveries: int = 0          # supervised recovery passes that succeeded
+    health: Optional[Dict[str, Any]] = None   # gateway health pre-shutdown
 
     def client_paths(self, client: str) -> Tuple[np.ndarray, np.ndarray]:
         """(mid, price) concatenated over the client's frames."""
@@ -390,9 +489,11 @@ class ServeChaosReport:
 def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
                    chunk_size: int = 8, chunks: int = 12,
                    checkpoint_every: int = 2, slots: Optional[int] = None,
-                   fault: Optional[Fault] = None, fault_after: int = 2,
+                   fault: Union[Fault, Sequence[Fault], None] = None,
+                   fault_after: int = 2,
                    late_attach: Optional[str] = None, late_after: int = 4,
                    num_agents: int = 16, num_levels: int = 32,
+                   ckpt_keep: int = 64,
                    engine_opts: Optional[Dict[str, Any]] = None,
                    ) -> ServeChaosReport:
     """Drive a serving gateway under concurrent client load, with a fault.
@@ -400,11 +501,18 @@ def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
     One client session opens per entry of ``scenarios`` (preset names)
     before the first chunk; ``late_attach`` optionally adds one more after
     ``late_after`` chunks — *after* a checkpoint, so recovery must replay
-    the attach from the gateway's splice journal. ``fault`` (typically
-    :class:`DeviceLoss`) is injected at the chunk boundary after the first
-    client has received ``fault_after`` frames; recovery restores the
-    newest checkpoint and replays quietly, and every client sees a
-    ``reconnect`` event while its stream continues bitwise.
+    the attach from the gateway's durable splice journal. ``fault``
+    (typically :class:`DeviceLoss`) is injected at the chunk boundary
+    after the first client has received ``fault_after`` frames; recovery
+    restores the newest checkpoint and replays quietly, and every client
+    sees a ``reconnect`` event while its stream continues bitwise. A
+    *sequence* of faults is injected back-to-back — a fault storm — and
+    must coalesce into ONE supervised recovery pass (one ``reconnect``
+    broadcast; ``ServeChaosReport.recoveries == 1``).
+
+    ``ckpt_keep`` bounds the gateway's checkpoint ladder, so a small value
+    under a long run forces GC + splice-journal compaction mid-flight (the
+    compaction-never-breaks-replay test rides on this).
 
     Per-client queues are sized to hold the whole run (``chunks`` deep) so
     this harness measures recovery fidelity, not backpressure — the
@@ -418,12 +526,15 @@ def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
     tpl = parked_template(
         slots=n_clients if slots is None else slots, num_agents=num_agents,
         num_levels=num_levels, num_steps=max(4096, chunks * chunk_size))
+    faults = ([] if fault is None
+              else list(fault) if isinstance(fault, (list, tuple))
+              else [fault])
 
     async def drive():
         gw = Gateway(tpl, backend=backend, chunk_size=chunk_size,
                      queue_maxsize=chunks + 4,
                      ckpt_dir=ckpt_dir, checkpoint_every=checkpoint_every,
-                     engine_opts=engine_opts)
+                     ckpt_keep=ckpt_keep, engine_opts=engine_opts)
         await gw.start(chunks=chunks)
         clients = [gw.open_session(s, client=f"c{i}")
                    for i, s in enumerate(scenarios)]
@@ -434,16 +545,20 @@ def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
                 collected[0].append(await clients[0].next_frame())
             clients.append(gw.open_session(late_attach, client="late"))
             collected.append([])
-        if fault is not None:
-            gw.inject_fault(fault)
+        for f in faults:     # back-to-back: the loop must coalesce these
+            gw.inject_fault(f)
         rest = await asyncio.gather(
             *(cs.frames(chunks) for cs in clients))
         for got, more in zip(collected, rest):
             got.extend(more)
+        health = gw.health()
+        recoveries = 0
+        if gw.metrics is not None:
+            recoveries = int(gw.metrics.counter("recoveries_total"))
         await gw.stop()
-        return gw, clients, collected
+        return gw, clients, collected, health, recoveries
 
-    gw, clients, collected = asyncio.run(drive())
+    gw, clients, collected, health, recoveries = asyncio.run(drive())
     events = {cs.client: tuple(cs.events) for cs in clients}
     return ServeChaosReport(
         frames={cs.client: tuple(fs)
@@ -452,4 +567,6 @@ def run_serve_plan(scenarios: Sequence[str], *, backend: str, ckpt_dir,
         reconnects=sum(1 for e in events[clients[0].client]
                        if e.kind == "reconnect"),
         traces_delta=gw.traces_delta,
-        steps=gw.step_count)
+        steps=gw.step_count,
+        recoveries=recoveries,
+        health=health)

@@ -35,6 +35,24 @@ additional series. The serving gateway (:mod:`repro.serve`) records:
             ``clients_connected``, ``slots_attached``
   windows   ``chunk_latency_seconds`` — a bounded-window
             :class:`QuantileWindow` whose p50/p99 feed ``BENCH_serve.json``
+
+Durability + fault-storm series (PR 8; all host-side, zero hot-path):
+
+  counters  ``checkpoints_saved_total`` (committed by the async writer),
+            ``journal_entries_total`` (splices journaled),
+            ``journal_compactions_total`` /
+            ``journal_entries_compacted_total`` (GC-driven compaction),
+            ``recoveries_total`` (successful supervised recovery passes),
+            ``recovery_attempts_total`` (including retried failures),
+            ``faults_coalesced_total`` (extra faults folded into one pass)
+  gauges    ``checkpoint_writer_pending`` (snapshots not yet committed,
+            0–2 by the lag bound), ``checkpoints_skipped`` (saves dropped
+            by the latest-wins mailbox), ``degraded`` (0/1)
+  windows   ``checkpoint_snapshot_seconds`` — the engine-thread cost of a
+            checkpoint (device→host mirror ONLY; `BENCH_serve.json` fails
+            hard when its max stalls past threshold), and
+            ``checkpoint_write_seconds`` — the background writer's
+            serialize+fsync+commit latency (never on the engine thread)
 """
 from __future__ import annotations
 

@@ -4,7 +4,11 @@ Public surface:
 
   * :class:`Gateway` / :class:`ClientSession` / :func:`parked_template` —
     the serving core (in-process transport);
-  * :class:`SlotScheduler` / :class:`GatewayFull` — slot multiplexing;
+  * :class:`SlotScheduler` / :class:`GatewayFull` /
+    :class:`GatewayRecovering` / :class:`GatewayDegraded` — slot
+    multiplexing + typed admission refusals;
+  * :class:`SpliceJournal` / :class:`SpliceEntry` — the durable
+    write-ahead splice log (process-crash recovery + bitwise restart);
   * :class:`FrameBus` / :class:`Subscription` — bounded backpressure bus;
   * :class:`Frame` / :class:`Event` / :func:`decode` — wire shapes;
   * :class:`DoubleBuffer` — the lag-one device→host pipeline;
@@ -19,13 +23,16 @@ guarantee; CI asserts it).
 from repro.serve.bus import POLICIES, FrameBus, Subscription
 from repro.serve.frames import Event, Frame, decode, slice_frames
 from repro.serve.gateway import ClientSession, Gateway, parked_template
+from repro.serve.journal import SpliceEntry, SpliceJournal
 from repro.serve.pipeline import DoubleBuffer
-from repro.serve.slots import GatewayFull, SlotScheduler
+from repro.serve.slots import (GatewayDegraded, GatewayFull,
+                               GatewayRecovering, SlotScheduler)
 
 __all__ = [
     "POLICIES", "FrameBus", "Subscription",
     "Event", "Frame", "decode", "slice_frames",
     "ClientSession", "Gateway", "parked_template",
+    "SpliceEntry", "SpliceJournal",
     "DoubleBuffer",
-    "GatewayFull", "SlotScheduler",
+    "GatewayDegraded", "GatewayFull", "GatewayRecovering", "SlotScheduler",
 ]

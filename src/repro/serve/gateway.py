@@ -16,14 +16,26 @@ marginal cost of a client is a slot assignment, never a compile:
     through :class:`repro.serve.bus.FrameBus` with bounded per-client
     queues and non-blocking delivery (drop-oldest or disconnect), so a
     stalled consumer can never stall the simulation or other clients;
-  * operations  — ``Engine.warm`` runs before serving (no client request
-    ever pays a compile), :meth:`health` wraps ``Engine.readiness`` for the
-    HTTP probe, every gateway series lands in the session's
-    :class:`~repro.ops.metrics.MetricsRegistry`, and optional periodic
-    checkpoints make device-loss recovery (:meth:`inject_fault`) bitwise:
-    a splice journal replays post-checkpoint attach/detach at their
-    original boundaries, so the post-``reconnect`` stream equals a
-    fault-free run's.
+  * durability  — with ``ckpt_dir`` set, periodic checkpoints go through
+    the :class:`~repro.checkpoint.manager.CheckpointManager` **async
+    writer**: the engine thread only mirrors device state to host;
+    serialization, fsync, and the atomic ``COMMIT`` rename happen on a
+    background thread with a lag-bounded latest-wins mailbox (skipped
+    saves are counted, never queued). Every applied slot splice is
+    appended to a durable :class:`~repro.serve.journal.SpliceJournal`
+    *before* it is applied (write-ahead), so both in-process recovery and
+    a full **process crash + restart** resume every client stream bitwise:
+    restore the newest committed checkpoint, replay journaled splices at
+    their original boundaries, keep streaming (clients re-subscribe via
+    :meth:`resume_session`).
+  * resilience  — recovery is a supervised state machine
+    (``serving → recovering → serving`` or ``→ degraded``): queued faults
+    coalesce into ONE recovery, each attempt retries with exponential
+    backoff + jitter up to ``max_recovery_attempts``, admission is paused
+    (typed :class:`~repro.serve.slots.GatewayRecovering`) while recovering,
+    and an exhausted retry budget degrades the gateway to a read-only
+    health endpoint (503; :class:`~repro.serve.slots.GatewayDegraded` on
+    admission) instead of crashing.
 
 In-process transport (tests, benchmarks, and same-process consumers)::
 
@@ -42,6 +54,7 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import random
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple, Union
@@ -51,8 +64,10 @@ from repro.core.params import EnsembleSpec
 from repro.core.session import Engine, Session, StepBatch
 from repro.serve.bus import FrameBus, Subscription
 from repro.serve.frames import Event, Frame, slice_frames
+from repro.serve.journal import SpliceEntry, SpliceJournal
 from repro.serve.pipeline import DoubleBuffer
-from repro.serve.slots import GatewayFull, SlotScheduler  # noqa: F401
+from repro.serve.slots import (GatewayDegraded, GatewayFull,  # noqa: F401
+                               GatewayRecovering, SlotScheduler)
 
 
 def parked_template(slots: int, *, num_agents: int, num_levels: int,
@@ -125,16 +140,22 @@ class Gateway:
     its market count is the session capacity. ``queue_maxsize``/``policy``
     set the default per-client backpressure bounds
     (:mod:`repro.serve.bus`); ``ckpt_dir`` + ``checkpoint_every`` (in
-    chunks) enable the fault-recovery path. All public methods must be
-    called from the event-loop thread; device work runs on a dedicated
-    single-thread executor ("the engine thread") so the loop stays
-    responsive — and consumers keep draining — while chunks compute.
+    chunks) enable the durability/fault-recovery path (checkpoints are
+    written asynchronously — see the module docstring). ``ckpt_keep``
+    bounds the on-disk ladder; ``max_recovery_attempts`` and
+    ``recovery_backoff=(base_s, cap_s)`` govern the supervised recovery
+    retry loop. All public methods must be called from the event-loop
+    thread; device work runs on a dedicated single-thread executor ("the
+    engine thread") so the loop stays responsive — and consumers keep
+    draining — while chunks compute.
     """
 
     def __init__(self, template: Union[EnsembleSpec, MarketConfig],
                  backend: str = "jax-scan", *, chunk_size: int = 16,
                  queue_maxsize: int = 8, policy: str = "drop-oldest",
                  ckpt_dir: Optional[Any] = None, checkpoint_every: int = 0,
+                 ckpt_keep: int = 64, max_recovery_attempts: int = 3,
+                 recovery_backoff: Tuple[float, float] = (0.05, 1.0),
                  metrics: bool = True,
                  engine_opts: Optional[Dict[str, Any]] = None) -> None:
         self.template = EnsembleSpec.coerce(template)
@@ -145,6 +166,11 @@ class Gateway:
         self.checkpoint_every = int(checkpoint_every)
         self._ckpt_dir = ckpt_dir
         self._ckpt = None
+        self._ckpt_keep = int(ckpt_keep)
+        self._journal: Optional[SpliceJournal] = None
+        self._max_attempts = max(1, int(max_recovery_attempts))
+        self._backoff = (float(recovery_backoff[0]),
+                         float(recovery_backoff[1]))
         self._metrics_enabled = bool(metrics)
         self._engine_opts = dict(engine_opts or {})
         self.engine: Optional[Engine] = None
@@ -157,15 +183,19 @@ class Gateway:
             max_workers=1, thread_name_prefix="engine")
         self._task: Optional[asyncio.Task] = None
         self._running = False
+        self._state = "idle"     # idle|serving|recovering|degraded|stopped
+        self._degraded_reason: Optional[str] = None
         self._seq = itertools.count()
         self._chunks_remaining: Optional[int] = None
         self._warm_traces = 0
         self._pending_faults: List[Any] = []
         self._sessions: Dict[str, ClientSession] = {}
-        # Splice journal: (boundary step, slots, sub-spec) of every applied
-        # swap, so fault recovery can replay post-checkpoint attach/detach
-        # at their original boundaries (bitwise resume).
-        self._splices: List[Tuple[int, Tuple[int, ...], EnsembleSpec]] = []
+        # Journaled splices scheduled for replay after a process restart
+        # (entries at boundaries >= the restored step, applied when the
+        # cursor reaches them; see _apply_replay).
+        self._replay: List[SpliceEntry] = []
+        self.resumed_from: Optional[int] = None   # set by a disk restart
+        self.restart_errors: Tuple[str, ...] = ()
 
     # ---- lifecycle ----
     async def start(self, chunks: Optional[int] = None) -> None:
@@ -175,6 +205,13 @@ class Gateway:
         ever pays a compile (``traces_delta`` stays 0 from here on — the
         invariant CI's serve smoke asserts). ``chunks`` bounds the run for
         tests/benchmarks; ``None`` streams until :meth:`stop`.
+
+        With ``ckpt_dir`` pointing at a directory holding a committed
+        checkpoint ladder (a previous gateway process died there), start
+        becomes a **restart**: the newest committed checkpoint is
+        restored, journaled splices replay at their original boundaries,
+        and slot attachments are reconstructed — clients re-subscribe with
+        :meth:`resume_session` and their streams continue bitwise.
         """
         if self._running:
             raise RuntimeError("gateway already started")
@@ -184,13 +221,21 @@ class Gateway:
                                    self._engine_opts)
         self.bus = FrameBus(metrics=self.metrics)
         self._running = True
+        self._state = "serving"
+        if self.metrics is not None:
+            self.metrics.gauge("degraded", 0)
         self._task = asyncio.create_task(self._run_loop(), name="gateway")
 
     def _open_engine(self, engine_opts: Dict[str, Any]) -> None:
-        """(engine thread) Build + warm the engine, open the session, and
-        take the step-0 checkpoint anchor on *first* start (recovery keeps
-        the existing checkpoint ladder — the anchor must never be
-        overwritten with a fresh template state)."""
+        """(engine thread) Build + warm the engine and open the session.
+
+        On *first* open with ``ckpt_dir``: create the async checkpoint
+        manager + durable splice journal, then either take the durable
+        step-0 anchor (fresh directory) or run the process-restart path
+        (committed ladder found). In-process recovery re-enters here with
+        ``self._ckpt`` already set and keeps the existing ladder — the
+        anchor must never be overwritten with a fresh template state.
+        """
         self.engine = Engine(self.backend, chunk_size=self.chunk,
                              metrics=self._metrics_enabled, **engine_opts)
         ready = self.engine.warm(self.template, include_step=False)
@@ -207,20 +252,70 @@ class Gateway:
         if self._ckpt_dir is not None and self._ckpt is None:
             from repro.checkpoint.manager import CheckpointManager
 
-            self._ckpt = CheckpointManager(self._ckpt_dir, keep=64,
-                                           async_write=False)
-            self.session.save_checkpoint(self._ckpt)
+            self._journal = SpliceJournal(self._ckpt_dir)
+            self._ckpt = CheckpointManager(
+                self._ckpt_dir, keep=self._ckpt_keep, async_write=True,
+                on_write=self._on_ckpt_write, on_gc=self._on_ckpt_gc)
+            if self._ckpt.latest_step() is None:
+                # Fresh ladder: drop any stale journal (a crash before the
+                # anchor committed has nothing to replay onto), then write
+                # the durable step-0 anchor before taking traffic.
+                self._journal.reset()
+                self.session.save_checkpoint(self._ckpt, wait=True)
+            else:
+                self._restart_from_disk()
+
+    def _restart_from_disk(self) -> None:
+        """(engine thread) Process-restart: restore the newest committed
+        checkpoint, schedule journaled splice replay, rebuild slot
+        bookkeeping, and resume seq/step continuity."""
+        from repro.ops.chaos import _restore_resilient
+
+        errors: List[str] = []
+        resumed = _restore_resilient(self.session, self._ckpt, errors)
+        self.restart_errors = tuple(errors)
+        self.resumed_from = resumed
+        entries = self._journal.entries()
+        self._replay = [e for e in entries if e.t >= resumed]
+        # Attachment bookkeeping: the restored spec's labels cover the
+        # checkpointed mixture; pending-replay entries claim their slots
+        # NOW (so new admissions cannot steal them) and update labels as
+        # they apply.
+        for slot, label in enumerate(self.session.spec.scenarios):
+            if label and label != "parked":
+                self.scheduler.mark_attached(slot, label)
+        final: Dict[int, Optional[str]] = {}
+        for e in self._replay:
+            for slot, label in zip(e.slots, e.labels):
+                final[slot] = label
+        for slot, label in final.items():
+            if label is not None:
+                self.scheduler.mark_attached(slot, label)
+        self._seq = itertools.count(resumed // self.chunk)
 
     async def stop(self) -> None:
-        """Stop the step loop, flush the pipeline tail, close every
-        client."""
+        """Stop the step loop, flush the pipeline tail **and the async
+        checkpoint writer** (shutdown never abandons an in-flight
+        checkpoint — a sticky writer failure is re-raised here), close
+        every client."""
         self._running = False
         if self._task is not None:
             await self._task
             self._task = None
-        self._exec.shutdown(wait=True)
-        if self.session is not None:
-            self.session.close()
+        try:
+            if self._ckpt is not None:
+                loop = asyncio.get_running_loop()
+                await loop.run_in_executor(self._exec, self._ckpt.wait)
+        finally:
+            if self._ckpt is not None:
+                self._ckpt.close()
+            if self._journal is not None:
+                self._journal.close()
+            self._exec.shutdown(wait=True)
+            if self.session is not None:
+                self.session.close()
+            if self._state != "degraded":
+                self._state = "stopped"
 
     @property
     def traces_delta(self) -> int:
@@ -232,12 +327,26 @@ class Gateway:
     def step_count(self) -> int:
         return self.session.step_count if self.session is not None else 0
 
+    @property
+    def state(self) -> str:
+        """Supervision state: idle|serving|recovering|degraded|stopped."""
+        return self._state
+
     def health(self) -> Dict[str, Any]:
-        """The health-endpoint payload, backed by ``Engine.readiness()``."""
+        """The health-endpoint payload, backed by ``Engine.readiness()``.
+
+        ``ready`` is true only in the ``serving`` state — a recovering or
+        degraded gateway answers 503 through
+        :class:`repro.serve.transport.HealthServer` while still reporting
+        full diagnostics (recovery state, checkpoint-writer lag, journal
+        size) in the body.
+        """
         ready = self.engine is not None and self.engine.readiness().ready
-        return {
-            "ready": bool(ready and self._running),
+        out = {
+            "ready": bool(ready and self._running
+                          and self._state == "serving"),
             "running": self._running,
+            "state": self._state,
             "backend": self.backend,
             "slots": self.scheduler.num_slots,
             "slots_attached": len(self.scheduler.attached),
@@ -246,18 +355,45 @@ class Gateway:
             "step": self.step_count,
             "traces_delta": self.traces_delta,
         }
+        if self._degraded_reason is not None:
+            out["degraded_reason"] = self._degraded_reason
+        if self._ckpt is not None:
+            out["checkpoint"] = {
+                "pending": self._ckpt.pending,
+                "writes": self._ckpt.writes,
+                "skipped": self._ckpt.skipped,
+                "last_write_s": self._ckpt.last_write_seconds,
+                "latest_step": self._ckpt.latest_step(),
+            }
+        if self._journal is not None:
+            out["journal_entries"] = len(self._journal)
+        return out
 
     # ---- client admission (in-process front door) ----
+    def _check_admission(self) -> None:
+        # degraded outranks "not running": the loop has exited, but the
+        # typed refusal is the diagnosis callers need
+        if self._state == "degraded":
+            raise GatewayDegraded(
+                f"gateway is degraded ({self._degraded_reason}); serving "
+                "health only — restart the process to recover")
+        if not self._running:
+            raise RuntimeError("gateway is not running; await start() first")
+        if self._state == "recovering":
+            raise GatewayRecovering(
+                "gateway is recovering from a fault; admission resumes "
+                "after the reconnect broadcast — retry shortly")
+
     def open_session(self, spec: Union[str, MarketConfig, EnsembleSpec],
                      *, maxsize: Optional[int] = None,
                      policy: Optional[str] = None,
                      client: Optional[str] = None) -> ClientSession:
         """Attach a client's market; frames start at the next chunk
-        boundary. Raises :class:`GatewayFull` when every slot is taken and
-        ``ValueError`` when the spec disagrees with the template's static
-        fields."""
-        if not self._running:
-            raise RuntimeError("gateway is not running; await start() first")
+        boundary. Raises :class:`GatewayFull` when every slot is taken,
+        :class:`GatewayRecovering`/:class:`GatewayDegraded` while admission
+        is paused, and ``ValueError`` when the spec disagrees with the
+        template's static fields."""
+        self._check_admission()
         slot = self.scheduler.attach(spec)
         sub = self.bus.subscribe(
             slot, client=client,
@@ -267,6 +403,36 @@ class Gateway:
             "slot": slot, "client": sub.client,
             "scenario": self.scheduler.label(slot),
             "first_step": self.step_count}))
+        cs = ClientSession(self, sub)
+        self._sessions[sub.client] = cs
+        if self.metrics is not None:
+            self.metrics.gauge("slots_attached",
+                               len(self.scheduler.attached))
+        return cs
+
+    def resume_session(self, slot: int, *, maxsize: Optional[int] = None,
+                       policy: Optional[str] = None,
+                       client: Optional[str] = None) -> ClientSession:
+        """Re-subscribe to an *already attached* slot — the restart front
+        door. After a process crash + restart the slot's market is already
+        live (restored from the checkpoint + journal replay), so resuming
+        costs no splice: frames continue from the restored cursor, and the
+        overlap with anything the client saw pre-crash is bitwise-identical
+        (dedupe by ``frame.step0``). Raises ``KeyError`` for a slot that is
+        not attached."""
+        self._check_admission()
+        label = self.scheduler.label(slot)
+        if label is None:
+            raise KeyError(
+                f"slot {slot} is not attached; open_session() admits new "
+                "clients")
+        sub = self.bus.subscribe(
+            slot, client=client,
+            maxsize=self.queue_maxsize if maxsize is None else maxsize,
+            policy=self.policy if policy is None else policy)
+        sub._force(Event("attached", {
+            "slot": slot, "client": sub.client, "scenario": label,
+            "first_step": self.step_count, "resumed": True}))
         cs = ClientSession(self, sub)
         self._sessions[sub.client] = cs
         if self.metrics is not None:
@@ -290,7 +456,8 @@ class Gateway:
         """Queue a :class:`repro.ops.chaos.DeviceLoss` for the next chunk
         boundary; requires ``ckpt_dir`` (recovery restores the newest
         loadable checkpoint and replays quietly, so client streams resume
-        bitwise)."""
+        bitwise). Faults queued while one is already pending **coalesce**
+        into a single recovery pass (the last fault's topology wins)."""
         if self._ckpt is None:
             raise RuntimeError(
                 "fault recovery needs ckpt_dir= (no checkpoint to restore)")
@@ -302,22 +469,25 @@ class Gateway:
         try:
             while self._running and self._chunks_remaining != 0:
                 if self._pending_faults:
-                    fault = self._pending_faults.pop(0)
+                    faults = self._pending_faults[:]
+                    self._pending_faults.clear()
                     # The in-flight chunk completed pre-fault: deliver it
                     # before tearing the engine down, so no frame is lost.
                     tail = await loop.run_in_executor(self._exec,
                                                       self._buffer.flush)
                     if tail is not None:
                         self._complete(tail)
-                    resume = await loop.run_in_executor(
-                        self._exec, self._recover, fault)
-                    self.bus.broadcast(Event("reconnect", {
-                        "resume_step": resume, "step": self.step_count,
-                        "fault": type(fault).__name__}))
-                    if self.metrics is not None:
-                        self.metrics.inc("reconnects_total")
-                done = await loop.run_in_executor(self._exec,
-                                                  self._advance_once)
+                    if not await self._recover_supervised(faults):
+                        break        # degraded: loop exits, health goes 503
+                # Coalesce on the LOOP thread: admission (open/close_session)
+                # also runs here, so whether a client's splice makes this
+                # boundary or the next is decided by asyncio callback order,
+                # never by a loop-vs-engine-thread race — the determinism
+                # the bitwise chaos comparisons rely on.
+                pending = self.scheduler.coalesce()
+                attached = self.scheduler.attached
+                done = await loop.run_in_executor(
+                    self._exec, self._advance_once, pending, attached)
                 if done is not None:
                     self._complete(done)
                 if self._chunks_remaining is not None:
@@ -328,27 +498,63 @@ class Gateway:
         finally:
             self._running = False
             if self.bus is not None:
-                self.bus.close_all("shutdown")
+                self.bus.close_all("degraded" if self._state == "degraded"
+                                   else "shutdown")
 
-    def _advance_once(self):
-        """(engine thread) Apply pending slot splices, dispatch one chunk,
-        and hand back the *previous* chunk still device-side (the lag-one
-        pipeline; materialization happens in :meth:`_complete`)."""
+    def _advance_once(self, pending, attached):
+        """(engine thread) Apply due journal replays and the loop-frozen
+        pending slot splice (journal-first: write-ahead), dispatch one
+        chunk, and hand back the *previous* chunk still device-side (the
+        lag-one pipeline; materialization happens in :meth:`_complete`).
+        ``pending``/``attached`` were coalesced/captured on the loop thread
+        so splice boundaries are ordered against admission, not raced.
+        Periodic checkpoints cost only the device→host mirror here —
+        serialization and fsync live on the manager's writer thread."""
         sess = self.session
-        spliced = self.scheduler.drain(sess)   # coalesced boundary swap
-        if spliced is not None:
-            self._splices.append((sess.step_count,) + spliced)
+        self._apply_replay(sess)
+        if pending is not None:                # coalesced boundary swap
+            slots, sub, labels = pending
+            entry = SpliceEntry(t=sess.step_count, slots=slots,
+                                labels=labels, spec=sub)
+            if self._journal is not None:      # WAL: durable BEFORE applied
+                self._journal.append(entry)
+                if self.metrics is not None:
+                    self.metrics.inc("journal_entries_total")
+            sess.swap_markets(list(slots), sub)
         seq = next(self._seq)
         step0 = sess.step_count
         t0 = time.perf_counter()
         batch = sess.run(self.chunk)   # async dispatch on jax/pallas
         stats = sess.stats             # host copy; None unless stats_only
-        meta = (seq, step0, self.chunk, t0, self.scheduler.attached)
+        meta = (seq, step0, self.chunk, t0, attached)
         done = self._buffer.push(meta, (batch, stats))
         if (self._ckpt is not None and self.checkpoint_every
                 and (seq + 1) % self.checkpoint_every == 0):
-            sess.save_checkpoint(self._ckpt)
+            t0c = time.perf_counter()
+            sess.save_checkpoint(self._ckpt, wait=False)
+            if self.metrics is not None:
+                self.metrics.observe_window("checkpoint_snapshot_seconds",
+                                            time.perf_counter() - t0c)
+                self.metrics.gauge("checkpoint_writer_pending",
+                                   self._ckpt.pending)
+                self.metrics.gauge("checkpoints_skipped",
+                                   self._ckpt.skipped)
         return done
+
+    def _apply_replay(self, sess) -> None:
+        """(engine thread) Apply journaled splices whose boundary the
+        restored cursor has reached — the process-restart replay. Applied
+        entries are NOT re-journaled (they are already on disk)."""
+        while self._replay and self._replay[0].t <= sess.step_count:
+            e = self._replay.pop(0)
+            if e.t < sess.step_count:
+                continue   # already baked into the restored checkpoint
+            sess.swap_markets(list(e.slots), e.spec)
+            for slot, label in zip(e.slots, e.labels):
+                if label is None:
+                    self.scheduler.mark_parked(slot)
+                else:
+                    self.scheduler.mark_attached(slot, label)
 
     def _to_host(self, payload: Tuple[StepBatch, Any]):
         batch, stats = payload
@@ -365,21 +571,92 @@ class Gateway:
         self.bus.publish(slice_frames(host_batch, stats, slots, seq,
                                       step0, n))
 
-    def _recover(self, fault) -> int:
+    # ---- checkpoint-writer callbacks (writer thread; registry is
+    # thread-safe) ----
+    def _on_ckpt_write(self, step: int, seconds: float) -> None:
+        if self.metrics is not None:
+            self.metrics.observe_window("checkpoint_write_seconds", seconds)
+            self.metrics.inc("checkpoints_saved_total")
+
+    def _on_ckpt_gc(self, oldest_retained_step: int) -> None:
+        if self._journal is not None:
+            dropped = self._journal.compact(oldest_retained_step)
+            if dropped and self.metrics is not None:
+                self.metrics.inc("journal_compactions_total")
+                self.metrics.inc("journal_entries_compacted_total", dropped)
+
+    # ---- supervised recovery (the fault-storm state machine) ----
+    async def _recover_supervised(self, faults: List[Any]) -> bool:
+        """One coalesced recovery pass over every queued fault.
+
+        Retries ``_recover`` up to ``max_recovery_attempts`` times with
+        exponential backoff + jitter; success broadcasts ONE ``reconnect``
+        (however many faults coalesced), exhaustion degrades the gateway
+        (503 health, :class:`GatewayDegraded` admission) and broadcasts
+        ``degraded``. Returns True when serving may resume.
+        """
+        loop = asyncio.get_running_loop()
+        self._state = "recovering"
+        if self.metrics is not None and len(faults) > 1:
+            self.metrics.inc("faults_coalesced_total", len(faults) - 1)
+        fault = faults[-1]                  # last fault's topology wins
+        target = self.step_count
+        base, cap = self._backoff
+        last_error: Optional[BaseException] = None
+        for attempt in range(1, self._max_attempts + 1):
+            if self.metrics is not None:
+                self.metrics.inc("recovery_attempts_total")
+            try:
+                resume = await loop.run_in_executor(
+                    self._exec, self._recover, fault, target)
+            except Exception as exc:
+                last_error = exc
+                if attempt < self._max_attempts:
+                    delay = min(cap, base * (2 ** (attempt - 1)))
+                    await asyncio.sleep(delay * (1.0 + random.random()))
+                continue
+            self._state = "serving"
+            self.bus.broadcast(Event("reconnect", {
+                "resume_step": resume, "step": self.step_count,
+                "fault": type(fault).__name__,
+                "faults_coalesced": len(faults),
+                "attempts": attempt}))
+            if self.metrics is not None:
+                self.metrics.inc("reconnects_total")
+                self.metrics.inc("recoveries_total")
+            return True
+        self._state = "degraded"
+        self._degraded_reason = (
+            f"recovery failed after {self._max_attempts} attempts: "
+            f"{type(last_error).__name__}: {last_error}")
+        if self.metrics is not None:
+            self.metrics.gauge("degraded", 1)
+        self.bus.broadcast(Event("degraded", {
+            "reason": self._degraded_reason, "step": target,
+            "fault": type(fault).__name__,
+            "faults_coalesced": len(faults)}))
+        return False
+
+    def _recover(self, fault, target: int) -> int:
         """(engine thread) Device-loss recovery under live client load.
 
         Rebuild the engine on the surviving topology (``devices_after`` /
         ``lost_device``, as in :class:`repro.ops.chaos.DeviceLoss`),
         restore the newest loadable checkpoint (walking the ladder past
-        corrupt steps), then replay *quietly* back to the pre-fault cursor
-        — re-applying journaled slot splices at their original boundaries
-        — so published streams continue bitwise after the ``reconnect``
-        event. Returns the step the session resumed from.
+        corrupt steps), then replay *quietly* back to ``target`` (the
+        pre-fault cursor) — re-applying splices read from the **durable
+        journal** at their original boundaries — so published streams
+        continue bitwise after the ``reconnect`` event. Idempotent across
+        retry attempts (the supervised loop may call it repeatedly).
+        Returns the step the session resumed from.
         """
         from repro.ops.chaos import _restore_resilient
 
-        target = self.session.step_count
-        self.session.close()
+        if self.session is not None:
+            try:
+                self.session.close()
+            except Exception:
+                pass               # a prior attempt already tore it down
         new_opts = dict(self._engine_opts)
         new_opts.pop("devices", None)
         new_opts.pop("mesh", None)
@@ -396,14 +673,16 @@ class Gateway:
         errors: List[str] = []
         resumed = _restore_resilient(self.session, self._ckpt, errors)
         # Quiet replay: the checkpoint predates some splices — re-apply
-        # each at its original boundary while running the lost chunks.
-        replay = [(t, slots, sub) for t, slots, sub in self._splices
-                  if resumed <= t < target]
-        for t, slots, sub in replay:
-            while self.session.step_count < t:
+        # each at its original boundary (from the durable journal, so the
+        # same path covers in-process recovery and process restart) while
+        # running the lost chunks.
+        replay = [e for e in self._journal.entries()
+                  if resumed <= e.t < target]
+        for e in replay:
+            while self.session.step_count < e.t:
                 self.session.run(min(self.chunk,
-                                     t - self.session.step_count))
-            self.session.swap_markets(list(slots), sub)
+                                     e.t - self.session.step_count))
+            self.session.swap_markets(list(e.slots), e.spec)
         while self.session.step_count < target:
             self.session.run(min(self.chunk,
                                  target - self.session.step_count))

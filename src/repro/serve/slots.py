@@ -27,6 +27,16 @@ class GatewayFull(RuntimeError):
     """Every slot is attached — admission refused (no retrace to grow)."""
 
 
+class GatewayRecovering(RuntimeError):
+    """The gateway is mid-recovery — admission paused; retry after the
+    ``reconnect`` broadcast (existing streams resume bitwise)."""
+
+
+class GatewayDegraded(RuntimeError):
+    """The recovery retry budget is exhausted — the gateway is serving
+    health only (HTTP 503) and refuses sessions until restarted."""
+
+
 class SlotScheduler:
     """Free-list of ensemble rows + a pending-mutation queue.
 
@@ -104,15 +114,18 @@ class SlotScheduler:
         self._free.append(slot)
         self._pending.append((slot, EnsembleSpec.parked(self.template, 1)))
 
-    def drain(self, session
-              ) -> Optional[Tuple[Tuple[int, ...], EnsembleSpec]]:
-        """Apply every pending mutation in ONE ``swap_markets`` splice.
+    def coalesce(self) -> Optional[Tuple[Tuple[int, ...], EnsembleSpec,
+                                         Tuple[Optional[str], ...]]]:
+        """Pop every pending mutation as ONE coalesced splice — without
+        applying it.
 
         Later mutations of the same slot win (detach-then-attach between
-        two boundaries nets to the attach). Returns the applied
-        ``(slots, sub_spec)`` — the gateway journals it for bitwise fault
-        replay — or ``None`` when nothing was pending (no host round-trip
-        happened at all).
+        two boundaries nets to the attach). Returns ``(slots, sub_spec,
+        labels)`` — ``labels`` is the post-splice attachment label per
+        slot (``None`` for a park/detach) — or ``None`` when nothing was
+        pending. The gateway journals the splice durably *before* calling
+        ``session.swap_markets`` (write-ahead ordering: a crash between
+        the two replays the splice, never loses it).
         """
         if not self._pending:
             return None
@@ -122,5 +135,32 @@ class SlotScheduler:
         self._pending.clear()
         slots = sorted(last)
         sub = EnsembleSpec.concatenate([last[s] for s in slots])
-        session.swap_markets(slots, sub)
-        return tuple(slots), sub
+        labels = tuple(self._attached.get(s) for s in slots)
+        return tuple(slots), sub, labels
+
+    def drain(self, session
+              ) -> Optional[Tuple[Tuple[int, ...], EnsembleSpec]]:
+        """Apply every pending mutation in ONE ``swap_markets`` splice
+        (:meth:`coalesce` + apply, for callers without a journal)."""
+        pending = self.coalesce()
+        if pending is None:
+            return None
+        slots, sub, _ = pending
+        session.swap_markets(list(slots), sub)
+        return slots, sub
+
+    # ---- restart reconstruction (journal replay / checkpoint labels) ----
+    def mark_attached(self, slot: int, label: str) -> None:
+        """Record ``slot`` as attached with ``label`` without queueing any
+        splice — rebuilding bookkeeping after a process restart, where the
+        row's params already live in the restored checkpoint (or arrive
+        via journal replay)."""
+        if slot not in self._attached:
+            self._free.remove(slot)
+        self._attached[slot] = label
+
+    def mark_parked(self, slot: int) -> None:
+        """Inverse of :meth:`mark_attached` for journal-replayed parks."""
+        if slot in self._attached:
+            del self._attached[slot]
+            self._free.append(slot)

@@ -7,10 +7,14 @@ surfaces the serving deployment needs:
 
   * :class:`HealthServer` — a dependency-free asyncio HTTP/1.1 endpoint
     (``GET /healthz``) returning :meth:`Gateway.health` as JSON: ``200``
-    when the engine is warm and the loop is running, ``503`` otherwise.
-    This is the load-balancer / k8s readiness probe, backed by
-    ``Engine.readiness()`` — a gateway that would retrace on the next
-    request reports unready *before* taking traffic.
+    when the engine is warm, the loop is running, and the gateway is in
+    the ``serving`` state; ``503`` otherwise — including the
+    ``recovering`` and ``degraded`` supervision states, where the body
+    still carries full diagnostics (state, ``degraded_reason``,
+    checkpoint-writer lag, journal size) for operators while the
+    load-balancer routes traffic away. This is the k8s readiness probe,
+    backed by ``Engine.readiness()`` — a gateway that would retrace on
+    the next request reports unready *before* taking traffic.
   * :class:`WebSocketServer` — one WebSocket connection per client
     session. The handshake message selects the scenario; frames and
     control events stream as the JSON codecs in

@@ -126,6 +126,34 @@ def test_multiple_faults_in_one_plan(tmp_path):
     assert rep.events[1].recovered_from == 18  # rewritten intact on replay
 
 
+def test_torn_checkpoint_write_every_offset(tmp_path):
+    """Crash the checkpoint commit at EVERY durable-write offset: the
+    restart must restore a committed checkpoint — the previous one, or the
+    new one when the crash landed after the COMMIT rename — and replay
+    bitwise. A torn write never yields loadable-but-wrong state."""
+    from repro.checkpoint.manager import CheckpointManager, session_tree
+    from repro.ops import TornCheckpointWrite, count_write_ops
+
+    want = _baseline("numpy-pcg64")
+    with Engine("numpy-pcg64", chunk_size=CHUNK).open(_cfg()) as s:
+        s.run(12)
+        tree = session_tree(s.snapshot())
+    ops = count_write_ops(
+        CheckpointManager(tmp_path / "probe", async_write=False), 12, tree)
+    assert ops >= 15
+    for k in range(ops):
+        plan = FaultPlan([TornCheckpointWrite(at_step=12, crash_at_op=k)],
+                         checkpoint_every=CHUNK)
+        rep = run_plan(plan, _cfg(), backend="numpy-pcg64",
+                       ckpt_dir=tmp_path / f"op{k}", chunk_size=CHUNK)
+        _assert_bitwise(rep, want, f"torn write at op {k}")
+        ev = rep.events[0]
+        assert any("SimulatedCrash" in e for e in ev.errors), (k, ev.errors)
+        # the step-12 rewrite was uncommitted first, so a crash mid-commit
+        # falls back to 6; a crash after the COMMIT rename keeps 12
+        assert ev.recovered_from in (6, 12), (k, ev)
+
+
 def test_plan_validates_chunk_alignment():
     with pytest.raises(ValueError, match="chunk boundary"):
         run_plan(FaultPlan([DeviceLoss(at_step=7)]), _cfg(),
@@ -257,6 +285,187 @@ def test_serve_device_loss_under_client_load(tmp_path):
     _assert_serve_bitwise(rep, want, "serve device-loss")
     assert rep.traces_delta == 0, \
         f"{rep.traces_delta} retraces after recovery re-warm"
+
+
+def test_serve_fault_storm_coalesces_into_one_recovery(tmp_path):
+    """A reconnect storm: 16 concurrent clients, four back-to-back device
+    losses. The supervisor must coalesce the storm into ONE recovery pass
+    — every client sees exactly one ``reconnect`` broadcast — and every
+    stream resumes bitwise."""
+    from repro.ops import run_serve_plan
+
+    scen = (SCENARIOS * 6)[:16]
+    kw = dict(scenarios=scen, backend="numpy-pcg64", chunk_size=8,
+              chunks=10, checkpoint_every=2, slots=16)
+    want = run_serve_plan(ckpt_dir=tmp_path / "ff", **kw)
+    storm = [DeviceLoss(at_step=0)] * 4
+    rep = run_serve_plan(ckpt_dir=tmp_path / "f1", fault=storm,
+                         fault_after=3, **kw)
+    assert rep.recoveries == 1, rep.recoveries   # 4 faults -> ONE pass
+    assert rep.reconnects == 1
+    for client, events in rep.events.items():
+        recs = [e for e in events if e.kind == "reconnect"]
+        assert len(recs) == 1, (client, [e.kind for e in events])
+        assert recs[0].payload["faults_coalesced"] == 4, recs[0].payload
+    _assert_serve_bitwise(rep, want, "serve fault-storm")
+    assert rep.traces_delta == 0
+    assert rep.health is not None and rep.health["state"] == "serving"
+
+
+def test_serve_journal_compaction_never_breaks_replay(tmp_path):
+    """A 2-deep checkpoint ladder under checkpoint_every=1 forces GC —
+    and therefore splice-journal compaction — repeatedly mid-run; a late
+    fault must still recover bitwise from what remains."""
+    from repro.ops import run_serve_plan
+    from repro.serve import SpliceJournal
+
+    # fault_after is in kw for BOTH runs: it also sets how many frames are
+    # consumed before the late attach, which fixes the attach boundary
+    kw = dict(scenarios=SCENARIOS, backend="numpy-pcg64", chunk_size=8,
+              chunks=12, checkpoint_every=1, ckpt_keep=2,
+              late_attach="thin-book", late_after=3, fault_after=8)
+    want = run_serve_plan(ckpt_dir=tmp_path / "ff", **kw)
+    rep = run_serve_plan(ckpt_dir=tmp_path / "f1",
+                         fault=DeviceLoss(at_step=0), **kw)
+    assert rep.recoveries == 1
+    _assert_serve_bitwise(rep, want, "serve compaction")
+    assert rep.traces_delta == 0
+    # compaction really fired: the t=0 admission splice predates every
+    # retained checkpoint and must be gone from the durable journal
+    entries = SpliceJournal(tmp_path / "f1").entries()
+    assert all(e.t > 0 for e in entries), [e.t for e in entries]
+
+
+# ---------------------------------------------------------------------------
+# full process crash (kill -9) + restart: the durable-restart guarantee
+# ---------------------------------------------------------------------------
+
+_CRASH_PHASE1 = textwrap.dedent("""
+    import asyncio, json, os, sys
+    import numpy as np
+    from repro.serve import Gateway, parked_template
+
+    d, out = sys.argv[1], sys.argv[2]
+    tpl = parked_template(slots=3, num_agents=16, num_levels=32,
+                          num_steps=4096)
+
+    async def main():
+        gw = Gateway(tpl, backend="numpy-pcg64", chunk_size=8,
+                     queue_maxsize=64, ckpt_dir=d, checkpoint_every=1)
+        await gw.start(chunks=10)
+        scen = ["baseline", "flash-crash", "high-vol"]
+        clients = [gw.open_session(s, client=f"c{i}")
+                   for i, s in enumerate(scen)]
+        f = open(out, "a")
+        written = 0
+
+        async def pump(cs):
+            nonlocal written
+            while True:
+                fr = await cs.next_frame()
+                if fr is None:
+                    return
+                f.write(json.dumps({
+                    "client": cs.client, "step0": fr.step0,
+                    "mid": np.asarray(fr.mid).tolist(),
+                    "price": np.asarray(fr.price).tolist()}) + "\\n")
+                f.flush()
+                os.fsync(f.fileno())
+                written += 1
+                if written >= 9:
+                    os.kill(os.getpid(), 9)   # kill -9, mid-stream
+
+        await asyncio.gather(*(pump(c) for c in clients))
+
+    asyncio.run(main())
+""")
+
+_CRASH_PHASE2 = textwrap.dedent("""
+    import asyncio, json, sys
+    import numpy as np
+    from repro.serve import Gateway, parked_template
+
+    d, out = sys.argv[1], sys.argv[2]
+    tpl = parked_template(slots=3, num_agents=16, num_levels=32,
+                          num_steps=4096)
+
+    async def main():
+        gw = Gateway(tpl, backend="numpy-pcg64", chunk_size=8,
+                     queue_maxsize=64, ckpt_dir=d, checkpoint_every=1)
+        await gw.start(chunks=12)          # restart path: committed ladder
+        assert gw.resumed_from is not None, "no committed ladder found"
+        assert not gw.restart_errors, gw.restart_errors
+        slots = sorted(gw.scheduler.attached)
+        assert slots == [0, 1, 2], slots   # attachments rebuilt from disk
+        clients = [gw.resume_session(s, client=f"r{s}") for s in slots]
+        rest = await asyncio.gather(*(c.frames(12) for c in clients))
+        with open(out, "w") as f:
+            for slot, frames in zip(slots, rest):
+                for fr in frames:
+                    f.write(json.dumps({
+                        "client": f"c{slot}", "step0": fr.step0,
+                        "mid": np.asarray(fr.mid).tolist(),
+                        "price": np.asarray(fr.price).tolist()}) + "\\n")
+        for c in clients:
+            att = [e for e in c.events if e.kind == "attached"]
+            assert att and att[0].payload.get("resumed") is True, c.events
+        assert gw.traces_delta == 0, gw.traces_delta
+        await gw.stop()
+        print("RESUMED", gw.resumed_from)
+
+    asyncio.run(main())
+""")
+
+
+def test_serve_crash_restart_resumes_bitwise(tmp_path):
+    """kill -9 a streaming gateway process mid-delivery, restart a fresh
+    process over the same ckpt_dir: the newest committed checkpoint is
+    restored, journaled splices replay from disk, clients re-subscribe via
+    resume_session, and every frame either phase produced bitwise-matches
+    a crash-free reference at the same step coordinate."""
+    import json as _json
+
+    from repro.ops import run_serve_plan
+
+    want = run_serve_plan(scenarios=SCENARIOS, backend="numpy-pcg64",
+                          chunk_size=8, chunks=18, checkpoint_every=1,
+                          ckpt_dir=tmp_path / "ref")
+    ref = {}
+    for client, frames in want.frames.items():
+        for fr in frames:
+            ref[(client, fr.step0)] = (np.asarray(fr.mid).tolist(),
+                                       np.asarray(fr.price).tolist())
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    d = str(tmp_path / "crash")
+    out1, out2 = str(tmp_path / "phase1.jsonl"), str(tmp_path / "p2.jsonl")
+    p1 = subprocess.run([sys.executable, "-c", _CRASH_PHASE1, d, out1],
+                        env=env, capture_output=True, text=True, timeout=300)
+    assert p1.returncode == -9, (p1.returncode, p1.stderr[-3000:])
+    p2 = subprocess.run([sys.executable, "-c", _CRASH_PHASE2, d, out2],
+                        env=env, capture_output=True, text=True, timeout=300)
+    assert p2.returncode == 0, p2.stderr[-3000:]
+    resumed = int(p2.stdout.split("RESUMED")[1].split()[0])
+    assert resumed % 8 == 0
+    with open(out1) as f:
+        phase1 = [_json.loads(ln) for ln in f]
+    with open(out2) as f:
+        phase2 = [_json.loads(ln) for ln in f]
+    assert len(phase1) == 9            # the fsync'd pre-crash deliveries
+    matched = 0
+    for r in phase1 + phase2:
+        key = (r["client"], r["step0"])
+        if key not in ref:             # past the reference horizon
+            continue
+        m, p = ref[key]
+        assert r["mid"] == m and r["price"] == p, \
+            f"frame {key} diverged from the crash-free reference"
+        matched += 1
+    assert matched >= 18, matched      # pre-crash + post-restart overlap
+    # phase 2 streamed contiguously from the restored cursor
+    steps2 = sorted({r["step0"] for r in phase2})
+    assert steps2[0] == resumed
+    assert steps2 == list(range(resumed, resumed + 8 * len(steps2), 8))
 
 
 def test_serve_sharded_device_loss_subprocess():

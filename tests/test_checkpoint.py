@@ -7,11 +7,13 @@ shape mismatches, a deep broadcast error inside placement).
 """
 import dataclasses
 import json
+import threading
 
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import (FORMAT_VERSION, CheckpointCorruptError,
+from repro.checkpoint.manager import (COMMIT_NAME, FORMAT_VERSION,
+                                      CheckpointCorruptError,
                                       CheckpointError, CheckpointManager,
                                       CheckpointShapeError,
                                       CheckpointVersionError, session_tree,
@@ -165,3 +167,98 @@ def test_steps_lists_committed_checkpoints(tmp_path):
     # a directory without a manifest is not a committed checkpoint
     (mgr.dir / "step_00000099").mkdir()
     assert mgr.steps() == [4, 8, 12]
+
+
+# ---- the COMMIT-marker protocol ----
+
+def test_uncommitted_dir_skipped_and_restore_refused(tmp_path):
+    """A step directory without the terminal COMMIT marker (a torn write)
+    never appears in the ladder, never wins latest_step() even when the
+    advisory LATEST pointer still names it, and refuses an explicit
+    restore with a typed error."""
+    sess = Engine("numpy").open(dataclasses.replace(CFG, num_steps=40))
+    mgr = CheckpointManager(tmp_path, async_write=False, keep=10)
+    sess.run(4)
+    sess.save_checkpoint(mgr)
+    sess.run(4)
+    sess.save_checkpoint(mgr)
+    (mgr.dir / "step_00000008" / COMMIT_NAME).unlink()
+    assert mgr.steps() == [4]
+    assert mgr.latest_step() == 4    # LATEST is stale -> fallback scan
+    with pytest.raises(CheckpointCorruptError, match=COMMIT_NAME):
+        mgr.restore(8)
+
+
+def test_async_latest_wins_mailbox_skips_and_counts(tmp_path):
+    """While the writer is mid-commit, newer saves replace the queued
+    snapshot (latest wins, counted in .skipped) instead of growing a
+    queue; lag never exceeds one queued + one in-flight snapshot."""
+    import repro.checkpoint.manager as ckpt_mod
+
+    sess = Engine("numpy").open(dataclasses.replace(CFG, num_steps=64))
+    trees = {}
+    for step in (4, 8, 12, 16):
+        sess.run(4)
+        trees[step] = session_tree(sess.snapshot())
+    gate = threading.Event()
+    entered = threading.Event()
+    real = ckpt_mod._barrier
+
+    def blocking_barrier(label):
+        entered.set()
+        gate.wait(30)
+
+    mgr = CheckpointManager(tmp_path, async_write=True, keep=10)
+    ckpt_mod._barrier = blocking_barrier
+    try:
+        assert mgr.save(4, trees[4])
+        assert entered.wait(30)      # writer is stalled inside step 4
+        mgr.save(8, trees[8])        # queued behind the stalled write
+        mgr.save(12, trees[12])      # replaces 8 (skip-and-count)
+        mgr.save(16, trees[16])      # replaces 12
+        assert mgr.pending == 2      # one in flight + one queued, never more
+        gate.set()
+        mgr.wait()
+    finally:
+        ckpt_mod._barrier = real
+        mgr.close()
+    assert mgr.writes == 2 and mgr.skipped == 2 and mgr.pending == 0
+    assert mgr.steps() == [4, 16]    # 8/12 never hit disk
+    assert mgr.error is None and mgr.last_write_seconds > 0.0
+
+
+def test_torn_write_sweep_never_restores_corrupt_state(tmp_path):
+    """Crash at EVERY durable-write offset inside a commit: the reopened
+    ladder restores either the previous committed step or (when the crash
+    landed after the COMMIT rename) the complete new one — bitwise intact
+    in both cases, and the torn directory is never loadable."""
+    from repro.ops import SimulatedCrash, count_write_ops, crash_during_write
+
+    sess = Engine("numpy").open(dataclasses.replace(CFG, num_steps=40))
+    sess.run(4)
+    tree4 = session_tree(sess.snapshot())
+    sess.run(4)
+    tree8 = session_tree(sess.snapshot())
+    ops = count_write_ops(
+        CheckpointManager(tmp_path / "probe", async_write=False), 8, tree8)
+    assert ops >= 15       # open/mid-write/fsync/rename barriers x 4 files
+    for k in range(ops):
+        mgr = CheckpointManager(tmp_path / f"op{k}", async_write=False)
+        mgr.save(4, tree4)
+        with crash_during_write(k), pytest.raises(SimulatedCrash):
+            mgr.save(8, tree8)
+        # "restart": a fresh manager over the same directory
+        mgr2 = CheckpointManager(tmp_path / f"op{k}", async_write=False)
+        latest = mgr2.latest_step()
+        assert latest in (4, 8), (k, latest)
+        want = tree4 if latest == 4 else tree8
+        got = mgr2.restore(latest)
+        for key in ("bid", "ask", "last_price", "prev_mid"):
+            assert np.array_equal(got["state"][key], want["state"][key]), \
+                (k, key)
+        assert str(got["meta"]) == str(want["meta"]), k
+        if latest == 4:
+            assert 8 not in mgr2.steps()
+            if (mgr2.dir / "step_00000008").exists():
+                with pytest.raises(CheckpointCorruptError, match=COMMIT_NAME):
+                    mgr2.restore(8)

@@ -31,8 +31,9 @@ from repro.core.params import EnsembleSpec
 from repro.core.session import Engine
 from repro.ops.metrics import QuantileWindow
 from repro.serve import (POLICIES, DoubleBuffer, Event, Frame, FrameBus,
-                         Gateway, GatewayFull, SlotScheduler, decode,
-                         parked_template)
+                         Gateway, GatewayDegraded, GatewayFull,
+                         GatewayRecovering, SlotScheduler, SpliceEntry,
+                         SpliceJournal, decode, parked_template)
 
 SWAP_BACKENDS = ["numpy", "numpy-pcg64", "jax-scan", "pallas-kinetic"]
 
@@ -347,6 +348,168 @@ def test_gateway_requires_running_and_warm_start():
         with pytest.raises(RuntimeError, match="ckpt_dir"):
             gw.inject_fault(object())
         await gw.stop()
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# durability + supervision (PR 8)
+# ---------------------------------------------------------------------------
+
+def test_splice_journal_roundtrip_compaction_and_torn_tail(tmp_path):
+    """The WAL round-trips specs bitwise, tolerates only a torn trailing
+    line, raises typed corruption for anything else, and compaction drops
+    exactly the entries no restore can ever need."""
+    from repro.serve.journal import JournalCorruptError
+
+    j = SpliceJournal(tmp_path)
+    e0 = SpliceEntry(t=0, slots=(0, 1), labels=("baseline", "high-vol"),
+                     spec=_spec(2))
+    e1 = SpliceEntry(t=16, slots=(2,), labels=(None,),
+                     spec=_spec(1, scenario="thin-book"))
+    j.append(e0)
+    j.append(e1)
+    j.close()
+    back = SpliceJournal(tmp_path).entries()
+    assert [(e.t, e.slots, e.labels) for e in back] == \
+        [(0, (0, 1), ("baseline", "high-vol")), (16, (2,), (None,))]
+    for got, want in zip(back, (e0, e1)):
+        assert got.spec.static_key() == want.spec.static_key()
+        for f, a, b in zip(got.spec.params._fields, got.spec.params,
+                           want.spec.params):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), f
+    # torn trailing line (crash mid-append): tolerated, dropped on read
+    path = tmp_path / "splices.journal"
+    intact = path.read_bytes()
+    path.write_bytes(intact + b'{"t": 24, "slots"')
+    assert [e.t for e in SpliceJournal(tmp_path).entries()] == [0, 16]
+    # damage a NON-trailing line: typed refusal, never partial replay
+    lines = intact.split(b"\n")
+    path.write_bytes(b"\n".join([lines[0][: len(lines[0]) // 2]]
+                                + lines[1:]))
+    with pytest.raises(JournalCorruptError, match="line 1"):
+        SpliceJournal(tmp_path).entries()
+    # compaction drops strictly-older entries, crash-atomically
+    path.write_bytes(intact)
+    j2 = SpliceJournal(tmp_path)
+    assert j2.compact(oldest_retained_step=8) == 1
+    assert [e.t for e in j2.entries()] == [16]
+    assert j2.compact(oldest_retained_step=8) == 0     # idempotent
+    j2.append(e0)                      # appends reopen the new inode
+    assert [e.t for e in j2.entries()] == [16, 0]
+    j2.close()
+
+
+def test_admission_paused_while_recovering(tmp_path):
+    """Typed GatewayRecovering while the supervisor owns the engine."""
+    async def main():
+        gw = Gateway(_tpl(2, num_steps=4096), backend="numpy", chunk_size=8,
+                     ckpt_dir=tmp_path, checkpoint_every=2)
+        await gw.start()
+        gw._state = "recovering"       # as _recover_supervised sets mid-pass
+        with pytest.raises(GatewayRecovering, match="retry"):
+            gw.open_session("baseline")
+        with pytest.raises(GatewayRecovering):
+            gw.resume_session(0)
+        assert gw.health()["ready"] is False
+        gw._state = "serving"
+        cs = gw.open_session("baseline")    # admission resumes
+        assert await cs.frames(1)
+        await gw.stop()
+    asyncio.run(main())
+
+
+def test_exhausted_recovery_degrades_to_read_only(tmp_path):
+    """When every recovery attempt fails the gateway degrades instead of
+    crashing: clients see a ``degraded`` broadcast and a typed close,
+    admission raises GatewayDegraded, health reports 503-shape diagnostics
+    — and stop() still shuts down cleanly."""
+    from repro.ops import DeviceLoss
+
+    async def main():
+        gw = Gateway(_tpl(2, num_steps=4096), backend="numpy", chunk_size=8,
+                     ckpt_dir=tmp_path, checkpoint_every=2,
+                     max_recovery_attempts=2,
+                     recovery_backoff=(0.001, 0.002))
+        await gw.start()
+        a = gw.open_session("baseline", client="a")
+        assert await a.frames(2)
+
+        def recovery_impossible(fault, target):
+            raise RuntimeError("injected: recovery impossible")
+
+        gw._recover = recovery_impossible
+        gw.inject_fault(DeviceLoss(at_step=0))
+        for _ in range(500):
+            if gw.state == "degraded":
+                break
+            await asyncio.sleep(0.01)
+        assert gw.state == "degraded"
+        with pytest.raises(GatewayDegraded, match="degraded"):
+            gw.open_session("baseline")
+        with pytest.raises(GatewayDegraded):
+            gw.resume_session(0)
+        h = gw.health()
+        assert h["ready"] is False and h["state"] == "degraded"
+        assert "recovery impossible" in h["degraded_reason"]
+        assert gw.metrics.counter("recovery_attempts_total") == 2
+        assert gw.metrics.counter("recoveries_total") == 0
+        assert gw.metrics.gauge_value("degraded") == 1
+        while await a.next_frame() is not None:     # drain pre-fault frames
+            pass
+        kinds = [e.kind for e in a.events]
+        assert "degraded" in kinds and kinds[-1] == "closed"
+        closed = [e for e in a.events if e.kind == "closed"][-1]
+        assert closed.payload["reason"] == "degraded"
+        await gw.stop()
+        assert gw.state == "degraded"   # stop() preserves the diagnosis
+    asyncio.run(main())
+
+
+def test_resume_session_reattaches_without_splice(tmp_path):
+    """resume_session re-subscribes to a live slot with no swap: the
+    restart front door (and a cheap reconnect for a dropped consumer)."""
+    async def main():
+        gw = Gateway(_tpl(2, num_steps=4096), backend="numpy", chunk_size=8,
+                     ckpt_dir=tmp_path, checkpoint_every=2)
+        await gw.start()
+        with pytest.raises(KeyError, match="not attached"):
+            gw.resume_session(0)
+        a = gw.open_session("baseline", client="a")
+        assert await a.frames(2)
+        journal_before = gw.health()["journal_entries"]
+        b = gw.resume_session(a.slot, client="b")
+        fb = await b.frames(2)
+        assert fb and all(f.slot == a.slot for f in fb)
+        att = [e for e in b.events if e.kind == "attached"]
+        assert att and att[0].payload["resumed"] is True
+        assert gw.health()["journal_entries"] == journal_before  # no splice
+        await gw.stop()
+    asyncio.run(main())
+
+
+def test_stop_flushes_async_checkpoint_writer(tmp_path):
+    """Shutdown under load drains the async writer: the ladder on disk is
+    fully committed (terminal COMMIT markers, no stray tmp files) and
+    loadable by a fresh manager."""
+    from repro.checkpoint import COMMIT_NAME, CheckpointManager
+
+    async def main():
+        gw = Gateway(_tpl(3, num_steps=4096), backend="numpy", chunk_size=8,
+                     ckpt_dir=tmp_path, checkpoint_every=1)
+        await gw.start()
+        for i, s in enumerate(("baseline", "high-vol")):
+            gw.open_session(s, client=f"c{i}")
+        assert await gw._sessions["c0"].frames(4)
+        await gw.stop()                # clients still attached + streaming
+        h = gw.health()
+        assert h["checkpoint"]["pending"] == 0
+        assert h["checkpoint"]["writes"] >= 1
+        mgr = CheckpointManager(tmp_path, async_write=False)
+        steps = mgr.steps()
+        assert steps and mgr.latest_step() == steps[-1]
+        assert (mgr.dir / f"step_{steps[-1]:08d}" / COMMIT_NAME).exists()
+        assert not list(mgr.dir.glob("*.tmp"))
+        assert mgr.restore(steps[-1]) is not None
     asyncio.run(main())
 
 
