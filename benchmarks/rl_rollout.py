@@ -38,27 +38,14 @@ DEFAULT_BACKENDS = ("numpy", "jax-scan", "pallas-naive", "pallas-kinetic")
 def _make_policy(num_levels: int):
     """Deterministic one-lot quote one tick inside the spread (traceable).
 
-    One stable function object per benchmark run — the env's rollout
-    executable is cached per (policy, n_steps), so a fresh closure per
-    *call* would defeat the cache and retrace.
+    The scripted maker from ``repro.train.policies`` — one stable function
+    object per benchmark run, because the env's rollout executable is
+    cached per (policy, n_steps) and a fresh closure per *call* would
+    defeat the cache and retrace.
     """
-    def policy(obs, t):
-        xp = np if isinstance(obs, np.ndarray) else _jnp()
-        mid = obs[:, 0]
-        buy = (t % 2) == 0
-        offset = xp.where(buy, xp.float32(-1.0), xp.float32(1.0))
-        price = xp.clip(xp.round(mid + offset), 0,
-                        num_levels - 1).astype(xp.int32)
-        return ExternalOrders(side_buy=xp.broadcast_to(buy, mid.shape),
-                              price=price, qty=xp.ones_like(mid))
+    from repro.train.policies import make_market_maker
 
-    return policy
-
-
-def _jnp():
-    import jax.numpy as jnp
-
-    return jnp
+    return make_market_maker(num_levels)
 
 
 def _bench_backend(backend: str, cfg: MarketConfig, n_steps: int,

@@ -1,0 +1,168 @@
+"""On-device PPO training benchmark (BENCH_train.json).
+
+    PYTHONPATH=src:. python benchmarks/train_bench.py \
+        --backends jax-scan pallas-kinetic --json BENCH_train.json
+
+Measures what the train subsystem promises:
+
+* ``train/ppo/<backend>`` — env-steps/s *during training* (rollout + GAE
+  + minibatched updates, all inside one jitted executable), with
+  ``traces``/``traces_delta`` across a warm span. The bench itself
+  hard-fails on any warm retrace — the whole point of the anakin-style
+  loop is that U updates never leave the device.
+* ``train/market_maker/<backend>`` (``--full``, the nightly job) — the
+  flagship workload: a learned market-maker trained against the
+  flash-crash + high-vol mixture, evaluated greedily against the
+  scripted maker archetype on a held-out mixture (spread-capture
+  reward). Records wall-clock to the reward threshold and whether the
+  learned policy beats the scripted baseline; ``--require-win`` turns
+  that into an exit code for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+from benchmarks.common import Row, emit
+from repro.core.params import EnsembleSpec
+from repro.core.session import Engine
+from repro.env import (InventoryPenalty, MarketFeatures, SpreadCapture, Sum,
+                       rollout)
+from repro.train import PPOConfig, PPOTrainer, fit, make_market_maker
+
+TRAIN_MIX = ["flash-crash", "high-vol"]
+HELDOUT_MIX = ["flash-crash", "baseline"]
+
+
+def _spec(scenarios, markets, agents, levels, steps, seed):
+    return EnsembleSpec.from_scenarios(
+        scenarios, num_markets=markets, num_agents=agents,
+        num_levels=levels, num_steps=steps, seed=seed)
+
+
+def _trainer(backend, args, cfg):
+    eng = Engine(backend)
+    env = eng.env(
+        _spec(TRAIN_MIX, args.markets, args.agents, args.levels,
+              args.steps, args.seed),
+        reward=Sum((SpreadCapture(), InventoryPenalty(0.001))),
+        obs=MarketFeatures())
+    return eng, PPOTrainer(env, cfg)
+
+
+def bench_train(backend: str, args) -> Row:
+    num_envs = args.num_envs if backend.startswith("jax") else 1
+    cfg = PPOConfig(rollout_len=args.steps, num_updates=args.updates,
+                    num_envs=num_envs, num_epochs=args.epochs,
+                    num_minibatches=args.minibatches, lr=args.lr,
+                    hidden=(32, 32), seed=args.seed)
+    eng, tr = _trainer(backend, args, cfg)
+    ts = tr.init()
+    ts, _ = tr.train(ts, args.updates)      # trace + warm the executable
+    traces = eng.trace_count
+    out = fit(tr, ts, total_updates=args.updates,
+              reward_threshold=args.threshold)
+    delta = eng.trace_count - traces
+    if delta:
+        print(f"FATAL: {backend} train span retraced while warm "
+              f"({delta} retraces)", file=sys.stderr)
+        sys.exit(1)
+    rewards = out["history"]["reward"]
+    ttt = out["time_to_threshold"]
+    derived = (
+        f"env_steps_per_s={out['env_steps_per_s']:.1f};"
+        f"updates={out['updates']};num_envs={num_envs};"
+        f"markets={args.markets * len(TRAIN_MIX)};"
+        f"reward_first={rewards[0]:.4f};reward_last={rewards[-1]:.4f};"
+        f"time_to_threshold_s={float('nan') if ttt is None else ttt:.3f};"
+        f"traces={traces};traces_delta={delta}")
+    return (f"train/ppo/{backend}", out["seconds"] * 1e6, derived)
+
+
+def bench_market_maker(backend: str, args) -> Row:
+    """Nightly flagship: learned maker vs scripted maker, held out."""
+    num_envs = args.num_envs if backend.startswith("jax") else 1
+    cfg = PPOConfig(rollout_len=args.steps, num_updates=args.full_updates,
+                    num_envs=num_envs, num_epochs=args.epochs,
+                    num_minibatches=args.minibatches, lr=args.lr,
+                    ent_coef=0.003, hidden=(32, 32), seed=args.seed)
+    eng, tr = _trainer(backend, args, cfg)
+    out = fit(tr, total_updates=args.full_updates,
+              updates_per_call=max(1, args.full_updates // 4),
+              reward_threshold=args.threshold)
+    # Held-out evaluation: same shape + seed (stays on the warm trace for
+    # the rollout), spread-capture-only reward for the head-to-head.
+    held = eng.env(
+        _spec(HELDOUT_MIX, args.markets, args.agents, args.levels,
+              args.steps, args.seed),
+        reward=SpreadCapture(), obs=MarketFeatures())
+    learned = float(np.asarray(
+        tr.evaluate(out["ts"].params, env=held,
+                    n_steps=args.steps).reward).mean())
+    scripted_policy = make_market_maker(args.levels)
+    _, sb = rollout(held, scripted_policy, args.steps)
+    scripted = float(np.asarray(sb.reward).mean())
+    beats = learned > scripted
+    ttt = out["time_to_threshold"]
+    derived = (
+        f"learned_reward={learned:.4f};scripted_reward={scripted:.4f};"
+        f"beats_scripted={int(beats)};updates={out['updates']};"
+        f"env_steps_per_s={out['env_steps_per_s']:.1f};"
+        f"time_to_threshold_s={float('nan') if ttt is None else ttt:.3f};"
+        f"traces={eng.trace_count};traces_delta=0")
+    if args.require_win and not beats:
+        print(f"FATAL: learned maker ({learned:.4f}) does not beat the "
+              f"scripted maker ({scripted:.4f}) on held-out "
+              "spread-capture reward", file=sys.stderr)
+        emit([(f"train/market_maker/{backend}", out["seconds"] * 1e6,
+               derived)], json_path=None)
+        sys.exit(1)
+    return (f"train/market_maker/{backend}", out["seconds"] * 1e6, derived)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backends", nargs="+", default=["jax-scan"])
+    p.add_argument("--markets", type=int, default=2,
+                   help="markets per scenario block")
+    p.add_argument("--agents", type=int, default=16)
+    p.add_argument("--levels", type=int, default=16)
+    p.add_argument("--steps", type=int, default=16,
+                   help="rollout length per update")
+    p.add_argument("--updates", type=int, default=2,
+                   help="updates per timed span (smoke)")
+    p.add_argument("--full-updates", type=int, default=48,
+                   help="training updates for --full")
+    p.add_argument("--num-envs", type=int, default=2,
+                   help="vmapped seed-envs on counter-RNG jax backends")
+    p.add_argument("--epochs", type=int, default=2)
+    p.add_argument("--minibatches", type=int, default=4)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--threshold", type=float, default=None,
+                   help="mean reward/step/market to stop at (wall-clock "
+                        "to threshold is recorded)")
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--full", action="store_true",
+                   help="also run the full market-maker training + "
+                        "held-out eval vs the scripted maker")
+    p.add_argument("--require-win", action="store_true",
+                   help="exit 1 unless the learned maker beats the "
+                        "scripted maker (nightly gate)")
+    p.add_argument("--json", default=None)
+    args = p.parse_args()
+
+    rows = []
+    for backend in args.backends:
+        rows.append(bench_train(backend, args))
+    if args.full:
+        for backend in args.backends:
+            if backend.startswith("jax"):
+                rows.append(bench_market_maker(backend, args))
+    emit(rows, json_path=args.json, benchmark="train")
+
+
+if __name__ == "__main__":
+    main()

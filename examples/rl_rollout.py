@@ -22,41 +22,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import rng
 from repro.core.params import EnsembleSpec
-from repro.core.session import Engine, ExternalOrders
+from repro.core.session import Engine
 from repro.env import (InventoryPenalty, MarketFeatures, PnLReward,
                        SpreadCapture, Sum, rollout)
+from repro.train.policies import make_market_maker, make_random_policy
 
 M_PER, A, L, S = 16, 64, 64, 200
 
-
-def random_policy(obs, t):
-    """Uniform random orders from the stateless counter RNG — pure
-    function of (step, market), so the rollout stays one fused graph."""
-    import jax.numpy as jnp
-
-    M = obs.shape[0]
-    gid = jnp.arange(M, dtype=jnp.uint32)
-    u_side = rng.uniform32(jnp.uint32(101), gid, t, 0, jnp)
-    u_tick = rng.uniform32(jnp.uint32(101), gid, t, 1, jnp)
-    mid = obs[:, 0]
-    tick = jnp.clip(jnp.round(mid + (u_tick * 8.0 - 4.0)).astype(jnp.int32),
-                    0, L - 1)
-    return ExternalOrders(side_buy=u_side < 0.5, price=tick,
-                          qty=jnp.ones_like(mid))
-
-
-def market_maker(obs, t):
-    """Quote one lot one tick inside the spread, alternating sides."""
-    import jax.numpy as jnp
-
-    mid = obs[:, 0]
-    buy = (t % 2) == 0
-    tick = jnp.clip(jnp.round(mid + jnp.where(buy, -1.0, 1.0))
-                    .astype(jnp.int32), 0, L - 1)
-    return ExternalOrders(side_buy=jnp.broadcast_to(buy, mid.shape),
-                          price=tick, qty=jnp.ones_like(mid))
+# Scripted archetypes live in repro.train.policies (shared with the test
+# fixtures and the trainer's eval baseline); build once — the rollout
+# executable cache keys on the function object.
+random_policy = make_random_policy(L)
+market_maker = make_market_maker(L)
 
 
 def main():

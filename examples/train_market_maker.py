@@ -1,0 +1,98 @@
+"""Train a market-maker on device, end to end (repro.train).
+
+    PYTHONPATH=src python examples/train_market_maker.py
+
+The flagship RL workload: a learned market-maker (small actor-critic MLP
+over a discrete quote grid) trained with PPO against a flash-crash +
+high-vol scenario mixture, rewarded for spread capture and penalized for
+inventory. The entire update — rollout collection, GAE, every minibatched
+gradient step — compiles into ONE jitted executable: a training span of
+U updates makes zero per-step and zero per-update host transfers, which
+is the engine's device-residency thesis extended to the gradient step.
+
+The run demonstrates the full lifecycle:
+
+  1. train in warm spans (``Engine.trace_count`` stays flat after the
+     first call — U more updates never retrace);
+  2. checkpoint the trainer state (policy + Adam moments + PRNG key +
+     env states) through the crash-consistent ``CheckpointManager``,
+     restore it, and bitwise-continue the learning curve;
+  3. evaluate the learned policy greedily against the scripted maker
+     archetype on a held-out mixture it never trained on.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.params import EnsembleSpec
+from repro.core.session import Engine
+from repro.env import (InventoryPenalty, MarketFeatures, SpreadCapture, Sum,
+                       rollout)
+from repro.train import (PPOConfig, PPOTrainer, fit, make_market_maker,
+                         restore_train_checkpoint, save_train_checkpoint)
+
+M_PER, A, L, T = 4, 32, 32, 32
+
+
+def mixture(scenarios):
+    return EnsembleSpec.from_scenarios(
+        scenarios, num_markets=M_PER, num_agents=A, num_levels=L,
+        num_steps=T, seed=11)
+
+
+def main():
+    eng = Engine("jax-scan")
+    env = eng.env(mixture(["flash-crash", "high-vol"]),
+                  reward=Sum((SpreadCapture(), InventoryPenalty(0.001))),
+                  obs=MarketFeatures())
+    cfg = PPOConfig(rollout_len=T, num_updates=8, num_envs=4,
+                    num_epochs=2, num_minibatches=8, lr=1e-3,
+                    ent_coef=0.003, seed=0)
+    trainer = PPOTrainer(env, cfg)
+    print(f"PPO over {env.spec}: {cfg.num_envs} seed-envs × "
+          f"{env.spec.num_markets} markets × {T} steps per update")
+
+    # --- 1. warm spans: one executable, zero retraces after the first ---
+    ts = trainer.init()
+    ts, _ = trainer.train(ts, 8)
+    warm = eng.trace_count
+    out = fit(trainer, ts, total_updates=16, updates_per_call=8)
+    ts = out["ts"]
+    r = out["history"]["reward"]
+    assert eng.trace_count == warm, eng.trace_count
+    print(f"  24 updates in 3 jitted spans — trace_count still {warm}, "
+          f"{out['env_steps_per_s']:,.0f} env-steps/s while training")
+    print(f"  reward/step/market: {r[0]:+.4f} (first) -> "
+          f"{r[-1]:+.4f} (last)")
+
+    # --- 2. checkpoint / restore: bitwise continuation ---
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, async_write=False)
+        save_train_checkpoint(mgr, trainer, ts)
+        restored = restore_train_checkpoint(mgr, trainer)
+        ts_a, m_a = trainer.train(ts, 4)
+        ts_b, m_b = trainer.train(restored, 4)
+        assert np.array_equal(np.asarray(m_a["reward"]),
+                              np.asarray(m_b["reward"]))
+    ts = ts_a
+    print("  checkpoint -> restore -> 4 more updates: learning curve "
+          "continues bitwise")
+
+    # --- 3. held-out eval vs the scripted maker archetype ---
+    held = eng.env(mixture(["flash-crash", "baseline"]),
+                   reward=SpreadCapture(), obs=MarketFeatures())
+    learned = float(np.asarray(
+        trainer.evaluate(ts.params, env=held, n_steps=T).reward).mean())
+    _, sb = rollout(held, make_market_maker(L), T)
+    scripted = float(np.asarray(sb.reward).mean())
+    verdict = "beats" if learned > scripted else "does not beat"
+    print(f"  held-out spread capture: learned {learned:+.4f} {verdict} "
+          f"scripted {scripted:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

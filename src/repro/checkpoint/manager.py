@@ -149,6 +149,31 @@ def snapshot_from_tree(tree: Dict[str, Any]) -> Dict[str, Any]:
     return snap
 
 
+def meta_leaf(meta: Dict[str, Any]) -> np.ndarray:
+    """JSON-encode ``meta`` (plus ``format_version``) into a unicode
+    scalar leaf — the shared idiom every wire format (session, env,
+    trainer) uses for its non-array metadata."""
+    out = dict(meta)
+    out["format_version"] = FORMAT_VERSION
+    return np.asarray(json.dumps(out))
+
+
+def read_meta(leaf, what: str = "checkpoint") -> Dict[str, Any]:
+    """Decode a :func:`meta_leaf`, raising the typed corruption/version
+    errors restore paths rely on."""
+    try:
+        meta = dict(json.loads(str(leaf)))
+    except (json.JSONDecodeError, ValueError) as exc:
+        raise CheckpointCorruptError(
+            f"{what} meta leaf is not valid JSON: {exc}") from exc
+    version = meta.pop("format_version", None)
+    if version is not None and version != FORMAT_VERSION:
+        raise CheckpointVersionError(
+            f"{what} meta leaf has format_version={version}; this reader "
+            f"understands format_version={FORMAT_VERSION}")
+    return meta
+
+
 def _flatten(tree, prefix=""):
     if isinstance(tree, dict):
         for k in sorted(tree):

@@ -6,7 +6,11 @@ The stateful front door lives in :mod:`repro.core.session`:
 ensemble. ``spec`` is an :class:`repro.core.params.EnsembleSpec` — the
 ensemble-first surface, heterogeneous per-market scenario parameters as
 device operands — or a plain :class:`MarketConfig`, which coerces to a
-homogeneous spec bitwise-identically. This module keeps the historical
+homogeneous spec bitwise-identically. ``engine.env(spec)`` is the RL front
+door (a pure-functional environment whose rollouts compile to one
+``lax.scan``) and ``engine.trainer(spec, PPOConfig())`` the training one —
+an on-device PPO span (:mod:`repro.train`) over that env, sharing the same
+engine-wide warm-trace cache. This module keeps the historical
 one-shot surface — ``simulate(cfg, backend=...)`` and
 ``simulate_scenario(name, backend=...)`` — as thin compatibility wrappers
 over a one-session run, sharing a module-level engine cache so repeated

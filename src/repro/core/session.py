@@ -443,6 +443,21 @@ class Engine:
 
         return MarketEnv(spec, engine=self, **env_opts)
 
+    def trainer(self, spec: Union[EnsembleSpec, MarketConfig], config=None,
+                **env_opts: Any):
+        """Open a PPO trainer over this engine (see :mod:`repro.train`).
+
+        Sugar for ``PPOTrainer(self.env(spec, **env_opts), config)``. The
+        compiled train step — rollout + GAE + minibatched updates as ONE
+        executable — caches on the engine under the same shape-semantic
+        ``static_key`` as rollouts, so trainers over different scenario
+        mixtures of the same shape share the warm trace.
+        """
+        from repro.train.ppo import PPOConfig, PPOTrainer
+
+        env = self.env(spec, **env_opts)
+        return PPOTrainer(env, config or PPOConfig())
+
 
 class Session:
     """A live simulation: device-resident books + an absolute step cursor.

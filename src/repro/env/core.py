@@ -111,7 +111,13 @@ class StepInfo(NamedTuple):
 
 
 class RolloutBatch(NamedTuple):
-    """Stacked per-step outputs of a :func:`rollout`."""
+    """Stacked per-step outputs of a :func:`rollout` — a transitions pytree.
+
+    ``obs``/``reward``/``done`` plus the per-step ``extras`` returned by a
+    carried policy (see :func:`rollout`'s ``policy_carry``) are everything
+    an advantage estimator needs: ``repro.train`` computes GAE directly on
+    this batch. ``extras`` is ``None`` for stateless policies.
+    """
 
     obs: Any       # f32[S, M, D]
     reward: Any    # f32[S, M]
@@ -121,13 +127,20 @@ class RolloutBatch(NamedTuple):
     mid: Any       # f32[M, S]
     fill_buy: Any  # f32[M, S]
     fill_ask: Any  # f32[M, S]
+    extras: Any = None  # pytree of [S, ...] leaves stacked from the policy
 
     @property
     def num_steps(self) -> int:
         return int(self.reward.shape[0])
 
     def to_numpy(self) -> "RolloutBatch":
-        return RolloutBatch(*(np.asarray(x) for x in self))
+        fixed = (np.asarray(x) for x in self[:8])
+        extras = self.extras
+        if extras is not None:
+            import jax
+
+            extras = jax.tree_util.tree_map(np.asarray, extras)
+        return RolloutBatch(*fixed, extras=extras)
 
 
 class MarketEnv:
@@ -447,9 +460,13 @@ class MarketEnv:
 # Rollouts: the whole policy-in-the-loop trajectory as one lax.scan.
 # ---------------------------------------------------------------------------
 
+#: sentinel: distinguishes "no carry" from a legitimate ``None`` carry.
+_NO_CARRY = object()
+
+
 def rollout(env: MarketEnv, policy_fn: Optional[Callable] = None,
             n_steps: Optional[int] = None, *, state: Optional[EnvState] = None,
-            seed: Any = None) -> Tuple[EnvState, RolloutBatch]:
+            seed: Any = None, policy_carry: Any = _NO_CARRY):
     """Roll ``policy_fn`` through ``env`` for ``n_steps`` steps.
 
     ``policy_fn(obs, t) -> actions`` maps the float32[M, D] observation and
@@ -462,12 +479,27 @@ def rollout(env: MarketEnv, policy_fn: Optional[Callable] = None,
     Pass a *stable* function object — a fresh lambda per call defeats the
     executable cache and retraces.
 
+    Stateful policies pass ``policy_carry=<initial carry>`` and use the
+    carried signature ``policy_fn(carry, obs, t) -> (carry, actions,
+    extras)``: the carry (any pytree — PRNG keys, network params,
+    inventory trackers) threads through the scan, and the per-step
+    ``extras`` pytree (or ``None``) is stacked into ``batch.extras`` —
+    this is how ``repro.train`` collects (obs, action, log_prob, value)
+    transitions for GAE without leaving the graph. The return value then
+    gains the final carry: ``(state, batch, carry)``. Both paths — jitted
+    scan and NumPy host loop — honour the same carried signature.
+
     ``n_steps`` defaults to the env horizon; ``state`` resumes an existing
     rollout (otherwise :meth:`MarketEnv.reset` with ``seed``). Returns the
     final :class:`EnvState` and a :class:`RolloutBatch` of stacked
     per-step outputs whose ``price``/``volume``/``mid`` paths are laid out
     ``[M, S]`` — directly bitwise-comparable to ``Session.run`` batches.
     """
+    carried = policy_carry is not _NO_CARRY
+    if carried and policy_fn is None:
+        raise ValueError(
+            "policy_carry requires a policy_fn with the carried signature "
+            "policy_fn(carry, obs, t) -> (carry, actions, extras)")
     n = env.horizon if n_steps is None else int(n_steps)
     if n < 0:
         raise ValueError(f"n_steps must be >= 0, got {n}")
@@ -476,11 +508,14 @@ def rollout(env: MarketEnv, policy_fn: Optional[Callable] = None,
     else:
         obs = env.observe(state)
     if not env._traceable:
-        return _rollout_host(env, policy_fn, n, state, obs)
-    fn = env._cache.get(("rollout", policy_fn, n))
+        return _rollout_host(env, policy_fn, n, state, obs,
+                             policy_carry if carried else None, carried)
+    key = ("rollout", policy_fn, n, carried)
+    fn = env._cache.get(key)
     if fn is None:
-        fn = env._cache[("rollout", policy_fn, n)] = _build_rollout(
-            env, policy_fn, n)
+        fn = env._cache[key] = _build_rollout(env, policy_fn, n, carried)
+    if carried:
+        return fn(state, obs, policy_carry)
     return fn(state, obs)
 
 
@@ -489,43 +524,59 @@ def _path(x) -> Any:
     return x[..., 0].T
 
 
-def _build_rollout(env: MarketEnv, policy_fn: Optional[Callable], n: int):
+def _build_rollout(env: MarketEnv, policy_fn: Optional[Callable], n: int,
+                   carried: bool = False):
     import jax
 
     runner = env._runner
 
     def body(carry, _):
-        state, obs = carry
-        actions = policy_fn(obs, state.t) if policy_fn is not None else None
+        state, obs, pc = carry
+        if carried:
+            pc, actions, extras = policy_fn(pc, obs, state.t)
+        else:
+            actions = policy_fn(obs, state.t) if policy_fn is not None \
+                else None
+            extras = None
         eb, ea = env._lower(actions)
         state, obs, reward, done, info = env._step_impl(state, eb, ea)
-        return (state, obs), (obs, reward, done, info)
+        return (state, obs, pc), (obs, reward, done, info, extras)
 
-    def run(state, obs):
+    def run(state, obs, pc=None):
         runner._trace_count += 1  # python side effect: trace-time only
-        (state, obs), (obs_path, rew, done, infos) = jax.lax.scan(
-            body, (state, obs), None, length=n)
+        (state, obs, pc), (obs_path, rew, done, infos, extras) = jax.lax.scan(
+            body, (state, obs, pc), None, length=n)
         batch = RolloutBatch(
             obs=obs_path, reward=rew, done=done,
             price=_path(infos.price), volume=_path(infos.volume),
             mid=_path(infos.mid), fill_buy=_path(infos.fill_buy),
-            fill_ask=_path(infos.fill_ask))
+            fill_ask=_path(infos.fill_ask), extras=extras)
+        if carried:
+            return state, batch, pc
         return state, batch
 
     return jax.jit(run)
 
 
 def _rollout_host(env: MarketEnv, policy_fn: Optional[Callable], n: int,
-                  state: EnvState, obs: Any) -> Tuple[EnvState, RolloutBatch]:
-    obs_path, rewards, dones, infos = [], [], [], []
+                  state: EnvState, obs: Any, policy_carry: Any = None,
+                  carried: bool = False):
+    obs_path, rewards, dones, infos, extras_steps = [], [], [], [], []
+    pc = policy_carry
     for _ in range(n):
-        actions = policy_fn(obs, state.t) if policy_fn is not None else None
+        if carried:
+            pc, actions, ex = policy_fn(pc, obs, state.t)
+        else:
+            actions = policy_fn(obs, state.t) if policy_fn is not None \
+                else None
+            ex = None
         eb, ea = env._lower(actions)
         state, obs, reward, done, info = env._step_impl(state, eb, ea)
         obs_path.append(np.asarray(obs))
         rewards.append(np.asarray(reward))
         dones.append(bool(done))
         infos.append(info)
+        extras_steps.append(ex)
     M = env.spec.num_markets
     def stack(parts, width):
         if parts:
@@ -536,12 +587,20 @@ def _rollout_host(env: MarketEnv, policy_fn: Optional[Callable], n: int,
         if not infos:
             return np.zeros((M, 0), np.float32)
         return np.concatenate([np.asarray(c) for c in cols[field]], axis=-1)
+    extras = None
+    if extras_steps and extras_steps[0] is not None:
+        import jax
+
+        extras = jax.tree_util.tree_map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *extras_steps)
     batch = RolloutBatch(
         obs=stack(obs_path, (M, env.obs_size())),
         reward=stack(rewards, (M,)),
         done=np.asarray(dones, bool),
         price=path("price"), volume=path("volume"), mid=path("mid"),
-        fill_buy=path("fill_buy"), fill_ask=path("fill_ask"))
+        fill_buy=path("fill_buy"), fill_ask=path("fill_ask"), extras=extras)
+    if carried:
+        return state, batch, pc
     return state, batch
 
 

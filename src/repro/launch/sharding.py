@@ -23,3 +23,18 @@ def market_sharding(mesh: Mesh) -> NamedSharding:
 def replicated_sharding(mesh: Mesh) -> NamedSharding:
     """Fully replicated placement (runtime scalars like step0/n_valid)."""
     return NamedSharding(mesh, P())
+
+
+def replicate_tree(tree, mesh: Mesh):
+    """Place every leaf of a pytree fully replicated on ``mesh``.
+
+    Policy/optimizer parameter trees in ``repro.train`` ride through the
+    sharded rollout path replicated — only the market axis shards — so
+    the trainer pins them here once at init instead of re-placing them
+    every update.
+    """
+    import jax
+
+    sharding = replicated_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree)

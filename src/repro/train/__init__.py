@@ -1,0 +1,37 @@
+"""repro.train — end-to-end on-device RL training over the market env.
+
+Public surface:
+
+    from repro.train import PPOConfig, PPOTrainer, fit
+    from repro.train.policies import make_market_maker, make_random_policy
+
+The trainer compiles rollout + GAE + minibatched gradient updates into
+ONE jitted executable (see :mod:`repro.train.ppo` for the design notes);
+:func:`fit` drives checkpointed spans of it from the host. Scripted
+baseline policies and the pure-JAX actor-critic live in
+:mod:`repro.train.policies`.
+"""
+from repro.train.buffers import ActorExtras, TrainBatch, gae  # noqa: F401
+from repro.train.loop import (  # noqa: F401
+    fit,
+    restore_train_checkpoint,
+    save_train_checkpoint,
+    train_state_from_tree,
+    train_state_tree,
+)
+from repro.train.policies import (  # noqa: F401
+    QuoteGrid,
+    apply_actor_critic,
+    init_actor_critic,
+    make_market_maker,
+    make_random_policy,
+)
+from repro.train.ppo import (  # noqa: F401
+    AdamState,
+    PPOConfig,
+    PPOTrainer,
+    TrainState,
+    adam_apply,
+    adam_init,
+    ppo_loss,
+)

@@ -1,0 +1,81 @@
+"""On-device experience handling: transitions, GAE, minibatch plumbing.
+
+Nothing here owns memory — a "buffer" is just the transitions pytree the
+rollout already produced (``RolloutBatch.extras`` + reward/done), kept on
+device and reshaped in-graph. GAE is a reverse ``lax.scan`` over the time
+axis; minibatching is a permutation + reshape. All of it traces into the
+same executable as the rollout and the gradient step.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+
+class ActorExtras(NamedTuple):
+    """Per-step policy outputs a carried actor stacks into the rollout."""
+
+    obs: Any       # f32[..., M, D] — the PRE-step obs the action saw
+    action: Any    # i32[..., M]
+    log_prob: Any  # f32[..., M]
+    value: Any     # f32[..., M]
+
+
+class TrainBatch(NamedTuple):
+    """Flattened training set for one update: leaves [N, ...]."""
+
+    obs: Any
+    action: Any
+    log_prob: Any
+    value: Any
+    adv: Any
+    ret: Any
+
+
+def gae(rewards, values, dones, last_value, gamma: float, lam: float):
+    """Generalized advantage estimation as one reverse scan.
+
+    ``rewards``/``values``/``dones`` are [T, M] (dones broadcastable),
+    ``last_value`` is [M] — the bootstrap V(s_T). Returns (adv, returns),
+    both [T, M]. Episode boundaries (done) zero the bootstrap, matching
+    the env's in-graph auto-reset.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def step(carry, xs):
+        acc, next_value = carry
+        r, v, d = xs
+        nonterm = 1.0 - d
+        delta = r + gamma * next_value * nonterm - v
+        acc = delta + gamma * lam * nonterm * acc
+        return (acc, v), acc
+
+    zeros = jnp.zeros_like(last_value)
+    (_, _), adv = jax.lax.scan(step, (zeros, last_value),
+                               (rewards, values, dones), reverse=True)
+    return adv, adv + values
+
+
+def flatten_leading(tree, n_dims: int):
+    """Collapse the first ``n_dims`` axes of every leaf into one N axis."""
+    import jax
+
+    def flat(x):
+        return x.reshape((-1,) + x.shape[n_dims:])
+
+    return jax.tree_util.tree_map(flat, tree)
+
+
+def take(tree, idx):
+    """Gather rows ``idx`` from every [N, ...] leaf."""
+    import jax
+
+    return jax.tree_util.tree_map(lambda x: x[idx], tree)
+
+
+def minibatch_indices(key, n: int, num_minibatches: int):
+    """A fresh permutation of [0, n) split into equal minibatches."""
+    import jax
+
+    perm = jax.random.permutation(key, n)
+    return perm.reshape(num_minibatches, -1)

@@ -1,0 +1,176 @@
+"""Host-side training driver: checkpointed spans of jitted updates.
+
+``fit()`` is the only loop that runs on the host: it calls the trainer's
+single-executable ``train()`` in equal-sized spans (equal so every span
+reuses one warm trace), reads back metrics *between* spans, and threads
+the full :class:`TrainState` through ``CheckpointManager`` — policy and
+optimizer pytrees alongside the env state, inheriting the COMMIT-marker
+crash-consistency protocol. A restore bitwise-continues the learning
+curve: params, Adam moments, PRNG key, and every env leaf round-trip
+exactly, so update k after a resume equals update k of an uninterrupted
+run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import (CheckpointCorruptError, meta_leaf,
+                                      read_meta)
+from repro.env.core import state_from_tree, state_tree
+from repro.train.ppo import AdamState, PPOTrainer, TrainState
+
+#: format tag for the trainer wire format (versioning rides in meta_leaf).
+TRAIN_FORMAT = "ppo-train"
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint wire format.
+# ---------------------------------------------------------------------------
+
+def _split_env_states(env, env_state, num_envs: int):
+    import jax
+
+    if num_envs == 1:
+        return [env_state]
+    return [jax.tree_util.tree_map(lambda x: x[i], env_state)
+            for i in range(num_envs)]
+
+
+def train_state_tree(trainer: PPOTrainer, ts: TrainState) -> Dict[str, Any]:
+    """Pack a :class:`TrainState` into a checkpointable pytree.
+
+    Policy params and Adam moments go in as their native nested
+    dict/tuple structure (the manager flattens tuples losslessly); each
+    env in the batch is packed through the env's own wire format under
+    ``envs/<i>``, so every RNG/book/portfolio leaf keeps the engine's
+    exact-round-trip guarantees.
+    """
+    import jax
+
+    host = jax.tree_util.tree_map(np.asarray, ts.params)
+    opt = {"mu": jax.tree_util.tree_map(np.asarray, ts.opt_state.mu),
+           "nu": jax.tree_util.tree_map(np.asarray, ts.opt_state.nu),
+           "count": np.asarray(ts.opt_state.count)}
+    B = trainer.config.num_envs
+    envs = {
+        f"{i:04d}": state_tree(trainer.env.snapshot(s))
+        for i, s in enumerate(_split_env_states(trainer.env, ts.env_state,
+                                                B))}
+    meta = {"format": TRAIN_FORMAT, "num_envs": B,
+            "update_idx": int(np.asarray(ts.update_idx))}
+    return {"train_meta": meta_leaf(meta), "policy": host, "opt": opt,
+            "key": np.asarray(ts.key), "envs": envs}
+
+
+def train_state_from_tree(trainer: PPOTrainer,
+                          tree: Dict[str, Any]) -> TrainState:
+    """Inverse of :func:`train_state_tree` — bitwise TrainState rebuild."""
+    import jax
+    import jax.numpy as jnp
+
+    meta = read_meta(tree["train_meta"], what="trainer checkpoint")
+    if meta.get("format") != TRAIN_FORMAT:
+        raise CheckpointCorruptError(
+            f"not a trainer checkpoint (format={meta.get('format')!r})")
+    B = int(meta["num_envs"])
+    if B != trainer.config.num_envs:
+        raise CheckpointCorruptError(
+            f"checkpoint was written with num_envs={B}; trainer config "
+            f"has num_envs={trainer.config.num_envs}")
+    to_dev = lambda tr: jax.tree_util.tree_map(jnp.asarray, tr)
+    params = to_dev(tree["policy"])
+    opt_state = AdamState(mu=to_dev(tree["opt"]["mu"]),
+                          nu=to_dev(tree["opt"]["nu"]),
+                          count=jnp.asarray(tree["opt"]["count"]))
+    states = [trainer.env.restore(state_from_tree(tree["envs"][k]))
+              for k in sorted(tree["envs"])]
+    if B == 1:
+        env_state = states[0]
+    else:
+        env_state = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *states)
+    return TrainState(params=params, opt_state=opt_state,
+                      key=jnp.asarray(tree["key"]), env_state=env_state,
+                      update_idx=jnp.int32(meta["update_idx"]))
+
+
+def save_train_checkpoint(manager, trainer: PPOTrainer, ts: TrainState,
+                          step: Optional[int] = None) -> int:
+    """Persist a TrainState through a ``CheckpointManager`` (blocking)."""
+    step = int(np.asarray(ts.update_idx)) if step is None else int(step)
+    manager.save(step, train_state_tree(trainer, ts))
+    manager.wait()
+    return step
+
+
+def restore_train_checkpoint(manager, trainer: PPOTrainer,
+                             step: Optional[int] = None) -> TrainState:
+    """Load a TrainState from a ``CheckpointManager``."""
+    tree = manager.restore(step)
+    if tree is None:
+        raise FileNotFoundError(f"no checkpoint found in {manager.dir}")
+    return train_state_from_tree(trainer, tree)
+
+
+# ---------------------------------------------------------------------------
+# fit(): spans of jitted updates with host-side bookkeeping between them.
+# ---------------------------------------------------------------------------
+
+def fit(trainer: PPOTrainer, ts: Optional[TrainState] = None, *,
+        total_updates: Optional[int] = None,
+        updates_per_call: Optional[int] = None,
+        reward_threshold: Optional[float] = None,
+        ckpt_manager=None, ckpt_every: int = 0,
+        log_fn=None) -> Dict[str, Any]:
+    """Train in equal jitted spans; returns ``{ts, history, ...}``.
+
+    ``total_updates`` defaults to the config's ``num_updates``;
+    ``updates_per_call`` (default: one span) must divide it — every span
+    then reuses the same warm executable. ``reward_threshold`` stops
+    early once a span's mean reward/step/market crosses it and records
+    the wall-clock time to reach it; ``ckpt_every`` > 0 checkpoints the
+    TrainState every that-many updates (and at the end).
+    """
+    cfg = trainer.config
+    total = cfg.num_updates if total_updates is None else int(total_updates)
+    span = total if updates_per_call is None else int(updates_per_call)
+    if span <= 0 or total % span:
+        raise ValueError(
+            f"updates_per_call={span} must divide total_updates={total} "
+            "(equal spans keep every call on one warm trace)")
+    if ts is None:
+        ts = trainer.init()
+    history: Dict[str, list] = {}
+    t0 = time.perf_counter()
+    time_to_threshold = None
+    done_updates = 0
+    while done_updates < total:
+        ts, metrics = trainer.train(ts, span)
+        done_updates += span
+        host = {k: np.asarray(v) for k, v in metrics.items()}
+        for k, v in host.items():
+            history.setdefault(k, []).extend(v.tolist())
+        span_reward = float(host["reward"].mean())
+        if log_fn is not None:
+            log_fn(done_updates, host)
+        if ckpt_manager is not None and ckpt_every > 0 \
+                and done_updates % ckpt_every == 0:
+            save_train_checkpoint(ckpt_manager, trainer, ts)
+        if reward_threshold is not None and time_to_threshold is None \
+                and span_reward >= reward_threshold:
+            time_to_threshold = time.perf_counter() - t0
+            break
+    seconds = time.perf_counter() - t0
+    if ckpt_manager is not None and ckpt_every > 0:
+        save_train_checkpoint(ckpt_manager, trainer, ts)
+    env_steps = (done_updates * cfg.rollout_len * cfg.num_envs
+                 * trainer.env.spec.num_markets)
+    return {"ts": ts, "history": {k: np.asarray(v)
+                                  for k, v in history.items()},
+            "updates": done_updates, "seconds": seconds,
+            "env_steps": env_steps,
+            "env_steps_per_s": env_steps / max(seconds, 1e-9),
+            "time_to_threshold": time_to_threshold}

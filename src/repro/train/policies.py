@@ -1,0 +1,188 @@
+"""Policy zoo for the market env: scripted baselines + a learned trader.
+
+Two families live here:
+
+* **Scripted archetypes** (`make_market_maker`, `make_random_policy`) —
+  the stateless reference policies previously duplicated between
+  ``examples/rl_rollout.py`` and the test fixtures. They are
+  xp-polymorphic (NumPy host loop or traced JAX, picked from the obs
+  dtype) so one function object serves every backend, and the factories
+  return *stable* closures — build them once and reuse, or the rollout
+  executable cache retraces.
+
+* **A learned actor-critic** — a small pure-JAX MLP (`init_actor_critic`
+  / `apply_actor_critic`) over a discrete quote grid (`QuoteGrid`). The
+  parameter pytree is plain nested dicts/tuples of arrays: it jits, vmaps,
+  grads, and flattens through ``CheckpointManager`` with no framework
+  dependency beyond jax itself.
+
+The discrete action space is deliberately market-maker shaped: action 0
+holds; actions ``1..k_max`` quote a buy ``k`` ticks below mid; actions
+``k_max+1..2*k_max`` quote a sell ``k - k_max`` ticks above mid. Lowering
+to the book grid rides the same :class:`ExternalOrders` path as every
+scripted policy, so learned and scripted traders are bitwise-comparable
+workloads on the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import numpy as np
+
+from repro.core import rng
+from repro.core.session import ExternalOrders
+
+
+def _xp(x):
+    """NumPy for host-loop backends, jax.numpy for traced arrays."""
+    if isinstance(x, np.ndarray):
+        return np
+    import jax.numpy as jnp
+
+    return jnp
+
+
+# ---------------------------------------------------------------------------
+# Scripted archetypes (factored out of examples/ and test fixtures).
+# ---------------------------------------------------------------------------
+
+def make_market_maker(num_levels: int):
+    """Quote one lot one tick inside the spread, alternating sides.
+
+    The scripted maker archetype: earns the spread, carries inventory,
+    no risk control — the baseline the learned maker has to beat.
+    """
+
+    def market_maker(obs, t):
+        xp = _xp(obs)
+        mid = obs[:, 0]
+        buy = (t % 2) == 0
+        tick = xp.clip(xp.round(mid + xp.where(buy, -1.0, 1.0))
+                       .astype(xp.int32), 0, num_levels - 1)
+        return ExternalOrders(side_buy=xp.broadcast_to(buy, mid.shape),
+                              price=tick, qty=xp.ones_like(mid))
+
+    return market_maker
+
+
+def make_random_policy(num_levels: int, stream: int = 101):
+    """Uniform random orders from the stateless counter RNG.
+
+    Pure function of (stream, market, step) — no host randomness, so the
+    rollout stays one fused graph and replays bitwise on every
+    counter-RNG backend.
+    """
+
+    def random_policy(obs, t):
+        xp = _xp(obs)
+        M = obs.shape[0]
+        gid = xp.arange(M, dtype=xp.uint32)
+        u_side = rng.uniform32(xp.uint32(stream), gid, t, 0, xp)
+        u_tick = rng.uniform32(xp.uint32(stream), gid, t, 1, xp)
+        mid = obs[:, 0]
+        tick = xp.clip(xp.round(mid + (u_tick * 8.0 - 4.0))
+                       .astype(xp.int32), 0, num_levels - 1)
+        return ExternalOrders(side_buy=u_side < 0.5, price=tick,
+                              qty=xp.ones_like(mid))
+
+    return random_policy
+
+
+# ---------------------------------------------------------------------------
+# Discrete quote grid: action index -> ExternalOrders.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuoteGrid:
+    """Discrete market-making action space around the mid.
+
+    ``num_actions = 2 * k_max + 1``: index 0 holds, ``1..k_max`` buys
+    ``k`` ticks below mid, ``k_max+1..2*k_max`` sells ``k - k_max`` ticks
+    above. Frozen + hashable so it can key trace caches.
+    """
+
+    k_max: int = 3
+    qty: float = 1.0
+
+    @property
+    def num_actions(self) -> int:
+        return 2 * self.k_max + 1
+
+    def to_orders(self, action, mid, num_levels: int) -> ExternalOrders:
+        xp = _xp(mid)
+        a = action.astype(xp.int32)
+        buy = (a >= 1) & (a <= self.k_max)
+        off = xp.where(buy, -a, a - self.k_max).astype(xp.float32)
+        price = xp.clip(xp.round(mid + off).astype(xp.int32),
+                        0, num_levels - 1)
+        q = xp.where(a > 0, xp.float32(self.qty), xp.float32(0.0))
+        return ExternalOrders(side_buy=buy, price=price, qty=q)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX actor-critic MLP.
+# ---------------------------------------------------------------------------
+
+def init_actor_critic(key, obs_dim: int, num_actions: int,
+                      hidden: Tuple[int, ...] = (32, 32)):
+    """Init a {torso, pi, v} parameter pytree (orthogonal init).
+
+    ``key`` is a jax PRNG key or an int seed. The returned tree is nested
+    dicts/tuples of float32 arrays — exactly the structure
+    ``CheckpointManager`` flattens losslessly.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not hasattr(key, "shape"):
+        key = jax.random.PRNGKey(int(key))
+    ortho = jax.nn.initializers.orthogonal
+
+    def dense(key, n_in, n_out, scale):
+        return (ortho(scale)(key, (n_in, n_out), jnp.float32),
+                jnp.zeros((n_out,), jnp.float32))
+
+    keys = jax.random.split(key, len(hidden) + 2)
+    torso, n_in = [], obs_dim
+    for k, n_out in zip(keys[:-2], hidden):
+        torso.append(dense(k, n_in, n_out, np.sqrt(2.0)))
+        n_in = n_out
+    return {
+        "torso": tuple(torso),
+        "pi": dense(keys[-2], n_in, num_actions, 0.01),
+        "v": dense(keys[-1], n_in, 1, 1.0),
+    }
+
+
+def apply_actor_critic(params, obs):
+    """(logits[..., A], value[...]) from obs[..., D]; any leading dims."""
+    import jax.numpy as jnp
+
+    x = obs
+    for W, b in params["torso"]:
+        x = jnp.tanh(x @ W + b)
+    Wp, bp = params["pi"]
+    Wv, bv = params["v"]
+    return x @ Wp + bp, (x @ Wv + bv)[..., 0]
+
+
+def logits_log_prob(logits, action):
+    """log pi(action | obs) from raw logits."""
+    import jax
+    import jax.numpy as jnp
+
+    logp = jax.nn.log_softmax(logits)
+    return jnp.take_along_axis(logp, action[..., None], axis=-1)[..., 0]
+
+
+def logits_entropy(logits):
+    """Per-row policy entropy from raw logits."""
+    import jax
+    import jax.numpy as jnp
+
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+Policy = Any  # docs alias: policy_fn(obs, t) or policy_fn(carry, obs, t)

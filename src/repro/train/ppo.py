@@ -1,0 +1,330 @@
+"""Anakin-style PPO over the market env: the whole update loop is ONE jit.
+
+The trainer compiles rollout collection, GAE, and every minibatched
+gradient step into a single executable::
+
+    train(ts, U)  =  jit( lax.scan(update, ts, length=U) )
+    update        =  rollout(env, actor, T)        # inner lax.scan, inlined
+                     -> gae(...)                   # reverse lax.scan
+                     -> scan(epochs) { scan(minibatches) { grad + adam } }
+
+so a full training run performs **zero per-step and zero per-update host
+transfers** — the only host crossings are the ``train()`` call boundaries
+the driver chooses (checkpointing, logging). This is the engine's
+device-residency thesis carried to the gradient step: HBM traffic is
+Θ(params + transitions), independent of how many updates run warm.
+
+Experience batching follows the engine's axes: the market axis M is
+always batch; ``num_envs > 1`` additionally vmaps whole rollouts over
+runtime seeds (counter-RNG backends only — Pallas bakes the seed, so
+there M *is* the batch and sharding over devices via the engine's
+``shard_map`` path is the scale-out axis instead).
+
+The optimizer is a self-contained pure-JAX Adam (global-norm clipped) so
+the optimizer state is an explicit pytree in the scan carry — no
+dependency beyond jax, and it checkpoints/restores bitwise through
+``CheckpointManager`` like every other engine tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.env.core import MarketEnv, rollout
+from repro.train import buffers
+from repro.train.policies import (QuoteGrid, apply_actor_critic,
+                                  init_actor_critic, logits_entropy,
+                                  logits_log_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    """Hashable trainer config (keys the engine-wide train-trace cache)."""
+
+    rollout_len: int = 64          # T: env steps collected per update
+    num_updates: int = 16          # U: default scan length per train() call
+    num_envs: int = 1              # B: vmapped runtime seeds (jax backends)
+    num_epochs: int = 2            # passes over each update's transitions
+    num_minibatches: int = 4       # gradient steps per epoch
+    gamma: float = 0.99
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    lr: float = 3e-4
+    max_grad_norm: float = 0.5
+    hidden: Tuple[int, ...] = (32, 32)
+    k_max: int = 3                 # quote grid half-width (A = 2*k_max + 1)
+    qty: float = 1.0
+    seed: int = 0
+
+
+class AdamState(NamedTuple):
+    mu: Any     # first-moment pytree, mirrors params
+    nu: Any     # second-moment pytree, mirrors params
+    count: Any  # i32 step counter
+
+
+class TrainState(NamedTuple):
+    """Everything the jitted train step threads through its scan carry."""
+
+    params: Any      # actor-critic pytree
+    opt_state: Any   # AdamState
+    key: Any         # jax PRNG key (uint32[2])
+    env_state: Any   # EnvState ([B]-batched leaves when num_envs > 1)
+    update_idx: Any  # i32 global update counter
+
+
+def adam_init(params) -> AdamState:
+    import jax
+    import jax.numpy as jnp
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    zeros2 = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(mu=zeros, nu=zeros2, count=jnp.int32(0))
+
+
+def adam_apply(params, grads, state: AdamState, *, lr: float,
+               b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+               max_grad_norm: Optional[float] = None):
+    """One bias-corrected Adam step; optional global-norm gradient clip."""
+    import jax
+    import jax.numpy as jnp
+
+    tree_map = jax.tree_util.tree_map
+    if max_grad_norm is not None:
+        sq = sum(jnp.sum(jnp.square(g))
+                 for g in jax.tree_util.tree_leaves(grads))
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+        grads = tree_map(lambda g: g * scale, grads)
+    count = state.count + 1
+    mu = tree_map(lambda m, g: b1 * m + (1.0 - b1) * g, state.mu, grads)
+    nu = tree_map(lambda v, g: b2 * v + (1.0 - b2) * g * g, state.nu, grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, c)
+    bc2 = 1.0 - jnp.power(b2, c)
+    new_params = tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, mu, nu)
+    return new_params, AdamState(mu=mu, nu=nu, count=count)
+
+
+def ppo_loss(params, mb: buffers.TrainBatch, *, clip_eps: float,
+             vf_coef: float, ent_coef: float):
+    """Clipped PPO surrogate + clipped value loss + entropy bonus."""
+    import jax.numpy as jnp
+
+    logits, value = apply_actor_critic(params, mb.obs)
+    logp = logits_log_prob(logits, mb.action)
+    ratio = jnp.exp(logp - mb.log_prob)
+    adv = (mb.adv - mb.adv.mean()) / (mb.adv.std() + 1e-8)
+    pg = -jnp.minimum(ratio * adv,
+                      jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv)
+    pg_loss = pg.mean()
+    v_clip = mb.value + jnp.clip(value - mb.value, -clip_eps, clip_eps)
+    v_loss = 0.5 * jnp.maximum(jnp.square(value - mb.ret),
+                               jnp.square(v_clip - mb.ret)).mean()
+    entropy = logits_entropy(logits).mean()
+    total = pg_loss + vf_coef * v_loss - ent_coef * entropy
+    approx_kl = ((ratio - 1.0) - jnp.log(ratio)).mean()
+    return total, {"loss": total, "pg_loss": pg_loss, "v_loss": v_loss,
+                   "entropy": entropy, "approx_kl": approx_kl}
+
+
+class PPOTrainer:
+    """PPO over one :class:`MarketEnv`, compiled to a single executable.
+
+    The compiled train fn (plus the carried actor and greedy-eval
+    policies) is cached on the env's engine-wide trace cache keyed by the
+    config — a second trainer on a *different scenario mixture of the
+    same shape* reuses the warm executable, exactly like rollouts.
+    """
+
+    def __init__(self, env: MarketEnv, config: PPOConfig = PPOConfig()):
+        if not env._traceable:
+            raise ValueError(
+                f"PPO needs a traceable backend (got "
+                f"{env._engine.backend!r}); gradients cannot flow through "
+                "the NumPy host loop")
+        if config.num_envs > 1 and not env._runner.env_runtime_seed:
+            raise ValueError(
+                f"backend {env._engine.backend!r} bakes the RNG seed into "
+                "its executable, so rollouts cannot vmap over runtime "
+                "seeds; use num_envs=1 (the market axis is the batch, and "
+                "devices=N shards it) or a counter-RNG jax backend")
+        n = (config.num_envs * config.rollout_len * env.spec.num_markets)
+        if n % config.num_minibatches:
+            raise ValueError(
+                f"num_envs*rollout_len*num_markets = {n} transitions per "
+                f"update must divide into num_minibatches="
+                f"{config.num_minibatches}")
+        self.env = env
+        self.config = config
+        self.quote = QuoteGrid(k_max=config.k_max, qty=config.qty)
+        self.num_actions = self.quote.num_actions
+        self.obs_dim = env.obs_size()
+        cached = env._cache.get(("train", config))
+        if cached is None:
+            cached = env._cache[("train", config)] = self._build()
+        self._train_fn, self._actor_step, self._eval_step = cached
+
+    # ---- lifecycle ----
+    def init(self, seed: Optional[int] = None) -> TrainState:
+        """Fresh TrainState: params, Adam state, PRNG key, env state(s)."""
+        import jax
+        import jax.numpy as jnp
+
+        cfg = self.config
+        key = jax.random.PRNGKey(cfg.seed if seed is None else int(seed))
+        key, k_init = jax.random.split(key)
+        params = init_actor_critic(k_init, self.obs_dim, self.num_actions,
+                                   cfg.hidden)
+        mesh = getattr(self.env._runner, "_mesh", None)
+        if mesh is not None:
+            from repro.launch.sharding import replicate_tree
+
+            params = replicate_tree(params, mesh)
+        opt_state = adam_init(params)
+        if cfg.num_envs > 1:
+            base = np.uint32(self.env.spec.seed)
+            seeds = jnp.asarray(
+                base + np.arange(cfg.num_envs, dtype=np.uint32))
+            env_state, _ = jax.vmap(self.env.reset)(seeds)
+        else:
+            env_state, _ = self.env.reset()
+        return TrainState(params=params, opt_state=opt_state, key=key,
+                          env_state=env_state, update_idx=jnp.int32(0))
+
+    def train(self, ts: TrainState, num_updates: Optional[int] = None):
+        """Run ``num_updates`` PPO updates as ONE jitted call.
+
+        Returns ``(ts, metrics)`` where metrics is a dict of [U] arrays
+        (reward, value, loss, pg_loss, v_loss, entropy, approx_kl).
+        Repeat calls with the same ``num_updates`` reuse the warm
+        executable — assert ``engine.trace_count`` stays flat.
+        """
+        u = self.config.num_updates if num_updates is None \
+            else int(num_updates)
+        return self._train_fn(ts, u)
+
+    def evaluate(self, params, env: Optional[MarketEnv] = None,
+                 n_steps: Optional[int] = None):
+        """Greedy (argmax) rollout of the learned policy; returns the
+        RolloutBatch. Pass a held-out env of the same shape to reuse the
+        warm executable."""
+        env = self.env if env is None else env
+        _, batch, _ = rollout(env, self._eval_step, n_steps,
+                              policy_carry=params)
+        return batch
+
+    # ---- graph construction ----
+    def _build(self):
+        import jax
+        import jax.numpy as jnp
+
+        env, cfg, quote = self.env, self.config, self.quote
+        runner = env._runner
+        L = env.spec.num_levels
+        B, T = cfg.num_envs, cfg.rollout_len
+        n_total = B * T * env.spec.num_markets
+
+        def actor_step(carry, obs, t):
+            params, key = carry
+            logits, value = apply_actor_critic(params, obs)
+            key, k_act = jax.random.split(key)
+            action = jax.random.categorical(k_act, logits, axis=-1)
+            log_prob = logits_log_prob(logits, action)
+            orders = quote.to_orders(action, obs[:, 0], L)
+            extras = buffers.ActorExtras(obs=obs, action=action,
+                                         log_prob=log_prob, value=value)
+            return (params, key), orders, extras
+
+        def eval_step(params, obs, t):
+            logits, value = apply_actor_critic(params, obs)
+            action = jnp.argmax(logits, axis=-1)
+            orders = quote.to_orders(action, obs[:, 0], L)
+            return params, orders, {"action": action, "value": value}
+
+        def collect(params, key, env_state):
+            """One rollout (or B vmapped rollouts) -> [B, T, ...] leaves."""
+            if B == 1:
+                final, batch, _ = rollout(env, actor_step, T,
+                                          state=env_state,
+                                          policy_carry=(params, key))
+                add_b = lambda x: x[None]
+                return final, (
+                    jax.tree_util.tree_map(add_b, batch.extras),
+                    batch.reward[None], batch.done[None],
+                    batch.obs[-1][None])
+            keys = jax.random.split(key, B)
+
+            def one(env_state, key):
+                final, batch, _ = rollout(env, actor_step, T,
+                                          state=env_state,
+                                          policy_carry=(params, key))
+                return final, (batch.extras, batch.reward, batch.done,
+                               batch.obs[-1])
+
+            return jax.vmap(one)(env_state, keys)
+
+        def update_step(ts: TrainState, _):
+            params = ts.params
+            key, k_roll, k_train = jax.random.split(ts.key, 3)
+            env_state, (extras, reward, done, last_obs) = collect(
+                params, k_roll, ts.env_state)
+            # Bootstrap from the value of the post-rollout observation.
+            _, last_value = apply_actor_critic(params, last_obs)
+            done_f = jnp.broadcast_to(
+                done[..., None].astype(jnp.float32), reward.shape)
+            adv, ret = jax.vmap(
+                lambda r, v, d, lv: buffers.gae(r, v, d, lv, cfg.gamma,
+                                                cfg.gae_lambda)
+            )(reward, extras.value, done_f, last_value)
+            flat = buffers.TrainBatch(
+                obs=extras.obs.reshape((-1, self.obs_dim)),
+                action=extras.action.reshape((-1,)),
+                log_prob=extras.log_prob.reshape((-1,)),
+                value=extras.value.reshape((-1,)),
+                adv=adv.reshape((-1,)), ret=ret.reshape((-1,)))
+
+            def mb_step(carry, mb_idx):
+                params, opt_state = carry
+                mb = buffers.take(flat, mb_idx)
+                grad_fn = jax.value_and_grad(ppo_loss, has_aux=True)
+                (_, metrics), grads = grad_fn(
+                    params, mb, clip_eps=cfg.clip_eps, vf_coef=cfg.vf_coef,
+                    ent_coef=cfg.ent_coef)
+                params, opt_state = adam_apply(
+                    params, grads, opt_state, lr=cfg.lr,
+                    max_grad_norm=cfg.max_grad_norm)
+                return (params, opt_state), metrics
+
+            def epoch_step(carry, _):
+                params, opt_state, key = carry
+                key, k_perm = jax.random.split(key)
+                idx = buffers.minibatch_indices(k_perm, n_total,
+                                                cfg.num_minibatches)
+                (params, opt_state), metrics = jax.lax.scan(
+                    mb_step, (params, opt_state), idx)
+                return (params, opt_state, key), metrics
+
+            (params, opt_state, _), loss_metrics = jax.lax.scan(
+                epoch_step, (params, ts.opt_state, k_train), None,
+                length=cfg.num_epochs)
+            metrics = {k: v.mean() for k, v in loss_metrics.items()}
+            metrics["reward"] = reward.mean()
+            metrics["value"] = extras.value.mean()
+            new_ts = TrainState(params=params, opt_state=opt_state, key=key,
+                                env_state=env_state,
+                                update_idx=ts.update_idx + 1)
+            return new_ts, metrics
+
+        def train(ts: TrainState, num_updates: int):
+            runner._trace_count += 1  # python side effect: trace-time only
+            return jax.lax.scan(update_step, ts, None, length=num_updates)
+
+        train_fn = jax.jit(train, static_argnums=(1,))
+        return train_fn, actor_step, eval_step

@@ -42,6 +42,8 @@ from repro.env import (
     rollout,
 )
 
+from repro.train.policies import make_market_maker
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 CFG = MarketConfig(num_markets=4, num_agents=16, num_levels=16, num_steps=12,
@@ -145,19 +147,10 @@ def test_env_step_matches_session_step_with_actions(backend):
 # Scan rollout == python loop of steps (in-graph ≡ eager), bitwise.
 # ---------------------------------------------------------------------------
 
-def _mm_policy(obs, t):
-    """Tiny deterministic market-maker: quote one lot at mid - 1 / mid + 1
-    on alternating steps (obs[:, 0] is the mid feature)."""
-    import jax.numpy as jnp
-
-    side_buy = (t % 2) == 0
-    mid = obs[:, 0]
-    price = jnp.clip(
-        jnp.round(mid + jnp.where(side_buy, -1.0, 1.0)).astype(jnp.int32),
-        0, CFG.num_levels - 1)
-    return ExternalOrders(side_buy=jnp.broadcast_to(side_buy, mid.shape),
-                          price=price,
-                          qty=jnp.ones_like(mid))
+# The deterministic market-maker fixture now lives in
+# repro.train.policies (shared with examples/ and the trainer's eval
+# baseline); built once so the rollout executable cache keys stay stable.
+_mm_policy = make_market_maker(CFG.num_levels)
 
 
 @pytest.mark.parametrize("backend", TRACEABLE)
@@ -176,6 +169,71 @@ def test_scan_rollout_equals_step_loop(backend):
         assert bool(done) == bool(traj.done[t]), t
     _states_equal(final.market, state.market, backend)
     _states_equal(final.portfolio, state.portfolio, backend)
+
+
+# ---------------------------------------------------------------------------
+# Carried policies: rollout(policy_carry=...) on jitted AND host paths.
+# ---------------------------------------------------------------------------
+
+def _carried_policy(obs_like_xp):
+    """Stateful quoting policy in the carried signature
+    ``policy_fn(carry, obs, t) -> (carry, actions, extras)``: the carry
+    threads an own step counter and a reference mid that skews the quote
+    offset — state the policy could not recover from (obs, t) alone."""
+
+    def policy(carry, obs, t):
+        xp = np if isinstance(obs, np.ndarray) else obs_like_xp
+        count, ref_mid = carry
+        mid = obs[:, 0]
+        side_buy = (count % 2) == 0
+        off = xp.where(mid >= ref_mid, 1.0, 2.0)
+        price = xp.clip(
+            xp.round(mid + xp.where(side_buy, -off, off)).astype(xp.int32),
+            0, CFG.num_levels - 1)
+        orders = ExternalOrders(side_buy=xp.broadcast_to(side_buy, mid.shape),
+                                price=price, qty=xp.ones_like(mid))
+        extras = {"mid": mid, "count": count}
+        return (count + 1, ref_mid), orders, extras
+
+    return policy
+
+
+def test_policy_carry_host_loop_matches_jitted():
+    """The numpy host loop honours the same policy-carry signature as the
+    jitted scan — rewards, stacked extras, and the final carry bitwise."""
+    import jax.numpy as jnp
+
+    policy = _carried_policy(jnp)
+    carry0 = (np.int32(0), np.float32(CFG.num_levels / 2))
+    results = {}
+    for backend in ("numpy", "jax-scan"):
+        env = _engine(backend).env(CFG)
+        final, batch, carry = rollout(env, policy, CFG.num_steps,
+                                      policy_carry=carry0)
+        results[backend] = (batch, carry)
+    ref_b, ref_c = results["numpy"]
+    b, c = results["jax-scan"]
+    assert (np.asarray(ref_b.reward) == np.asarray(b.reward)).all()
+    assert (np.asarray(ref_b.obs) == np.asarray(b.obs)).all()
+    for k in ("mid", "count"):
+        assert (np.asarray(ref_b.extras[k])
+                == np.asarray(b.extras[k])).all(), k
+    assert int(np.asarray(ref_c[0])) == int(np.asarray(c[0]))
+    assert np.asarray(ref_b.extras["count"]).shape == (CFG.num_steps,)
+    assert np.asarray(ref_b.extras["mid"]).shape \
+        == (CFG.num_steps, CFG.num_markets)
+
+
+def test_policy_carry_requires_policy():
+    env = _engine("jax-scan").env(CFG)
+    with pytest.raises(ValueError, match="policy_carry"):
+        rollout(env, None, 4, policy_carry=0)
+
+
+def test_stateless_rollout_has_no_extras():
+    env = _engine("jax-scan").env(CFG)
+    _, batch = rollout(env, _mm_policy, 4)
+    assert batch.extras is None
 
 
 # ---------------------------------------------------------------------------
@@ -542,3 +600,63 @@ def test_sharded_env_rollout_parity_in_process():
     assert (np.asarray(t1.price) == np.asarray(t2.price)).all()
     for a, b in zip(f1.market, f2.market):
         assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# vmap(seeds) × EnsembleSpec mixture × sharded path, composed in ONE trace.
+# ---------------------------------------------------------------------------
+
+_VMAP_MIX_SHARDED_CODE = textwrap.dedent("""
+    import numpy as np, jax
+    from repro.core.params import EnsembleSpec
+    from repro.core.session import Engine
+    from repro.env import rollout
+    from repro.train.policies import make_market_maker
+    assert len(jax.devices()) >= 2, jax.devices()
+    mk = lambda seed: EnsembleSpec.from_scenarios(
+        ["flash-crash", "high-vol"], num_markets=2, num_agents=16,
+        num_levels=16, num_steps=10, seed=seed)
+    policy = make_market_maker(16)
+    eng = Engine("jax-scan")
+    env = eng.env(mk(0), auto_reset=False)
+
+    def roll(seed):
+        state, obs = env.reset(seed)
+        final, batch = rollout(env, policy, 10, state=state)
+        return batch
+
+    seeds = np.array([0, 9, 23], np.uint32)
+    batches = jax.vmap(roll)(seeds)
+    # the whole seeds-batch of mixture rollouts compiled exactly once
+    assert eng.trace_count == 1, eng.trace_count
+    # per-seed bitwise vs solo envs with the seed baked into the spec
+    for i, s in enumerate(seeds):
+        solo = Engine("jax-scan").env(mk(int(s)), auto_reset=False)
+        _, ref = rollout(solo, policy, 10)
+        assert (np.asarray(ref.obs) == np.asarray(batches.obs[i])).all(), s
+        assert (np.asarray(ref.price)
+                == np.asarray(batches.price[i])).all(), s
+    # sharded composition: the 2-device shard_map rollout of the same
+    # mixture is bitwise-identical to the vmapped seed-0 row (jax-scan and
+    # pallas-kinetic share the counter-RNG stream)
+    sharded = Engine("pallas-kinetic", devices=2).env(mk(0),
+                                                      auto_reset=False)
+    _, sb = rollout(sharded, policy, 10)
+    assert (np.asarray(sb.obs) == np.asarray(batches.obs[0])).all()
+    assert (np.asarray(sb.price) == np.asarray(batches.price[0])).all()
+    print("OK")
+""")
+
+
+def test_vmap_seeds_mixture_sharded_composition_subprocess():
+    """vmap over runtime seeds × a scenario mixture in one trace, with the
+    seed-0 row bitwise-equal to a 2-device sharded rollout of the same
+    mixture (PR-3 sharding × PR-4 ensembles × PR-5 env, finally composed)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", _VMAP_MIX_SHARDED_CODE],
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

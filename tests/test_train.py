@@ -1,0 +1,268 @@
+"""Tests for repro.train — on-device PPO over the market env.
+
+Tier-1 keeps sizes tiny (the smoke configs train in seconds on CPU);
+the full market-maker learning run is `train`+`slow`-marked and rides
+the nightly job. The invariants mirror the engine's discipline:
+
+* the whole update loop — rollout + GAE + minibatched gradient steps —
+  compiles to ONE executable, and repeat calls never retrace;
+* trainer state (policy, Adam moments, PRNG key, env states) round-trips
+  through CheckpointManager bitwise, so a resume continues the learning
+  curve exactly;
+* batched experience (vmap over runtime seeds × scenario mixtures) and
+  the sharded collection path compose with the same parity guarantees.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.config import MarketConfig
+from repro.core.params import EnsembleSpec
+from repro.core.session import Engine
+from repro.env import InventoryPenalty, MarketFeatures, SpreadCapture, Sum
+from repro.train import (PPOConfig, PPOTrainer, fit, make_market_maker,
+                         restore_train_checkpoint, save_train_checkpoint)
+
+CFG = MarketConfig(num_markets=4, num_agents=16, num_levels=16, num_steps=12,
+                   seed=3)
+
+#: tiny-but-real config: 2 vmapped seed-envs over the market axis.
+SMOKE = PPOConfig(rollout_len=8, num_updates=2, num_envs=2, num_epochs=2,
+                  num_minibatches=4, hidden=(16,), seed=0)
+
+REWARD = Sum((SpreadCapture(), InventoryPenalty(0.001)))
+
+
+def _mixture(seed=3):
+    return EnsembleSpec.from_scenarios(
+        ["flash-crash", "high-vol"], num_markets=2, num_agents=16,
+        num_levels=16, num_steps=12, seed=seed)
+
+
+def _trainer(backend="jax-scan", cfg=SMOKE, spec=None, **engine_opts):
+    eng = Engine(backend, **engine_opts)
+    env = eng.env(spec if spec is not None else _mixture(),
+                  reward=REWARD, obs=MarketFeatures())
+    return eng, PPOTrainer(env, cfg)
+
+
+# ---------------------------------------------------------------------------
+# One executable; zero warm retraces across updates and train() calls.
+# ---------------------------------------------------------------------------
+
+def test_train_is_one_executable_zero_retraces():
+    eng, tr = _trainer()
+    ts = tr.init()
+    ts, metrics = tr.train(ts, 2)
+    warm = eng.trace_count
+    ts, metrics = tr.train(ts, 2)
+    ts, metrics = tr.train(ts, 2)
+    assert eng.trace_count == warm, (eng.trace_count, warm)
+    for k in ("reward", "loss", "pg_loss", "v_loss", "entropy",
+              "approx_kl", "value"):
+        v = np.asarray(metrics[k])
+        assert v.shape == (2,) and np.isfinite(v).all(), k
+    assert int(np.asarray(ts.update_idx)) == 6
+
+
+def test_train_updates_move_params():
+    import jax
+
+    _, tr = _trainer()
+    ts0 = tr.init()
+    ts1, _ = tr.train(ts0, 2)
+    moved = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree_util.tree_leaves(ts0.params),
+                             jax.tree_util.tree_leaves(ts1.params))]
+    assert all(moved), moved
+
+
+def test_train_trace_shared_across_mixtures_of_same_shape():
+    """A trainer on a different scenario mixture of the same shape reuses
+    the warm train executable (shape-semantic engine-wide cache)."""
+    eng = Engine("jax-scan")
+    env_a = eng.env(_mixture(), reward=REWARD, obs=MarketFeatures())
+    tr_a = PPOTrainer(env_a, SMOKE)
+    ts, _ = tr_a.train(tr_a.init(), 2)
+    warm = eng.trace_count
+    env_b = eng.env(EnsembleSpec.from_scenarios(
+        ["flash-crash", "flash-crash"], num_markets=2, num_agents=16,
+        num_levels=16, num_steps=12, seed=3), reward=REWARD,
+        obs=MarketFeatures())
+    tr_b = PPOTrainer(env_b, SMOKE)
+    tr_b.train(tr_b.init(), 2)
+    assert eng.trace_count == warm, (eng.trace_count, warm)
+
+
+def test_train_smoke_on_pallas_backend():
+    """The train graph compiles and runs over the Pallas kernel path
+    (markets are the batch there: the kernel bakes the RNG seed)."""
+    cfg = dataclasses.replace(SMOKE, num_envs=1, rollout_len=4,
+                              num_minibatches=2, num_epochs=1)
+    eng, tr = _trainer("pallas-kinetic", cfg)
+    ts, metrics = tr.train(tr.init(), 2)
+    warm = eng.trace_count
+    tr.train(ts, 2)
+    assert eng.trace_count == warm
+    assert np.isfinite(np.asarray(metrics["loss"])).all()
+
+
+def test_engine_trainer_sugar():
+    eng = Engine("jax-scan")
+    tr = eng.trainer(_mixture(), SMOKE, reward=REWARD, obs=MarketFeatures())
+    ts, metrics = tr.train(tr.init(), 2)
+    assert np.asarray(metrics["reward"]).shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+# ---------------------------------------------------------------------------
+
+def test_num_envs_rejected_on_baked_seed_backend():
+    eng = Engine("pallas-kinetic")
+    env = eng.env(_mixture(), reward=REWARD, obs=MarketFeatures())
+    with pytest.raises(ValueError, match="seed"):
+        PPOTrainer(env, SMOKE)  # SMOKE has num_envs=2
+
+
+def test_host_backend_rejected():
+    eng = Engine("numpy")
+    env = eng.env(CFG, reward=REWARD, obs=MarketFeatures())
+    with pytest.raises(ValueError, match="traceable"):
+        PPOTrainer(env, SMOKE)
+
+
+def test_minibatch_divisibility_checked():
+    eng = Engine("jax-scan")
+    env = eng.env(_mixture(), reward=REWARD, obs=MarketFeatures())
+    with pytest.raises(ValueError, match="num_minibatches"):
+        PPOTrainer(env, dataclasses.replace(SMOKE, num_minibatches=7))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: bitwise continuation of the learning curve.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_bitwise_continues_curve(tmp_path):
+    import jax
+
+    _, tr = _trainer()
+    # straight-through: 4 updates in two warm spans
+    ts_a, _ = tr.train(tr.init(), 2)
+    ts_a, m_a = tr.train(ts_a, 2)
+    # interrupted: 2 updates, save, restore, 2 more
+    ts_b, _ = tr.train(tr.init(), 2)
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    step = save_train_checkpoint(mgr, tr, ts_b)
+    assert step == 2
+    ts_r = restore_train_checkpoint(mgr, tr)
+    ts_b, m_b = tr.train(ts_r, 2)
+    for pa, pb in zip(jax.tree_util.tree_leaves(ts_a.params),
+                      jax.tree_util.tree_leaves(ts_b.params)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb))
+    for oa, ob in zip(jax.tree_util.tree_leaves(ts_a.opt_state),
+                      jax.tree_util.tree_leaves(ts_b.opt_state)):
+        assert np.array_equal(np.asarray(oa), np.asarray(ob))
+    for k in m_a:
+        assert np.array_equal(np.asarray(m_a[k]), np.asarray(m_b[k])), k
+    assert int(np.asarray(ts_b.update_idx)) == 4
+
+
+def test_fit_spans_threshold_and_checkpoints(tmp_path):
+    _, tr = _trainer()
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    out = fit(tr, total_updates=4, updates_per_call=2,
+              ckpt_manager=mgr, ckpt_every=2)
+    assert out["updates"] == 4
+    assert out["history"]["reward"].shape == (4,)
+    assert out["env_steps"] == 4 * SMOKE.rollout_len * SMOKE.num_envs * 4
+    assert out["env_steps_per_s"] > 0
+    assert mgr.restore() is not None
+    # a threshold below any reachable reward stops after the first span
+    out2 = fit(tr, total_updates=4, updates_per_call=2,
+               reward_threshold=-1e9)
+    assert out2["updates"] == 2 and out2["time_to_threshold"] is not None
+    with pytest.raises(ValueError, match="divide"):
+        fit(tr, total_updates=5, updates_per_call=2)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: learned greedy policy vs the scripted maker archetype.
+# ---------------------------------------------------------------------------
+
+def test_evaluate_greedy_and_scripted_baseline():
+    from repro.env import rollout
+
+    eng, tr = _trainer()
+    ts = tr.init()
+    batch = tr.evaluate(ts.params, n_steps=8)
+    assert np.asarray(batch.reward).shape == (8, 4)
+    assert np.isfinite(np.asarray(batch.reward)).all()
+    # held-out mixture of the same shape (the spec seed stays — it is part
+    # of the shape-semantic static_key): no retrace for eval either
+    held_out = eng.env(EnsembleSpec.from_scenarios(
+        ["baseline", "thin-book"], num_markets=2, num_agents=16,
+        num_levels=16, num_steps=12, seed=3), reward=REWARD,
+        obs=MarketFeatures())
+    warm = eng.trace_count
+    tr.evaluate(ts.params, env=held_out, n_steps=8)
+    assert eng.trace_count == warm
+    mm = make_market_maker(16)
+    _, b = rollout(held_out, mm, 8)
+    assert np.isfinite(np.asarray(b.reward)).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharded collection parity (in-process; the distributed CI job).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_sharded_train_collection_parity_in_process():
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices in-process")
+    cfg = dataclasses.replace(SMOKE, num_envs=1, rollout_len=4,
+                              num_minibatches=2, num_epochs=1)
+    _, tr1 = _trainer("pallas-kinetic", cfg)
+    _, tr2 = _trainer("pallas-kinetic", cfg, devices=2)
+    ts1, ts2 = tr1.init(seed=0), tr2.init(seed=0)
+    # identical init params (same PRNG), replicated on the mesh for tr2
+    for a, b in zip(jax.tree_util.tree_leaves(ts1.params),
+                    jax.tree_util.tree_leaves(ts2.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # greedy collection through the carried rollout path: sharded ==
+    # single-device, bitwise (the tentpole's parity discipline)
+    b1 = tr1.evaluate(ts1.params, n_steps=6)
+    b2 = tr2.evaluate(ts2.params, n_steps=6)
+    assert (np.asarray(b1.obs) == np.asarray(b2.obs)).all()
+    assert (np.asarray(b1.reward) == np.asarray(b2.reward)).all()
+    # and a jitted update span runs on the sharded path
+    _, m1 = tr1.train(ts1, 2)
+    _, m2 = tr2.train(ts2, 2)
+    np.testing.assert_allclose(np.asarray(m1["reward"]),
+                               np.asarray(m2["reward"]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Nightly: the learned market-maker actually learns.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.train
+@pytest.mark.slow
+def test_market_maker_training_improves_reward():
+    """Training reward trends up over the flash-crash + high-vol mixture
+    (full-scale beat-the-scripted-maker evaluation rides the nightly
+    train_bench)."""
+    cfg = PPOConfig(rollout_len=32, num_updates=24, num_envs=4,
+                    num_epochs=2, num_minibatches=8, hidden=(32, 32),
+                    lr=1e-3, ent_coef=0.003, seed=0)
+    _, tr = _trainer(cfg=cfg)
+    out = fit(tr, total_updates=24, updates_per_call=8)
+    rewards = out["history"]["reward"]
+    head, tail = rewards[:6].mean(), rewards[-6:].mean()
+    assert tail > head - 0.05, (head, tail)
+    assert np.isfinite(out["history"]["loss"]).all()
