@@ -5,19 +5,26 @@ scale), fixes alpha_maker = 0.15, and reports the four stylized facts:
 volatility escalation, fat tails (excess kurtosis), volume stimulation, and
 volatility clustering (ACF of r_t vs |r_t|).
 
-The per-configuration measurement lives in :func:`stylized_facts` so the
-slow-marked smoke test (tests/test_emergent.py) asserts on exactly the
-numbers this benchmark reports.
+The per-configuration measurement grew into the scenario validation
+subsystem and now lives in :mod:`repro.scenario.validate`; this module
+re-exports :func:`stylized_facts` and the pinned smoke configuration so
+existing imports (tests/test_emergent.py, downstream notebooks) keep
+working. New code should import from ``repro.scenario.validate`` directly —
+that module adds the typed :class:`~repro.scenario.validate.FactCheck` /
+:class:`~repro.scenario.validate.ValidationReport` gate that CI runs via
+``benchmarks/scenario_realism.py``.
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 from benchmarks.common import FULL, emit, time_call
 from repro.core import engine
-from repro.core.config import MarketConfig, scenario_config
+from repro.core.config import MarketConfig
+from repro.scenario.validate import (  # noqa: F401  (re-exports)
+    high_vol_momentum_config,
+    stylized_facts,
+)
 
 SWEEP = ([round(x * 0.05, 2) for x in range(15)] if FULL
          else [0.0, 0.15, 0.30, 0.50, 0.70])
@@ -25,28 +32,13 @@ M = 64
 S = 1000 if FULL else 200
 
 
-def stylized_facts(cfg: MarketConfig, backend: str = "jax-scan",
-                   lags: int = 20) -> dict:
-    """Run ``cfg`` once and measure the paper's stylized-fact battery.
+def high_vol_smoke_config(num_steps: int = 500) -> MarketConfig:
+    """The configuration the slow stylized-facts smoke pins.
 
-    Returns volatility, excess/raw kurtosis, the volume/volatility
-    correlation (positive = volume stimulates with |returns|), mean volume
-    per step, and lag-1/lag-10 ACFs of r_t and |r_t|.
+    Alias of :func:`repro.scenario.validate.high_vol_momentum_config` —
+    the same pinned mixture the CI realism gate validates.
     """
-    r = engine.simulate(cfg, backend=backend).to_numpy()
-    acf_r = r.autocorrelation(lags=lags, absolute=False)
-    acf_a = r.autocorrelation(lags=lags, absolute=True)
-    ex_kurt = r.excess_kurtosis()
-    return {
-        "volatility": r.volatility(),
-        "excess_kurtosis": ex_kurt,
-        "kurtosis": ex_kurt + 3.0,  # raw kurtosis; Gaussian = 3
-        "volume_volatility_corr": r.volume_volatility_corr(),
-        "volume_per_step": float(np.asarray(r.volume_path).mean()),
-        "acf_r_lag1": float(acf_r[1]),
-        "acf_abs_lag1": float(acf_a[1]),
-        "acf_abs_lag10": float(acf_a[10]),
-    }
+    return high_vol_momentum_config(num_steps)
 
 
 def _sweep_config(amom: float) -> MarketConfig:
@@ -56,19 +48,6 @@ def _sweep_config(amom: float) -> MarketConfig:
     return MarketConfig(num_markets=M, num_agents=256, num_steps=S,
                         alpha_maker=0.15, alpha_momentum=amom, seed=1,
                         noise_delta=2.0, p_marketable=0.2)
-
-
-def high_vol_smoke_config(num_steps: int = 500) -> MarketConfig:
-    """The configuration the slow stylized-facts smoke pins.
-
-    The high-vol preset with a momentum-heavy mix — fat tails need trend
-    followers — and 500 steps: shorter runs leave the volume/volatility
-    correlation inside seed noise (it is reliably positive only once the
-    clustering regime develops).
-    """
-    return scenario_config("high-vol", num_markets=M, num_agents=256,
-                           num_steps=num_steps, alpha_maker=0.15,
-                           alpha_momentum=0.5, seed=1)
 
 
 def run(backend: str = "jax-scan") -> list:

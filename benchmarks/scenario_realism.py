@@ -1,0 +1,86 @@
+"""Scenario realism gate: the pinned stylized-facts battery as a CI artifact.
+
+Runs :func:`repro.scenario.validate.validate_spec` on every pinned mixture
+(high-vol momentum + the whale / HFT / informed archetype mixtures) over
+**one warm engine** — the pinned mixtures share a static shape, so after
+the first compile every further mixture must reuse the executable. The
+artifact rows carry the kurtosis / volume-volatility / ACF numbers plus a
+``traces_delta`` row; the process exits nonzero if any mixture fails the
+gate **or** a warm run retraced.
+
+    PYTHONPATH=src python -m benchmarks.scenario_realism \
+        [--backend jax-scan] [--steps 500] [--stats-check]
+        [--json BENCH_scenario_realism.json]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Tuple
+
+from benchmarks.common import Row, emit, time_call
+from repro.core.session import Engine
+from repro.scenario.validate import PINNED_MIXTURES, validate_spec
+
+
+def run(backend: str = "jax-scan", steps: int = None,
+        stats_check: bool = False) -> Tuple[List[Row], bool]:
+    """Returns (artifact rows, gate_ok)."""
+    from repro.scenario.validate import PINNED_STEPS
+
+    steps = PINNED_STEPS if steps is None else steps
+    eng = Engine(backend)
+    names = list(PINNED_MIXTURES)
+    # Warm the shared executable on the first mixture; every subsequent
+    # mixture (and the timed re-runs) must stay on the warm path.
+    validate_spec(PINNED_MIXTURES[names[0]](steps), backend=backend,
+                  eng=eng)
+    warm = eng.trace_count
+
+    rows: List[Row] = []
+    all_passed = True
+    for name in names:
+        cfg = PINNED_MIXTURES[name](steps)
+        t, rep = time_call(validate_spec, cfg, backend=backend,
+                           scenario=name, stats_check=stats_check, eng=eng,
+                           trials=1, warmup=0)
+        all_passed &= rep.passed
+        f = rep.facts
+        rows.append((
+            f"realism/{name}", t * 1e6,
+            f"passed={int(rep.passed)};"
+            f"kurtosis={f['kurtosis']:.4f};"
+            f"vv_corr={f['volume_volatility_corr']:.4f};"
+            f"acf_abs_lag1={f['acf_abs_lag1']:.4f};"
+            f"acf_abs_lag10={f['acf_abs_lag10']:.4f};"
+            f"volatility={f['volatility']:.4f};"
+            f"failures={','.join(c.name for c in rep.failures) or 'none'}"))
+    traces_delta = eng.trace_count - warm
+    rows.append((
+        "realism/warm_engine", 0.0,
+        f"backend={backend};mixtures={len(names)};compiles={warm};"
+        f"traces_delta={traces_delta}"))
+    return rows, all_passed and traces_delta == 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="jax-scan")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the pinned horizon (CI uses the default)")
+    ap.add_argument("--stats-check", action="store_true",
+                    help="cross-validate path moments vs in-kernel stats")
+    ap.add_argument("--json", default=None,
+                    metavar="BENCH_scenario_realism.json")
+    ns = ap.parse_args()
+    rows, ok = run(backend=ns.backend, steps=ns.steps,
+                   stats_check=ns.stats_check)
+    emit(rows, json_path=ns.json, benchmark="scenario_realism")
+    if not ok:
+        print("realism gate FAILED (stylized-facts check or warm retrace)",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

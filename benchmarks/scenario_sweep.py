@@ -22,6 +22,7 @@ from benchmarks.common import (FIXED_A, FIXED_M, STEPS, Row, emit,
 from repro.core.config import scenario_config, scenario_names
 from repro.core.params import EnsembleSpec
 from repro.core.session import Engine
+from repro.scenario import CouplingSpec
 
 DEFAULT_BACKENDS = ["numpy", "jax-scan", "pallas-kinetic"]
 
@@ -105,6 +106,64 @@ def run(backends: Optional[List[str]] = None, markets: Optional[int] = None,
             f"launches={launches_per_run};markets={spec.num_markets};"
             f"speedup_vs_loop={t_loop / t_ens:.2f}x;"
             f"traces_delta={ens_eng.trace_count - warm_ens}"))
+
+        rows.extend(_coupled_rows(b, markets * 4, agents, steps, chunk,
+                                  trials))
+    return rows
+
+
+def _coupled_rows(backend: str, markets: int, agents: int, steps: int,
+                  chunk: int, trials: int) -> List[Row]:
+    """Cross-market coupling cost: events/s with the arbitrage halo
+    exchange off vs on (same warm engine — coupling is a params value),
+    and single-device vs 2-device sharded when the process has devices."""
+    cfg = scenario_config("high-vol", num_markets=markets, num_agents=agents,
+                          num_steps=steps, alpha_maker=0.15,
+                          alpha_arbitrageur=0.25, seed=1)
+    spec = EnsembleSpec.coerce(cfg)
+    ring = CouplingSpec.ring(markets)
+    events = spec.events()
+    rows: List[Row] = []
+
+    eng = Engine(backend, chunk_size=chunk)
+
+    def run_spec(e, s):
+        with e.open(s) as sess:
+            return sess.run(s.num_steps)
+
+    run_spec(eng, spec)  # warmup
+    warm = eng.trace_count
+    t_off, _ = time_call(run_spec, eng, CouplingSpec.none(markets).apply(spec),
+                         trials=trials, warmup=0)
+    t_on, _ = time_call(run_spec, eng, ring.apply(spec),
+                        trials=trials, warmup=0)
+    rows.append((
+        f"scenarios/coupled/off/{backend}", t_off * 1e6,
+        f"events_per_s={events / t_off:.4g};markets={markets};"
+        f"traces_delta={eng.trace_count - warm}"))
+    rows.append((
+        f"scenarios/coupled/on/{backend}", t_on * 1e6,
+        f"events_per_s={events / t_on:.4g};"
+        f"coupling_overhead={t_on / t_off:.3f}x;"
+        f"traces_delta={eng.trace_count - warm}"))
+
+    # Sharded variant: jax-family engines only, and only when the process
+    # actually has >= 2 devices (CI distributed tier sets XLA_FLAGS).
+    if not backend.startswith("numpy"):
+        import jax
+
+        if len(jax.devices()) >= 2:
+            sh_eng = Engine(backend, chunk_size=chunk, devices=2)
+            coupled = ring.apply(spec)
+            run_spec(sh_eng, coupled)  # warmup
+            sh_warm = sh_eng.trace_count
+            t_sh, _ = time_call(run_spec, sh_eng, coupled,
+                                trials=trials, warmup=0)
+            rows.append((
+                f"scenarios/coupled/sharded/{backend}", t_sh * 1e6,
+                f"events_per_s={events / t_sh:.4g};devices=2;"
+                f"vs_single={t_sh / t_on:.3f}x;"
+                f"traces_delta={sh_eng.trace_count - sh_warm}"))
     return rows
 
 

@@ -37,15 +37,19 @@ import numpy as np
 from repro.core import params as params_mod
 from repro.core import rng
 from repro.core.config import (
+    ARBITRAGEUR,
     CH_MKT,
     CH_PRICE,
     CH_QTY,
     CH_SHOCK,
     CH_SIDE,
     FUNDAMENTALIST,
+    HFT,
+    INFORMED,
     MAKER,
     MOMENTUM,
     NOISE,
+    WHALE,
 )
 from repro.core.params import MarketParams
 
@@ -61,6 +65,9 @@ class ArchetypeContext(NamedTuple):
     agent_ids: "array"  # int32[1, A] agent indices within a market
     u_side: "array"     # float32[M, A] side-channel uniforms
     u_price: "array"    # float32[M, A] price-channel uniforms
+    imbalance: "array"  # float32[M, 1] resting-book imbalance in [-1, 1]
+    peer_mid: "array"   # float32[M, 1] coupled peer's previous-chunk mid
+    num_levels: int     # L — static price-grid width
 
 
 # type_id -> (name, fn(ctx) -> (side_buy, price_f)); ids match config constants.
@@ -128,8 +135,75 @@ def _fundamentalist(ctx: ArchetypeContext):
     return side_buy, price_f
 
 
+@register_archetype(WHALE, "whale")
+def _whale(ctx: ArchetypeContext):
+    """Large infrequent sweeps: a marketable block order of ``whale_size``
+    lots every ``whale_period`` steps, random side; silent in between.
+
+    The sweep cadence is expressed through the *quantity* (``decide``
+    zeroes whale quantities off-cadence), so the fixed draw schedule and
+    the branch-free dispatch are untouched — an idle whale submits a
+    zero-quantity order that bins to nothing.
+    """
+    xp, f32 = ctx.xp, ctx.xp.float32
+    side_buy = ctx.u_side < f32(0.5)
+    L = ctx.num_levels
+    price_f = xp.where(side_buy, f32(L - 1), f32(0.0)) + xp.zeros_like(ctx.u_side)
+    return side_buy, price_f
+
+
+@register_archetype(HFT, "hft")
+def _hft(ctx: ArchetypeContext):
+    """Book-imbalance reactive: join the pressure side one tick through the
+    mid when |imbalance| exceeds the per-market trigger, noise side below.
+    """
+    xp, f32 = ctx.xp, ctx.xp.float32
+    imb = ctx.imbalance + xp.zeros_like(ctx.u_side)  # broadcast [M, A]
+    thr = xp.asarray(ctx.params.hft_threshold, dtype=f32)
+    side_buy = xp.where(xp.abs(imb) > thr, imb > f32(0.0),
+                        ctx.u_side < f32(0.5))
+    price_f = ctx.mid + xp.where(side_buy, f32(1.0), f32(-1.0))
+    return side_buy, price_f
+
+
+@register_archetype(INFORMED, "informed")
+def _informed(ctx: ArchetypeContext):
+    """Sees the fundamental shock early: sells marketably through the
+    ``informed_horizon`` steps before ``shock_step``, noise-like otherwise
+    (markets with no shock scheduled never open the window)."""
+    xp, f32 = ctx.xp, ctx.xp.float32
+    shock_step = xp.asarray(ctx.params.shock_step, dtype=xp.int32)
+    horizon = xp.asarray(ctx.params.informed_horizon, dtype=xp.int32)
+    false_b = xp.zeros_like(ctx.u_side) > f32(0.0)  # all-False [M, A]
+    window = ((shock_step >= xp.int32(0))
+              & (ctx.step_i >= shock_step - horizon)
+              & (ctx.step_i < shock_step)) | false_b
+    calm_side = ctx.u_side < f32(0.5)
+    calm_price = ctx.mid + (ctx.u_price * f32(2.0) - f32(1.0))
+    side_buy = xp.where(window, false_b, calm_side)
+    price_f = xp.where(window, f32(0.0), calm_price)
+    return side_buy, price_f
+
+
+@register_archetype(ARBITRAGEUR, "arbitrageur")
+def _arbitrageur(ctx: ArchetypeContext):
+    """Cross-market arbitrage: chase the gap to the coupled peer market's
+    previous-chunk mid (self-coupled markets see gap relative to their own
+    frozen mid). Buys when the peer trades higher, quoting part-way toward
+    the peer with a unit jitter."""
+    xp, f32 = ctx.xp, ctx.xp.float32
+    gap = ctx.peer_mid - ctx.mid              # float32[M, 1]
+    gap = gap + xp.zeros_like(ctx.u_side)     # broadcast [M, A]
+    side_buy = xp.where(gap != f32(0.0), gap > f32(0.0), ctx.u_side < f32(0.5))
+    kappa = xp.asarray(ctx.params.arb_kappa, dtype=f32)
+    jitter = ctx.u_price * f32(2.0) - f32(1.0)
+    price_f = ctx.mid + gap * kappa + jitter
+    return side_buy, price_f
+
+
 def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
-           agent_ids, xp, uniform_fn=None, atype=None, seed=None):
+           agent_ids, xp, uniform_fn=None, atype=None, seed=None,
+           imbalance=None, peer_mid=None):
     """Vectorized agent decisions for one step.
 
     Args:
@@ -155,6 +229,12 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
         ``None`` uses the trace-static ``cfg.seed``; a concrete value equal
         to ``cfg.seed`` is bitwise-identical to ``None``. Ignored when
         ``uniform_fn`` is supplied (the override owns its own stream).
+      imbalance:  optional float32[M, 1] resting-book imbalance
+        ``(Σbid - Σask) / (Σbid + Σask)`` feeding the HFT archetype
+        (``None`` → zeros: HFTs fall back to their noise side).
+      peer_mid:   optional float32[M, 1] coupled peer market's frozen
+        (previous-chunk) mid feeding the arbitrageur archetype (``None``
+        → ``prev_mid``, i.e. self-coupling).
 
     Returns:
       side_buy: bool[M, A], price: int32[M, A], qty: float32[M, A]
@@ -199,10 +279,16 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
     mid = xp.asarray(mid, dtype=xp.float32)
     prev_mid = xp.asarray(prev_mid, dtype=xp.float32)
     step_i = xp.asarray(step).astype(xp.int32)
+    imbalance = (xp.zeros_like(mid) if imbalance is None
+                 else xp.asarray(imbalance, dtype=xp.float32))
+    peer_mid = (prev_mid if peer_mid is None
+                else xp.asarray(peer_mid, dtype=xp.float32))
 
     ctx = ArchetypeContext(params=params, xp=xp, mid=mid, prev_mid=prev_mid,
                            step_i=step_i, agent_ids=agent_ids,
-                           u_side=u_side, u_price=u_price)
+                           u_side=u_side, u_price=u_price,
+                           imbalance=imbalance, peer_mid=peer_mid,
+                           num_levels=L)
 
     # Branch-free archetype dispatch: evaluate every registered archetype on
     # the full lattice, select by the per-market type lattice. Masks are
@@ -215,7 +301,10 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
     # array of zeros is skipped outright (its mask would be all-False —
     # value-identical); traced backends always see the full fold.
     count_cols = {MAKER: params.num_makers, MOMENTUM: params.num_momentum,
-                  FUNDAMENTALIST: params.num_fundamentalists}
+                  FUNDAMENTALIST: params.num_fundamentalists,
+                  WHALE: params.num_whales, HFT: params.num_hft,
+                  INFORMED: params.num_informed,
+                  ARBITRAGEUR: params.num_arbitrageurs}
 
     def concretely_empty(tid):
         col = count_cols.get(tid)
@@ -269,4 +358,16 @@ def decide(cfg, params: MarketParams, mid, prev_mid, step, market_ids,
     # (exact-integer arithmetic => associative adds => bitwise reproducible).
     q_max = xp.asarray(params.q_max, dtype=f32)
     qty = f32(1.0) + xp.floor(u_qty * q_max)
+
+    # Whale cadence overlay: whales trade ``whale_size`` lots on sweep steps
+    # and zero lots otherwise (a zero-quantity order bins to nothing), so
+    # their burstiness lives entirely in the quantity lattice and the draw
+    # schedule stays fixed. Same concrete-zero elision as the dispatch fold.
+    if not concretely_empty(WHALE):
+        is_whale = (atype == xp.int32(WHALE)) | zero_b
+        period = xp.maximum(
+            xp.asarray(params.whale_period, dtype=xp.int32), xp.int32(1))
+        at_sweep = ((step_i % period) == xp.int32(0)) | zero_b
+        wq = xp.asarray(params.whale_size, dtype=f32) + zero_f
+        qty = xp.where(is_whale, xp.where(at_sweep, wq, zero_f), qty)
     return side_buy, price, qty

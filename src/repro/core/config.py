@@ -24,11 +24,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Tuple
 
-# Agent strategy classes (paper §III-C + fundamentalist extension)
+# Agent strategy classes (paper §III-C + fundamentalist extension + the
+# coupled-scenario classes: whale / HFT / informed / cross-market arb)
 NOISE = 0
 MOMENTUM = 1
 MAKER = 2
 FUNDAMENTALIST = 3
+WHALE = 4
+HFT = 5
+INFORMED = 6
+ARBITRAGEUR = 7
 
 # RNG channels
 CH_SIDE = 0
@@ -70,6 +75,23 @@ class MarketConfig:
     fundamental_price: float = -1.0
     fundamentalist_kappa: float = 0.5
 
+    # Coupled-scenario archetypes (repro.scenario): whales sweep the book
+    # with large marketable orders every ``whale_period`` steps; HFTs react
+    # to resting-book imbalance beyond ``hft_threshold``; informed traders
+    # see the fundamental shock ``informed_horizon`` steps early and
+    # front-run it; arbitrageurs trade the gap to a coupled peer market's
+    # previous-chunk mid (peer wiring lives on EnsembleSpec via
+    # ``repro.scenario.CouplingSpec`` — a plain config always self-couples).
+    alpha_whale: float = 0.0
+    alpha_hft: float = 0.0
+    alpha_informed: float = 0.0
+    alpha_arbitrageur: float = 0.0
+    whale_size: float = 32.0       # lots per whale sweep (integer-valued)
+    whale_period: int = 16         # steps between sweeps (>= 1)
+    hft_threshold: float = 0.2     # |imbalance| trigger, in [0, 1]
+    informed_horizon: int = 8      # steps of early shock knowledge (>= 0)
+    arb_kappa: float = 0.5         # gap-chasing strength (>= 0)
+
     # Scenario (presets below; "baseline" leaves every knob at its default).
     scenario: str = "baseline"
     shock_step: int = -1           # flash-crash step (< 0 → disabled)
@@ -87,10 +109,15 @@ class MarketConfig:
         if L > 1024:
             raise ValueError("num_levels > 1024 requires tiling (paper §V)")
         mix_total = (self.alpha_maker + self.alpha_momentum
-                     + self.alpha_fundamentalist)
+                     + self.alpha_fundamentalist + self.alpha_whale
+                     + self.alpha_hft + self.alpha_informed
+                     + self.alpha_arbitrageur)
         if not (0.0 <= mix_total <= 1.0):
             raise ValueError("agent fractions must sum to <= 1")
-        assigned = self.num_makers + self.num_momentum + self.num_fundamentalists
+        assigned = (self.num_makers + self.num_momentum
+                    + self.num_fundamentalists + self.num_whales
+                    + self.num_hft + self.num_informed
+                    + self.num_arbitrageurs)
         if assigned > self.num_agents:
             raise ValueError(
                 f"per-class rounding assigns {assigned} agents > "
@@ -101,6 +128,18 @@ class MarketConfig:
             raise ValueError("shock_cancel must be in [0, 1]")
         if self.shock_step >= self.num_steps:
             raise ValueError("shock_step must be < num_steps")
+        if self.whale_size < 1 or self.whale_size != int(self.whale_size):
+            raise ValueError("whale_size must be an integer-valued lot "
+                             "count >= 1 (exact in f32)")
+        if self.whale_period < 1:
+            raise ValueError("whale_period must be >= 1")
+        if not (0.0 <= self.hft_threshold <= 1.0):
+            raise ValueError("hft_threshold must be in [0, 1] (book "
+                             "imbalance is normalized)")
+        if self.informed_horizon < 0:
+            raise ValueError("informed_horizon must be >= 0")
+        if self.arb_kappa < 0:
+            raise ValueError("arb_kappa must be >= 0")
 
     # ---- derived population counts (deterministic by agent index) ----
     @property
@@ -116,6 +155,22 @@ class MarketConfig:
         return int(round(self.num_agents * self.alpha_fundamentalist))
 
     @property
+    def num_whales(self) -> int:
+        return int(round(self.num_agents * self.alpha_whale))
+
+    @property
+    def num_hft(self) -> int:
+        return int(round(self.num_agents * self.alpha_hft))
+
+    @property
+    def num_informed(self) -> int:
+        return int(round(self.num_agents * self.alpha_informed))
+
+    @property
+    def num_arbitrageurs(self) -> int:
+        return int(round(self.num_agents * self.alpha_arbitrageur))
+
+    @property
     def mid0(self) -> float:
         return float(self.num_levels // 2)
 
@@ -127,22 +182,34 @@ class MarketConfig:
     def mixture(self) -> Dict[int, float]:
         """Static archetype weights {type_id: fraction}, summing to 1."""
         noise = 1.0 - (self.alpha_maker + self.alpha_momentum
-                       + self.alpha_fundamentalist)
+                       + self.alpha_fundamentalist + self.alpha_whale
+                       + self.alpha_hft + self.alpha_informed
+                       + self.alpha_arbitrageur)
         return {
             NOISE: noise,
             MOMENTUM: self.alpha_momentum,
             MAKER: self.alpha_maker,
             FUNDAMENTALIST: self.alpha_fundamentalist,
+            WHALE: self.alpha_whale,
+            HFT: self.alpha_hft,
+            INFORMED: self.alpha_informed,
+            ARBITRAGEUR: self.alpha_arbitrageur,
         }
 
     def archetype_counts(self) -> Dict[int, int]:
         """Resolved population {type_id: agent count} (sums to num_agents)."""
         nm, nmo, nf = self.num_makers, self.num_momentum, self.num_fundamentalists
+        nw, nh, ni, na = (self.num_whales, self.num_hft, self.num_informed,
+                          self.num_arbitrageurs)
         return {
-            NOISE: self.num_agents - (nm + nmo + nf),
+            NOISE: self.num_agents - (nm + nmo + nf + nw + nh + ni + na),
             MOMENTUM: nmo,
             MAKER: nm,
             FUNDAMENTALIST: nf,
+            WHALE: nw,
+            HFT: nh,
+            INFORMED: ni,
+            ARBITRAGEUR: na,
         }
 
     def agent_types(self, xp) -> "xp.ndarray":
@@ -155,7 +222,8 @@ class MarketConfig:
         """
         return assign_agent_types(
             xp, self.num_agents, self.num_makers, self.num_momentum,
-            self.num_fundamentalists)[0]
+            self.num_fundamentalists, self.num_whales, self.num_hft,
+            self.num_informed, self.num_arbitrageurs)[0]
 
     def initial_books(self, xp) -> Tuple["xp.ndarray", "xp.ndarray"]:
         """(bid, ask) float32[M, L] opening books."""
@@ -171,30 +239,41 @@ class MarketConfig:
 
 
 def assign_agent_types(xp, num_agents: int, num_makers, num_momentum,
-                       num_fundamentalists):
+                       num_fundamentalists, num_whales=0, num_hft=0,
+                       num_informed=0, num_arbitrageurs=0):
     """int32 strategy-class lattice broadcastable to [M, A].
 
     The single live copy of the deterministic assignment rule — makers
-    first, then momentum, then fundamentalists, then noise, by agent
-    index — shared by the scalar :meth:`MarketConfig.agent_types` (scalar
-    counts → one row) and the per-market ``repro.core.params.agent_types``
-    (``[M, 1]`` count columns → ``[M, A]``), so every backend derives the
-    identical population without any device-side state.
+    first, then momentum, then fundamentalists, then whales, HFTs,
+    informed traders, arbitrageurs, then noise, by agent index — shared by
+    the scalar :meth:`MarketConfig.agent_types` (scalar counts → one row)
+    and the per-market ``repro.core.params.agent_types`` (``[M, 1]`` count
+    columns → ``[M, A]``), so every backend derives the identical
+    population without any device-side state. With the new class counts at
+    zero the block boundaries are unchanged, so legacy populations are
+    bitwise-identical to the four-class rule.
     """
     a = xp.arange(num_agents, dtype=xp.int32)[None, :]
-    nm = xp.asarray(num_makers, dtype=xp.int32)
-    nmo = xp.asarray(num_momentum, dtype=xp.int32)
-    nf = xp.asarray(num_fundamentalists, dtype=xp.int32)
-    return xp.where(
-        a < nm,
-        xp.int32(MAKER),
-        xp.where(
-            a < nm + nmo,
-            xp.int32(MOMENTUM),
-            xp.where(a < nm + nmo + nf,
-                     xp.int32(FUNDAMENTALIST), xp.int32(NOISE)),
-        ),
+    blocks = (
+        (MAKER, num_makers),
+        (MOMENTUM, num_momentum),
+        (FUNDAMENTALIST, num_fundamentalists),
+        (WHALE, num_whales),
+        (HFT, num_hft),
+        (INFORMED, num_informed),
+        (ARBITRAGEUR, num_arbitrageurs),
     )
+    # Cumulative upper bounds per block; fold highest-threshold first so
+    # each earlier (smaller) block overrides the later ones.
+    uppers = []
+    cum = xp.asarray(0, dtype=xp.int32)
+    for tid, count in blocks:
+        cum = cum + xp.asarray(count, dtype=xp.int32)
+        uppers.append((tid, cum))
+    out = xp.full_like(a, xp.int32(NOISE))
+    for tid, upper in reversed(uppers):
+        out = xp.where(a < upper, xp.int32(tid), out)
+    return out
 
 
 def seed_books(xp, num_levels: int, quote_qty, spread) -> Tuple:
@@ -256,6 +335,40 @@ def _high_vol(num_steps: int) -> dict:
 @register_scenario("low-vol")
 def _low_vol(num_steps: int) -> dict:
     return {"noise_delta": 2.0, "p_marketable": 0.05}
+
+
+@register_scenario("whale")
+def _whale(num_steps: int) -> dict:
+    # A small population of large infrequent sweepers over a momentum-rich
+    # high-vol base: each whale crosses the spread with `whale_size` lots
+    # every `whale_period` steps and sits out in between.
+    return {"noise_delta": 16.0, "p_marketable": 0.25, "alpha_maker": 0.15,
+            "alpha_momentum": 0.40, "alpha_whale": 0.05,
+            "whale_size": 32.0, "whale_period": 16}
+
+
+@register_scenario("hft")
+def _hft(num_steps: int) -> dict:
+    # Book-imbalance reactive traders: join the heavy side one tick inside
+    # the mid whenever |imbalance| clears the threshold. The population is
+    # small and the trigger strict — larger/looser HFT crowds amplify
+    # one-sided books so hard that volume decouples from volatility and
+    # the stylized-facts gate (repro.scenario.validate) fails.
+    return {"noise_delta": 16.0, "p_marketable": 0.25, "alpha_maker": 0.15,
+            "alpha_momentum": 0.35, "alpha_hft": 0.03,
+            "hft_threshold": 0.5}
+
+
+@register_scenario("informed")
+def _informed(num_steps: int) -> dict:
+    # Informed traders see the flash-crash shock `informed_horizon` steps
+    # early and sell marketably through the pre-shock window. Kept to 5% of
+    # the crowd: a larger informed cohort drags the volume/volatility
+    # correlation negative (see repro.scenario.validate).
+    return {"noise_delta": 16.0, "p_marketable": 0.25, "alpha_maker": 0.15,
+            "alpha_momentum": 0.40, "alpha_informed": 0.05,
+            "shock_step": num_steps // 2, "shock_intensity": 0.3,
+            "informed_horizon": 8}
 
 
 @register_scenario("wide-book")

@@ -32,7 +32,7 @@ from repro.core import session
 from repro.core import stats as stats_mod
 from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
-from repro.core.step import MarketState, simulate_step
+from repro.core.step import MarketState, resolve_peer_mids, simulate_step
 
 
 def _bin_orders_scatter_jax(side_buy, price, qty, M, L):
@@ -83,13 +83,18 @@ class JaxChunkRunner(session.ChunkRunner):
                 zeros_ext = jnp.zeros_like(ext_buy)
                 # Step-invariant type lattice, hoisted out of the scan.
                 atype = params_mod.agent_types(params, spec.num_agents, jnp)
+                # Coupling freeze: one gather over the market axis at chunk
+                # entry — arbitrageurs see the peer's previous-chunk mid.
+                peer_mid = resolve_peer_mids(state.prev_mid,
+                                             params.coupling_peer, jnp)
 
                 def body(carry, s):
                     st, acc = carry
                     eb = jnp.where(s == jnp.int32(0), ext_buy, zeros_ext)
                     ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
                     new_st, out = self._sim_step(st, params, step0 + s,
-                                                 eb, ea, atype=atype)
+                                                 eb, ea, atype=atype,
+                                                 peer_mid=peer_mid)
                     active = s < n_valid
                     st = MarketState(*(jnp.where(active, new, old)
                                        for new, old in zip(new_st, st)))
@@ -109,9 +114,10 @@ class JaxChunkRunner(session.ChunkRunner):
 
             self._chunk_fn = jax.jit(chunk_fn, donate_argnums=(0, 1))
         else:
-            def step_fn(state, params, s, ext_buy, ext_ask):
+            def step_fn(state, params, s, ext_buy, ext_ask, peer_mid):
                 self._trace_count += 1
-                return self._sim_step(state, params, s, ext_buy, ext_ask)
+                return self._sim_step(state, params, s, ext_buy, ext_ask,
+                                      peer_mid=peer_mid)
 
             self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
             # stats_only accumulation between dispatches stays on device.
@@ -121,14 +127,14 @@ class JaxChunkRunner(session.ChunkRunner):
                 donate_argnums=(0,))
 
     def _sim_step(self, state, params, s, ext_buy, ext_ask, atype=None,
-                  seed=None):
+                  seed=None, peer_mid=None):
         """The single ``simulate_step`` entry shared by the Session chunk
         path (both modes) and the RL env's functional core."""
         return simulate_step(
             self.spec, state, s, self._market_ids, jnp,
             bin_orders=self._bin_orders, scan=self._scan,
             ext_buy=ext_buy, ext_ask=ext_ask, params=params, atype=atype,
-            seed=seed,
+            seed=seed, peer_mid=peer_mid,
         )
 
     def env_step_fn(self):
@@ -137,7 +143,9 @@ class JaxChunkRunner(session.ChunkRunner):
         def step_core(market, params, t, ext_buy, ext_ask, seed, aux):
             new_state, out = self._sim_step(
                 market, params, jnp.asarray(t).astype(jnp.int32),
-                ext_buy, ext_ask, seed=seed)
+                ext_buy, ext_ask, seed=seed,
+                peer_mid=resolve_peer_mids(market.prev_mid,
+                                           params.coupling_peer, jnp))
             return new_state, out, aux
 
         return step_core
@@ -163,12 +171,17 @@ class JaxChunkRunner(session.ChunkRunner):
         # Launch-per-step regime: one jitted dispatch per step, outputs
         # materialized on host each step (the deliberate device round-trip).
         zeros = self._zero_ext[0]
+        # Same coupling-freeze boundary as the scan/kernel regimes: the
+        # peer column is gathered once from the chunk-entry state and held
+        # fixed across this chunk's dispatches.
+        peer_mid = resolve_peer_mids(state.prev_mid, params.coupling_peer,
+                                     jnp)
         prices, volumes, mids = [], [], []
         for k in range(n):
             keep = k == 0 and ext is not None
             state, out = self._step_fn(
                 state, params, jnp.int32(step0 + k),
-                eb if keep else zeros, ea if keep else zeros)
+                eb if keep else zeros, ea if keep else zeros, peer_mid)
             if self.stats_only:
                 stats = self._acc_fn(stats, out.mid, out.volume)
             else:

@@ -29,7 +29,8 @@ from repro.core import params as params_mod
 from repro.core import rng, session
 from repro.core import stats as stats_mod
 from repro.core.params import EnsembleSpec, MarketParams
-from repro.core.step import MarketState, simulate_step
+from repro.core.sequential import simulate_step_sequential
+from repro.core.step import MarketState, resolve_peer_mids, simulate_step
 from repro.core.result import SimResult
 
 
@@ -50,15 +51,23 @@ class NumpyChunkRunner(session.ChunkRunner):
     xp = np
 
     def __init__(self, spec: EnsembleSpec, chunk: int, rng_mode: str,
-                 scan: str, stats_only: bool = False):
+                 scan: str, stats_only: bool = False,
+                 clearing: str = "parallel"):
         super().__init__()
         if rng_mode not in ("kinetic", "splitmix64", "pcg64"):
             raise ValueError(f"unknown rng_mode {rng_mode!r}")
+        if clearing not in ("parallel", "sequential"):
+            raise ValueError(f"unknown clearing mode {clearing!r}")
         self.spec = spec
         self.chunk = int(chunk)
         self.rng_mode = rng_mode
         self.scan = scan
         self.stats_only = bool(stats_only)
+        # "sequential" replaces the uniform-price call auction with the
+        # order-by-order immediate-matching reference (repro.core
+        # .sequential) — same decisions, different mechanism — used to
+        # quantify the parallel-vs-sequential clearing gap.
+        self.clearing = clearing
         # Runtime seed overrides rebuild the counter/SplitMix64 stream per
         # step; the sequential PCG64 stream is fixed at init.
         self.env_runtime_seed = rng_mode != "pcg64"
@@ -69,6 +78,8 @@ class NumpyChunkRunner(session.ChunkRunner):
     def env_step_fn(self):
         """Host-loop per-step core for :class:`repro.env.MarketEnv` (not
         traceable — the env's rollout falls back to a python loop)."""
+        if self.clearing == "sequential":
+            return None  # reference mechanism: Session/simulate surface only
         spec = self.spec
         # The type lattice is step-invariant and EnvState threads the same
         # params object through every step of a rollout: a one-slot
@@ -86,6 +97,8 @@ class NumpyChunkRunner(session.ChunkRunner):
                 uniform_fn=self._uniform_fn(aux, seed=seed),
                 ext_buy=ext_buy, ext_ask=ext_ask, params=params, seed=seed,
                 atype=atype_memo[1],
+                peer_mid=resolve_peer_mids(market.prev_mid,
+                                           params.coupling_peer, np),
             )
             return new_state, out, aux
 
@@ -131,17 +144,34 @@ class NumpyChunkRunner(session.ChunkRunner):
         # The type lattice is step-invariant: build it once per chunk, not
         # once per step of the host loop.
         atype = params_mod.agent_types(params, spec.num_agents, np)
+        # Coupling freeze: arbitrageurs see the peer's mid as of the chunk
+        # boundary (same freeze points as every compiled backend).
+        peer_mid = resolve_peer_mids(state.prev_mid, params.coupling_peer, np)
         width = 0 if self.stats_only else n
         pp = np.zeros((M, width), dtype=np.float32)
         vp = np.zeros((M, width), dtype=np.float32)
         mp = np.zeros((M, width), dtype=np.float32)
         for k in range(n):
             eb, ea = ext if (k == 0 and ext is not None) else (None, None)
-            state, out = simulate_step(
-                spec, state, np.int32(step0 + k), self._market_ids, np,
-                bin_orders=self._bin, scan=self.scan, uniform_fn=uniform_fn,
-                ext_buy=eb, ext_ask=ea, params=params, atype=atype,
-            )
+            if self.clearing == "sequential":
+                if eb is not None or ea is not None:
+                    raise ValueError(
+                        "sequential clearing is a reference mechanism "
+                        "without external-order injection; use the "
+                        "parallel-clearing backends for session stepping")
+                state, out = simulate_step_sequential(
+                    spec, state, np.int32(step0 + k), self._market_ids, np,
+                    uniform_fn=uniform_fn, params=params, atype=atype,
+                    peer_mid=peer_mid,
+                )
+            else:
+                state, out = simulate_step(
+                    spec, state, np.int32(step0 + k), self._market_ids, np,
+                    bin_orders=self._bin, scan=self.scan,
+                    uniform_fn=uniform_fn,
+                    ext_buy=eb, ext_ask=ea, params=params, atype=atype,
+                    peer_mid=peer_mid,
+                )
             if self.stats_only:
                 stats = stats_mod.accumulate(stats, out.mid, out.volume,
                                              True, np)
@@ -156,11 +186,12 @@ class NumpyChunkRunner(session.ChunkRunner):
 def open_chunk_runner(spec, chunk: int,
                       rng_mode: str = "kinetic",
                       scan: str = "cumsum",
-                      stats_only: bool = False) -> NumpyChunkRunner:
+                      stats_only: bool = False,
+                      clearing: str = "parallel") -> NumpyChunkRunner:
     """Session factory for the CPU reference backend."""
     return NumpyChunkRunner(EnsembleSpec.coerce(spec), chunk,
                             rng_mode=rng_mode, scan=scan,
-                            stats_only=stats_only)
+                            stats_only=stats_only, clearing=clearing)
 
 
 def simulate(cfg, rng_mode: str = "kinetic",

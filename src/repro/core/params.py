@@ -68,6 +68,16 @@ class MarketParams(NamedTuple):
     num_makers: Any           # int32[M, 1] leading agents assigned MAKER
     num_momentum: Any         # int32[M, 1] next block assigned MOMENTUM
     num_fundamentalists: Any  # int32[M, 1] next block assigned FUNDAMENTALIST
+    num_whales: Any           # int32[M, 1] next block assigned WHALE
+    num_hft: Any              # int32[M, 1] next block assigned HFT
+    num_informed: Any         # int32[M, 1] next block assigned INFORMED
+    num_arbitrageurs: Any     # int32[M, 1] next block assigned ARBITRAGEUR
+    whale_size: Any           # f32[M, 1] lots per whale sweep (integer-valued)
+    whale_period: Any         # int32[M, 1] steps between whale sweeps (>= 1)
+    hft_threshold: Any        # f32[M, 1] |book imbalance| HFT trigger
+    informed_horizon: Any     # int32[M, 1] steps of early shock knowledge
+    arb_kappa: Any            # f32[M, 1] arbitrageur gap-chasing strength
+    coupling_peer: Any        # int32[M, 1] peer market feeding arbs (<0: self)
 
     def to_numpy(self) -> "MarketParams":
         return MarketParams(*(np.asarray(x) for x in self))
@@ -95,9 +105,49 @@ class MarketParams(NamedTuple):
                      for f in cls._fields))
 
 
-#: MarketParams leaves carried as int32 (counts and the step coordinate).
+#: MarketParams leaves carried as int32 (counts and step/index coordinates).
 _INT_FIELDS = ("shock_step", "num_makers", "num_momentum",
-               "num_fundamentalists")
+               "num_fundamentalists", "num_whales", "num_hft",
+               "num_informed", "num_arbitrageurs", "whale_period",
+               "informed_horizon", "coupling_peer")
+
+#: Inert per-field values: the value each leaf takes when its archetype is
+#: absent (counts 0, self-coupling) — the back-compat fill for snapshots
+#: and journals recorded before a field existed, and the parked-slot rows.
+#: ``fundamental`` is shape-dependent (grid midpoint) and handled by
+#: callers explicitly.
+INERT_PARAM_VALUES: Dict[str, float] = {
+    "shock_step": -1, "shock_intensity": 0.0, "shock_cancel": 0.0,
+    "p_marketable": 0.0, "q_max": 1.0, "noise_delta": 0.0,
+    "maker_half_spread": 0.0, "fundamentalist_kappa": 0.0,
+    "num_makers": 0, "num_momentum": 0, "num_fundamentalists": 0,
+    "num_whales": 0, "num_hft": 0, "num_informed": 0,
+    "num_arbitrageurs": 0, "whale_size": 1.0, "whale_period": 1,
+    "hft_threshold": 0.0, "informed_horizon": 0, "arb_kappa": 0.0,
+    "coupling_peer": -1,
+}
+
+
+def params_from_dict(values: Dict[str, Any], num_markets: int,
+                     num_levels: int) -> MarketParams:
+    """Rebuild host params from a ``{field: array}`` mapping (snapshot /
+    journal payloads), default-filling fields the payload predates.
+
+    Older payloads are valid ensembles whose missing leaves were
+    definitionally inert (the archetype/coupling did not exist when they
+    were written), so the fill is value-invisible by construction.
+    """
+    M = int(num_markets)
+    leaves = []
+    for f in MarketParams._fields:
+        if f in values:
+            leaves.append(np.asarray(values[f],
+                                     dtype=MarketParams.field_dtype(f)))
+        else:
+            fill = (float(num_levels // 2) if f == "fundamental"
+                    else INERT_PARAM_VALUES[f])
+            leaves.append(np.full((M, 1), fill, MarketParams.field_dtype(f)))
+    return MarketParams(*leaves)
 
 
 def replace_rows(params: MarketParams, slots, rows: MarketParams,
@@ -144,6 +194,18 @@ def _config_values(cfg: MarketConfig) -> Dict[str, float]:
         "num_makers": cfg.num_makers,
         "num_momentum": cfg.num_momentum,
         "num_fundamentalists": cfg.num_fundamentalists,
+        "num_whales": cfg.num_whales,
+        "num_hft": cfg.num_hft,
+        "num_informed": cfg.num_informed,
+        "num_arbitrageurs": cfg.num_arbitrageurs,
+        "whale_size": cfg.whale_size,
+        "whale_period": cfg.whale_period,
+        "hft_threshold": cfg.hft_threshold,
+        "informed_horizon": cfg.informed_horizon,
+        "arb_kappa": cfg.arb_kappa,
+        # Peer wiring is an ensemble-level concern (repro.scenario
+        # .CouplingSpec); a plain config always self-couples.
+        "coupling_peer": -1,
     }
 
 
@@ -176,7 +238,9 @@ def agent_types(params: MarketParams, num_agents: int, xp):
     """
     return assign_agent_types(xp, num_agents, params.num_makers,
                               params.num_momentum,
-                              params.num_fundamentalists)
+                              params.num_fundamentalists,
+                              params.num_whales, params.num_hft,
+                              params.num_informed, params.num_arbitrageurs)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +496,17 @@ class EnsembleSpec:
             if arr.shape != (M, 1):
                 raise ValueError(
                     f"params.{f} must have shape ({M}, 1), got {arr.shape}")
+            # Eager finiteness gate: NaN/inf must never reach a kernel —
+            # NaN in particular sails through every range check below
+            # (all comparisons are False) and would silently poison the
+            # whole trajectory. Name the offending field and markets.
+            bad = ~np.isfinite(arr.astype(np.float64))
+            if bad.any():
+                rows = np.where(bad[:, 0])[0]
+                raise ValueError(
+                    f"params.{f} contains non-finite values "
+                    f"(nan/inf) in markets {rows[:8].tolist()}; "
+                    "parameter operands must be finite")
         for name in ("initial_quote_qty", "initial_spread"):
             arr = np.asarray(getattr(self, name))
             if arr.shape != (M,):
@@ -467,15 +542,48 @@ class EnsembleSpec:
                 f"negative-means-midpoint sentinel is applied at build time; "
                 f"use num_levels // 2 = {L // 2} for the grid midpoint); "
                 f"markets {bad[:8].tolist()} violate it")
-        assigned = p.num_makers + p.num_momentum + p.num_fundamentalists
+        assigned = (p.num_makers + p.num_momentum + p.num_fundamentalists
+                    + p.num_whales + p.num_hft + p.num_informed
+                    + p.num_arbitrageurs)
         if (assigned > A).any():
             bad = np.where((assigned > A)[:, 0])[0]
             raise ValueError(
                 f"agent mixture assigns more than num_agents={A} agents in "
                 f"markets {bad[:8].tolist()}")
         if ((p.num_makers < 0) | (p.num_momentum < 0)
-                | (p.num_fundamentalists < 0)).any():
+                | (p.num_fundamentalists < 0) | (p.num_whales < 0)
+                | (p.num_hft < 0) | (p.num_informed < 0)
+                | (p.num_arbitrageurs < 0)).any():
             raise ValueError("archetype counts must be >= 0")
+        if ((p.whale_size < 1.0)
+                | (p.whale_size != np.floor(p.whale_size))).any():
+            bad = np.where(((p.whale_size < 1.0)
+                            | (p.whale_size != np.floor(p.whale_size)))[:, 0])[0]
+            raise ValueError(
+                f"whale_size must be an integer-valued lot count >= 1 "
+                f"(exact in f32); markets {bad[:8].tolist()} violate it")
+        if (p.whale_period < 1).any():
+            bad = np.where((p.whale_period < 1)[:, 0])[0]
+            raise ValueError(
+                f"whale_period must be >= 1; markets {bad[:8].tolist()} "
+                "violate it")
+        if ((p.hft_threshold < 0.0) | (p.hft_threshold > 1.0)).any():
+            bad = np.where(((p.hft_threshold < 0.0)
+                            | (p.hft_threshold > 1.0))[:, 0])[0]
+            raise ValueError(
+                f"hft_threshold must be in [0, 1] (book imbalance is "
+                f"normalized); markets {bad[:8].tolist()} violate it")
+        if (p.informed_horizon < 0).any():
+            raise ValueError("informed_horizon must be >= 0")
+        if (p.arb_kappa < 0.0).any():
+            raise ValueError("arb_kappa must be >= 0")
+        # Coupling peers index the *global* market axis; -1 self-couples.
+        if ((p.coupling_peer < -1) | (p.coupling_peer >= M)).any():
+            bad = np.where(((p.coupling_peer < -1)
+                            | (p.coupling_peer >= M))[:, 0])[0]
+            raise ValueError(
+                f"coupling_peer must be -1 (self) or a market index in "
+                f"[0, {M}); markets {bad[:8].tolist()} violate it")
         # Horizon semantics (see Session.stream): every scenario event must
         # lie inside [0, num_steps) — a shock placed at or past the horizon
         # would silently never fire in a default-length run.
@@ -505,12 +613,8 @@ class EnsembleSpec:
         extra trace, host sync, or any effect on other rows.
         """
         M = like.num_markets if num_markets is None else int(num_markets)
-        values = dict(
-            shock_step=-1, shock_intensity=0.0, shock_cancel=0.0,
-            p_marketable=0.0, q_max=1.0, noise_delta=0.0,
-            maker_half_spread=0.0, fundamental=float(like.num_levels // 2),
-            fundamentalist_kappa=0.0, num_makers=0, num_momentum=0,
-            num_fundamentalists=0)
+        values = dict(INERT_PARAM_VALUES,
+                      fundamental=float(like.num_levels // 2))
         return cls(
             num_markets=M, num_agents=like.num_agents,
             num_levels=like.num_levels, num_steps=like.num_steps,

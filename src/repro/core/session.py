@@ -71,6 +71,7 @@ from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple, U
 
 import numpy as np
 
+from repro.core import params as params_mod
 from repro.core.config import MarketConfig
 from repro.core.params import EnsembleSpec, MarketParams
 from repro.core.result import SimResult
@@ -573,14 +574,16 @@ class Session:
             if n < 0:
                 raise ValueError(f"n_steps must be >= 0, got {n}")
             return n
-        if self._t >= self.spec.num_steps:
+        remaining = self.spec.num_steps - self._t
+        if remaining <= 0:
             raise ValueError(
-                f"session cursor is at step {self._t}, already past the "
-                f"configured horizon num_steps={self.spec.num_steps}: "
-                "run()/stream() with no argument means 'run the configured "
-                "horizon', and every scenario event lies inside it — pass "
-                "an explicit n_steps to advance past the horizon")
-        return self.spec.num_steps - self._t
+                f"session cursor is at step {self._t} with "
+                f"{max(remaining, 0)} steps remaining of the configured "
+                f"horizon num_steps={self.spec.num_steps}: run()/stream() "
+                "with no argument means 'run the remaining horizon', and "
+                "every scenario event lies inside it — pass an explicit "
+                "n_steps to advance past the horizon")
+        return remaining
 
     def stream(self, n_steps: Optional[int] = None) -> Iterator[StepBatch]:
         """Advance ``n_steps`` steps, yielding one :class:`StepBatch` per
@@ -856,7 +859,11 @@ class Session:
                     f"(session has num_markets={M}, num_levels={L}); open "
                     f"the session on a spec matching the snapshot")
         if snap.get("params") is not None:
+            # Older snapshots predate some fields (filled inert below) —
+            # only shape-check the leaves the payload actually carries.
             for pname in MarketParams._fields:
+                if pname not in snap["params"]:
+                    continue
                 arr = np.asarray(snap["params"][pname])
                 if tuple(arr.shape) != (M, 1):
                     raise CheckpointShapeError(
@@ -870,8 +877,7 @@ class Session:
         new_spec, new_params = self.spec, self._params
         params = snap.get("params")
         if params is not None:
-            host = MarketParams(*(np.asarray(params[f])
-                                  for f in MarketParams._fields))
+            host = params_mod.params_from_dict(params, M, L)
             labels = snap.get("scenarios")
             if labels is not None:  # run-length encoded [name, count] pairs
                 labels = tuple(itertools.chain.from_iterable(

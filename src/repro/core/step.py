@@ -111,6 +111,30 @@ def apply_scenario_shock(params: MarketParams, bid, step_idx, xp):
     return xp.where(at_shock, bid - cancelled, bid)
 
 
+def resolve_peer_mids(prev_mid, coupling_peer, xp, market_ids=None):
+    """Gather each market's coupled peer mid over the market axis.
+
+    ``prev_mid`` is the full ``[M, 1]`` (global-axis) mid column at a chunk
+    boundary; ``coupling_peer`` holds global peer indices with ``< 0``
+    meaning self. ``market_ids`` supplies each row's own global index
+    (defaults to ``arange(M)`` — correct whenever ``prev_mid`` spans the
+    whole ensemble). Chunk drivers call this once per chunk on the entry
+    state, so the value arbitrageurs see is the peer's *previous-chunk*
+    mid — frozen at identical boundaries on every backend, which is what
+    makes the coupled trajectories bitwise-comparable. The sharded runner
+    reconstructs the full column first via a ring halo exchange
+    (``lax.ppermute``) and then applies this same gather shard-locally.
+    """
+    prev_mid = xp.asarray(prev_mid, dtype=xp.float32)
+    peer = xp.reshape(xp.asarray(coupling_peer, dtype=xp.int32), (-1, 1))
+    if market_ids is None:
+        own = xp.arange(prev_mid.shape[0], dtype=xp.int32)[:, None]
+    else:
+        own = xp.reshape(xp.asarray(market_ids, dtype=xp.int32), (-1, 1))
+    resolved = xp.where(peer < xp.int32(0), own, peer)
+    return xp.take_along_axis(prev_mid, resolved, axis=0)
+
+
 def simulate_step(
     cfg,
     state: MarketState,
@@ -126,6 +150,7 @@ def simulate_step(
     params: Optional[MarketParams] = None,
     atype=None,
     seed=None,
+    peer_mid=None,
 ):
     """Advance all markets one step. Returns (MarketState, StepOutput).
 
@@ -150,6 +175,14 @@ def simulate_step(
     ``seed`` optionally overrides the counter-RNG seed at runtime (traced
     ok — see :func:`repro.core.agents.decide`); ``None`` keeps the
     trace-static ``cfg.seed`` bitwise-unchanged.
+
+    ``peer_mid`` (optional float32[M, 1]) is the coupled peer market's
+    *frozen* mid feeding arbitrageur agents — chunk drivers compute it once
+    per chunk from the entry ``prev_mid`` (see
+    :func:`resolve_peer_mids`) so every backend freezes coupling at the
+    same boundaries. ``None`` falls back to ``state.prev_mid``
+    (self-coupling, per step) — value-identical whenever no arbitrageurs
+    are populated, which is every legacy call site.
     """
     if params is None:
         # Built with xp, not host numpy: Pallas kernel bodies reject
@@ -169,11 +202,22 @@ def simulate_step(
     # Phase 2: microstructure state estimation (paper Alg.1 lines 5-7)
     _, _, mid = auction.best_quotes(resting_bid, state.ask, state.last_price, xp)
 
+    # Resting-book imbalance for the HFT archetype: exact-integer f32 sums
+    # (book mass stays far below 2^24), one IEEE division — deterministic
+    # and bitwise-identical across backends, chunkings, and shardings.
+    sum_bid = xp.sum(resting_bid, axis=-1, keepdims=True)
+    sum_ask = xp.sum(state.ask, axis=-1, keepdims=True)
+    depth = sum_bid + sum_ask
+    safe_depth = xp.where(depth > f32(0.0), depth, f32(1.0))  # no 0/0 (numpy)
+    imbalance = xp.where(depth > f32(0.0), (sum_bid - sum_ask) / safe_depth,
+                         xp.zeros_like(depth))
+
     # Phase 3: agent decisions + order aggregation (lines 8-13)
     agent_ids = xp.arange(cfg.num_agents, dtype=xp.int32)
     side_buy, price, qty = agents.decide(
         cfg, params, mid, state.prev_mid, step_idx, market_ids, agent_ids, xp,
         uniform_fn=uniform_fn, atype=atype, seed=seed,
+        imbalance=imbalance, peer_mid=peer_mid,
     )
     buy, sell = bin_orders(side_buy, price, qty)
 

@@ -71,7 +71,7 @@ from repro.core import params as params_mod
 from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.params import EnsembleSpec, MarketParams
-from repro.core.step import MarketState, simulate_step
+from repro.core.step import MarketState, resolve_peer_mids, simulate_step
 from repro.kernels.autotune import pad_to_multiple
 
 #: Number of per-market parameter operands threaded into the chunk kernels.
@@ -172,6 +172,7 @@ def _pad_rows(x, m_padded: int):
 def _chunk_kernel_body(
     step0_ref, nvalid_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
+    peer_ref,
     *refs,
     cfg, mb: int, chunk: int, scan: str,
     agent_chunk: Optional[int], stats_only: bool,
@@ -185,6 +186,11 @@ def _chunk_kernel_body(
     advances exactly ``n_valid`` steps without retracing. External orders
     (``ext_buy``/``ext_ask``, the RL stepping hook's reserved slot) are
     injected at the first local step only; zero arrays are bitwise no-ops.
+
+    ``peer_ref`` is the coupling column: each row's *peer mid*, gathered by
+    the chunk entry from the chunk-entry ``prev_mid`` (or by the sharded
+    caller via the ring halo exchange) and held fixed for all ``chunk``
+    steps — the freeze boundary every backend shares.
 
     ``mids_ref`` carries the per-row *global* market ids (sharded callers
     pass each device's true coordinates). The first ``NUM_PARAM_OPERANDS``
@@ -218,6 +224,7 @@ def _chunk_kernel_body(
     ext_b = ext_buy_ref[...]
     ext_a = ext_ask_ref[...]
     zeros_ext = jnp.zeros_like(ext_b)
+    peer_mid = peer_ref[...]
 
     market_ids = mids_ref[...]
     # Step-invariant type lattice, hoisted out of the fori_loop.
@@ -230,7 +237,7 @@ def _chunk_kernel_body(
         new_state, out = simulate_step(
             cfg, state, step0 + s, market_ids, jnp, bin_orders=None,
             scan=scan, ext_buy=eb, ext_ask=ea, agent_chunk=agent_chunk,
-            params=params, atype=atype,
+            params=params, atype=atype, peer_mid=peer_mid,
         )
         # Steps past n_valid are computed but discarded — the carried state
         # only advances while active.
@@ -294,6 +301,7 @@ def kinetic_clearing_chunk(
     interpret: bool = False, market_ids: Optional[jax.Array] = None,
     agent_chunk: Optional[int] = None,
     params: Optional[MarketParams] = None,
+    peer_mid: Optional[jax.Array] = None,
     stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """``num_steps``-parametrized persistent entry for the Session API.
@@ -314,6 +322,14 @@ def kinetic_clearing_chunk(
     ``market_ids`` (optional int32[M] / [M, 1]) carries each row's global
     coordinate for sharded callers; it defaults to ``arange(M)``.
 
+    ``peer_mid`` (optional f32[M, 1]) is the chunk-frozen coupling column
+    for arbitrageur agents. When ``None`` it is gathered here from the
+    entry ``pmid`` at ``params.coupling_peer`` (self when < 0) over
+    *local* row indices — correct whenever all rows are on one device.
+    Sharded callers must pass the column explicitly (see the ring halo
+    exchange in :mod:`repro.kernels.ops`), since a cross-shard peer is not
+    addressable by a local gather.
+
     Returns ``(bid, ask, last, pmid, price_path[M, chunk],
     volume_path[M, chunk], mid_path[M, chunk])``, or with
     ``stats_only=True`` (which requires the carried ``stats`` accumulators)
@@ -331,10 +347,15 @@ def kinetic_clearing_chunk(
     if m_padded != M:
         pad_ids = jnp.arange(M, m_padded, dtype=jnp.int32)[:, None]
         mids = jnp.concatenate([mids, pad_ids], axis=0)
-    bid, ask, last, pmid, ext_buy, ext_ask = (
+    params = resolve_params(cfg, M, params, jnp)
+    if peer_mid is None:
+        # Single-device default: gather the chunk-entry mids at the peer
+        # rows (local indices == global ids here).
+        peer_mid = resolve_peer_mids(pmid, params.coupling_peer, jnp)
+    bid, ask, last, pmid, ext_buy, ext_ask, peer_mid = (
         _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
-                                         ext_ask))
-    params = pad_params(resolve_params(cfg, M, params, jnp), m_padded)
+                                         ext_ask, peer_mid))
+    params = pad_params(params, m_padded)
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
@@ -354,10 +375,10 @@ def kinetic_clearing_chunk(
         jax.ShapeDtypeStruct((m_padded, 1), jnp.float32),
     )
     in_specs = [step_spec, step_spec, scalar_spec, book_spec, book_spec,
-                scalar_spec, scalar_spec, book_spec, book_spec] \
-        + [scalar_spec] * NUM_PARAM_OPERANDS
+                scalar_spec, scalar_spec, book_spec, book_spec,
+                scalar_spec] + [scalar_spec] * NUM_PARAM_OPERANDS
     operands = [step0, n_valid, mids, bid, ask, last, pmid, ext_buy,
-                ext_ask] + list(params)
+                ext_ask, peer_mid] + list(params)
 
     if stats_only:
         if stats is None:

@@ -39,7 +39,7 @@ from jax.experimental import pallas as pl
 from repro.core import stats as stats_mod
 from repro.core.config import MarketConfig
 from repro.core.params import MarketParams
-from repro.core.step import MarketState, simulate_step
+from repro.core.step import MarketState, resolve_peer_mids, simulate_step
 from repro.kernels.autotune import pad_to_multiple
 from repro.kernels.kinetic_clearing import (NUM_PARAM_OPERANDS, _pad_rows,
                                             pad_params, pick_tile,
@@ -122,15 +122,18 @@ def naive_clearing(
 def _chunk_step_kernel_body(
     step_ref, mids_ref,
     bid_ref, ask_ref, last_ref, pmid_ref, ext_buy_ref, ext_ask_ref,
+    peer_ref,
     *refs,
     cfg, mb: int, scan: str, agent_chunk: Optional[int],
 ):
     """Per-step kernel with external-order inputs (Session API variant).
 
     ``mids_ref`` carries the per-row global market ids (see the kinetic
-    chunk kernel) so padded/sharded callers keep exact RNG coordinates; the
-    next ``NUM_PARAM_OPERANDS`` refs are this tile's per-market
-    :class:`MarketParams` columns.
+    chunk kernel) so padded/sharded callers keep exact RNG coordinates;
+    ``peer_ref`` is the chunk-frozen coupling column (gathered once per
+    chunk by the entry, NOT per launch — same freeze boundary as the
+    persistent kernel); the next ``NUM_PARAM_OPERANDS`` refs are this
+    tile's per-market :class:`MarketParams` columns.
     """
     s = step_ref[0, 0]
     market_ids = mids_ref[...]
@@ -144,7 +147,7 @@ def _chunk_step_kernel_body(
     new_state, out = simulate_step(
         cfg, state, s, market_ids, jnp, scan=scan,
         ext_buy=ext_buy_ref[...], ext_ask=ext_ask_ref[...],
-        agent_chunk=agent_chunk, params=params,
+        agent_chunk=agent_chunk, params=params, peer_mid=peer_ref[...],
     )
     out_bid_ref[...] = new_state.bid
     out_ask_ref[...] = new_state.ask
@@ -163,6 +166,7 @@ def naive_clearing_chunk(
     interpret: bool = False, market_ids: Optional[jax.Array] = None,
     agent_chunk: Optional[int] = None,
     params: Optional[MarketParams] = None,
+    peer_mid: Optional[jax.Array] = None,
     stats: Optional[stats_mod.MarketStats] = None, stats_only: bool = False,
 ) -> Tuple[jax.Array, ...]:
     """Session entry for the launch-per-step regime: ``chunk`` kernel
@@ -187,10 +191,15 @@ def naive_clearing_chunk(
     if m_padded != M:
         pad_ids = jnp.arange(M, m_padded, dtype=jnp.int32)[:, None]
         mids = jnp.concatenate([mids, pad_ids], axis=0)
-    bid, ask, last, pmid, ext_buy, ext_ask = (
+    params = resolve_params(cfg, M, params, jnp)
+    if peer_mid is None:
+        # Chunk-entry coupling freeze over local rows (single-device case);
+        # sharded callers pass the halo-exchanged column explicitly.
+        peer_mid = resolve_peer_mids(pmid, params.coupling_peer, jnp)
+    bid, ask, last, pmid, ext_buy, ext_ask, peer_mid = (
         _pad_rows(x, m_padded) for x in (bid, ask, last, pmid, ext_buy,
-                                         ext_ask))
-    params = pad_params(resolve_params(cfg, M, params, jnp), m_padded)
+                                         ext_ask, peer_mid))
+    params = pad_params(params, m_padded)
 
     book_spec = pl.BlockSpec((mb, L), lambda i: (i, 0))
     scalar_spec = pl.BlockSpec((mb, 1), lambda i: (i, 0))
@@ -210,7 +219,7 @@ def naive_clearing_chunk(
                           agent_chunk=agent_chunk),
         grid=grid,
         in_specs=[step_spec, scalar_spec, book_spec, book_spec, scalar_spec,
-                  scalar_spec, book_spec, book_spec]
+                  scalar_spec, book_spec, book_spec, scalar_spec]
         + [scalar_spec] * NUM_PARAM_OPERANDS,
         out_specs=(book_spec, book_spec, scalar_spec, scalar_spec,
                    scalar_spec, scalar_spec, scalar_spec),
@@ -240,7 +249,7 @@ def naive_clearing_chunk(
         ea = jnp.where(s == jnp.int32(0), ext_ask, zeros_ext)
         step_arr = jnp.full((1, 1), step0_s + s, dtype=jnp.int32)
         nbid, nask, nlast, npmid, price, volume, mid = step_call(
-            step_arr, mids, bid, ask, last, pmid, eb, ea, *params
+            step_arr, mids, bid, ask, last, pmid, eb, ea, peer_mid, *params
         )
         active = s < n_valid_s
         bid = jnp.where(active, nbid, bid)

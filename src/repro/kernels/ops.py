@@ -172,15 +172,39 @@ class PallasChunkRunner(session.ChunkRunner):
             return pure_chunk
 
         mesh_ = self._mesh
+        n_shards = self._n_shards
         m_shard = tune.pad_to_multiple(-(-M // self._n_shards), self.tile.mb)
         m_padded = self._n_shards * m_shard
+        ring = [(i, (i + 1) % n_shards) for i in range(n_shards)]
 
         def shard_body(step0, n_valid, mids, bid, ask, last, pmid,
                        ext_buy, ext_ask, params, stats):
+            # Coupling halo exchange: a cross-market peer may live on
+            # another shard, so the chunk-entry mids circulate the ring
+            # once (`ppermute` all-gather) before the local gather. The
+            # global padding sits at the END of the market axis, so a
+            # real row's global id IS its row index in `full` — the
+            # gathered column is bitwise what the single-device entry
+            # computes, which is what makes coupled sharded runs
+            # bitwise-identical (and `peer < 0` resolves to the row's own
+            # global id, i.e. self-coupling).
+            idx = jax.lax.axis_index("markets")
+            full = jnp.zeros((m_padded, 1), pmid.dtype)
+            cur = pmid
+            for k in range(n_shards):
+                src = (idx - k) % n_shards
+                full = jax.lax.dynamic_update_slice(full, cur,
+                                                    (src * m_shard, 0))
+                if k + 1 < n_shards:
+                    cur = jax.lax.ppermute(cur, "markets", ring)
+            peer = jnp.reshape(
+                jnp.asarray(params.coupling_peer, jnp.int32), (-1, 1))
+            resolved = jnp.where(peer < jnp.int32(0), mids, peer)
+            peer_mid = jnp.take_along_axis(full, resolved, axis=0)
             return kernel_chunk_fn(
                 bid, ask, last, pmid, step0, n_valid, ext_buy, ext_ask,
-                market_ids=mids, params=params, stats=stats,
-                **kernel_kwargs)
+                market_ids=mids, params=params, peer_mid=peer_mid,
+                stats=stats, **kernel_kwargs)
 
         row_params = MarketParams(*(P("markets", None),)
                                   * len(MarketParams._fields))

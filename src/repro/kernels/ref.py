@@ -41,3 +41,36 @@ def simulate_reference(cfg: MarketConfig, scan: str = "cumsum") -> SimResult:
     )
     return SimResult(bid=bid, ask=ask, last_price=last, prev_mid=pmid,
                      price_path=pp, volume_path=vp)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _run_sequential(bid, ask, last, pmid, *, cfg: MarketConfig):
+    from repro.core.sequential import simulate_step_sequential
+    from repro.core.step import MarketState
+
+    market_ids = jnp.arange(cfg.num_markets, dtype=jnp.int32)[:, None]
+
+    def step(state, s):
+        new_state, out = simulate_step_sequential(
+            cfg, state, s, market_ids, jnp)
+        return new_state, (out.price[:, 0], out.volume[:, 0])
+
+    state0 = MarketState(bid=bid, ask=ask, last_price=last, prev_mid=pmid)
+    steps = jnp.arange(cfg.num_steps, dtype=jnp.int32)
+    final, (pp, vp) = jax.lax.scan(step, state0, steps)
+    return final.bid, final.ask, final.last_price, final.prev_mid, pp.T, vp.T
+
+
+def simulate_reference_sequential(cfg: MarketConfig) -> SimResult:
+    """Jitted sequential-clearing reference (Steinbacher et al.): identical
+    agent decisions, order-by-order immediate matching instead of the
+    uniform-price call auction. Bitwise-identical to the NumPy host loop
+    with ``clearing="sequential"`` — see :mod:`repro.core.sequential` —
+    so the parallel-vs-sequential mechanism gap is attributable to the
+    clearing rule alone, not to the driver."""
+    state = initial_state(cfg, jnp)
+    bid, ask, last, pmid, pp, vp = _run_sequential(
+        state.bid, state.ask, state.last_price, state.prev_mid, cfg=cfg,
+    )
+    return SimResult(bid=bid, ask=ask, last_price=last, prev_mid=pmid,
+                     price_path=pp, volume_path=vp)

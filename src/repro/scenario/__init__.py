@@ -1,0 +1,47 @@
+"""Coupled multi-asset scenarios over the KineticSim engine.
+
+The scenario layer composes the core engine's primitives into studies:
+
+  * :mod:`repro.scenario.coupling` — :class:`CouplingSpec`, the
+    cross-market arbitrage graph lowered onto the ``coupling_peer``
+    params column (gather on one device, ``ppermute`` ring halo exchange
+    when the market axis is sharded).
+  * :mod:`repro.scenario.validate` — the stylized-facts validation gate:
+    typed :class:`FactCheck` / :class:`ValidationReport` results over the
+    pinned CI mixtures.
+  * :mod:`repro.scenario.sequential` — the sequential-clearing reference
+    (Steinbacher et al.) and the parallel-vs-sequential mechanism-gap
+    report.
+
+Everything here is values over the warm engine: applying a coupling,
+swapping a mixture, or validating a scenario never retraces a compiled
+executable.
+"""
+from repro.scenario.coupling import CouplingSpec, coupled_ensemble
+from repro.scenario.sequential import (
+    mechanism_gap,
+    simulate_reference_sequential,
+    simulate_step_sequential,
+)
+from repro.scenario.validate import (
+    PINNED_MIXTURES,
+    FactCheck,
+    ValidationReport,
+    stylized_facts,
+    validate_pinned,
+    validate_spec,
+)
+
+__all__ = [
+    "CouplingSpec",
+    "coupled_ensemble",
+    "mechanism_gap",
+    "simulate_reference_sequential",
+    "simulate_step_sequential",
+    "PINNED_MIXTURES",
+    "FactCheck",
+    "ValidationReport",
+    "stylized_facts",
+    "validate_pinned",
+    "validate_spec",
+]
